@@ -1,0 +1,20 @@
+"""MaskSearch core — the paper's contribution as a composable JAX module.
+
+Public surface:
+  * :mod:`repro.core.cp`      — the CP primitive (exact paths).
+  * :mod:`repro.core.chi`     — Cumulative Histogram Index build + bounds.
+  * :mod:`repro.core.store`   — tiered MasksDatabaseView storage.
+  * :mod:`repro.core.exprs`   — CP expressions with interval semantics.
+  * :mod:`repro.core.engine`  — filter–verification execution framework.
+  * :mod:`repro.core.queries` — SQL-ish front-end (demo "Query Command").
+  * :mod:`repro.core.distributed` — shard_map multi-device query engine.
+  * :mod:`repro.core.saliency`/:mod:`repro.core.augment` — the ML-workflow
+    integration (mask harvesting + Scenario-1 augmentation).
+"""
+
+from .chi import CHIConfig, build_chi, build_chi_np, chi_bounds  # noqa: F401
+from .cp import cp_exact, cp_exact_np, full_roi  # noqa: F401
+from .engine import ExecStats, filter_query, scalar_agg, topk_query  # noqa: F401
+from .exprs import CP, AggCP, BinOp, Const, RoiArea  # noqa: F401
+from .queries import parse, run  # noqa: F401
+from .store import MASK_META_DTYPE, IOStats, MaskStore  # noqa: F401

@@ -1,0 +1,47 @@
+"""Scenario-1 dataset augmentation (demo §4, Step 3).
+
+After a Top-K/Filter query retrieves images where the model attends outside
+the object bounding box, the demo's "Start Augment" button randomizes pixels
+*outside* the ROI (keeping labels) so the retrained model cannot rely on
+background correlations.  This is that button, as a library call wired into
+the data pipeline (see examples/scenario1_debugging.py for the full
+train → query → augment → retrain loop).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .cp import _roi_mask
+
+Array = jax.Array
+
+
+def randomize_outside_roi(rng: jax.Array, images: Array, rois: Array) -> Array:
+    """Replace pixels outside each image's ROI with uniform noise.
+
+    Args:
+      rng: PRNG key.
+      images: (B, H, W) or (B, H, W, C) floats in [0, 1].
+      rois: (B, 4) half-open rectangles (the object boxes).
+    Returns:
+      Augmented images, same shape/dtype.
+    """
+    chan = images.ndim == 4
+    h, w = images.shape[1:3]
+    inside = _roi_mask(rois, h, w)
+    if chan:
+        inside = inside[..., None]
+    noise = jax.random.uniform(rng, images.shape, dtype=images.dtype)
+    return jnp.where(inside, images, noise)
+
+
+def mix_augmented(rng: jax.Array, tokens: Array, selected: Array,
+                  vocab_size: int) -> Array:
+    """LM analogue: re-randomize the *non-salient* positions of selected
+    sequences (selected: (B,) bool; positions outside the per-example salient
+    span get fresh random tokens).  Used by the scenario-1 example when the
+    "images" are token grids."""
+    noise = jax.random.randint(rng, tokens.shape, 0, vocab_size, tokens.dtype)
+    return jnp.where(selected[:, None], noise, tokens)

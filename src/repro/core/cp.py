@@ -1,0 +1,128 @@
+"""CP — the paper's "Count Pixels" function.
+
+``CP(mask, roi, (lv, uv))`` counts pixels of ``mask`` inside the rectangular
+region-of-interest ``roi`` whose value falls in the half-open range
+``[lv, uv)``.  This module holds the *exact* (non-indexed) implementations:
+
+* :func:`cp_exact` — batched jnp implementation (the verification path of the
+  filter-verification engine, and the full-scan baseline).
+* :func:`cp_exact_np` — numpy oracle used by tests and the disk-tier scan.
+
+ROI convention (used everywhere in this codebase):
+    ``roi = (r0, c0, r1, c1)`` — half-open pixel rectangle
+    ``rows r0 <= r < r1``, ``cols c0 <= c < c1``.
+A ``None`` ROI means the full mask (the paper's ``full_img``).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def full_roi(height: int, width: int) -> np.ndarray:
+    """The ROI covering the whole mask (paper's ``full_img``)."""
+    return np.array([0, 0, height, width], dtype=np.int32)
+
+
+def normalize_rois(rois, batch: int, height: int, width: int) -> np.ndarray:
+    """Broadcast/validate ROIs to an ``(B, 4)`` int32 array, clipped to bounds."""
+    if rois is None:
+        rois = np.tile(full_roi(height, width), (batch, 1))
+    rois = np.asarray(rois, dtype=np.int32)
+    if rois.ndim == 1:
+        rois = np.tile(rois[None, :], (batch, 1))
+    if rois.shape != (batch, 4):
+        raise ValueError(f"rois must have shape ({batch}, 4), got {rois.shape}")
+    out = rois.copy()
+    out[:, 0] = np.clip(rois[:, 0], 0, height)
+    out[:, 1] = np.clip(rois[:, 1], 0, width)
+    out[:, 2] = np.clip(rois[:, 2], 0, height)
+    out[:, 3] = np.clip(rois[:, 3], 0, width)
+    return out
+
+
+def roi_area(rois: np.ndarray) -> np.ndarray:
+    """Pixel area of each half-open ROI rectangle; shape ``(B,)``."""
+    rois = np.asarray(rois)
+    h = np.maximum(rois[..., 2] - rois[..., 0], 0)
+    w = np.maximum(rois[..., 3] - rois[..., 1], 0)
+    return (h * w).astype(np.int64)
+
+
+def _roi_mask(rois: Array, height: int, width: int) -> Array:
+    """(B, H, W) bool — True inside each mask's ROI.  Built from iotas so it
+    fuses with the compare+reduce instead of materializing per-mask maps."""
+    rr = jax.lax.broadcasted_iota(jnp.int32, (1, height, width), 1)
+    cc = jax.lax.broadcasted_iota(jnp.int32, (1, height, width), 2)
+    r0 = rois[:, 0][:, None, None]
+    c0 = rois[:, 1][:, None, None]
+    r1 = rois[:, 2][:, None, None]
+    c1 = rois[:, 3][:, None, None]
+    return (rr >= r0) & (rr < r1) & (cc >= c0) & (cc < c1)
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cp_exact(masks: Array, rois: Array, lv: Array, uv: Array) -> Array:
+    """Exact CP for a batch.
+
+    Args:
+      masks: ``(B, H, W)`` float array, values in ``[0, 1)``.
+      rois:  ``(B, 4)`` int32 half-open rectangles.
+      lv/uv: scalars (or ``(B,)``) — half-open value range ``[lv, uv)``.
+
+    Returns:
+      ``(B,)`` int32 pixel counts.
+    """
+    b, h, w = masks.shape
+    lv = jnp.asarray(lv)
+    uv = jnp.asarray(uv)
+    if lv.ndim == 1:
+        lv = lv[:, None, None]
+    if uv.ndim == 1:
+        uv = uv[:, None, None]
+    inside = _roi_mask(rois, h, w)
+    in_range = (masks >= lv) & (masks < uv)
+    return jnp.sum(inside & in_range, axis=(1, 2)).astype(jnp.int32)
+
+
+def cp_exact_np(mask: np.ndarray, roi, lv: float, uv: float) -> int:
+    """Pure-numpy oracle for a single mask (used by tests + disk full-scan)."""
+    h, w = mask.shape
+    if roi is None:
+        roi = (0, 0, h, w)
+    r0, c0, r1, c1 = (int(x) for x in roi)
+    r0, r1 = max(r0, 0), min(r1, h)
+    c0, c1 = max(c0, 0), min(c1, w)
+    if r1 <= r0 or c1 <= c0:
+        return 0
+    window = mask[r0:r1, c0:c1]
+    return int(np.count_nonzero((window >= lv) & (window < uv)))
+
+
+@functools.partial(jax.jit, static_argnames=())
+def cp_exact_multi(masks: Array, rois: Array, lvs: Array, uvs: Array) -> Array:
+    """Exact CP for B masks × Q (roi, range) descriptors.
+
+    Args:
+      masks: ``(B, H, W)``.
+      rois:  ``(Q, B, 4)`` or ``(Q, 4)`` (broadcast over masks).
+      lvs/uvs: ``(Q,)``.
+
+    Returns:
+      ``(Q, B)`` int32 — one CP table per descriptor.  Used by the
+      multi-query engine so one pass over the mask bytes serves every query
+      in the workload (the paper's multi-query optimization).
+    """
+    if rois.ndim == 2:
+        rois = jnp.broadcast_to(rois[:, None, :], (rois.shape[0], masks.shape[0], 4))
+
+    def one(roi_q, lv_q, uv_q):
+        return cp_exact(masks, roi_q, lv_q, uv_q)
+
+    return jax.vmap(one)(rois, lvs, uvs)

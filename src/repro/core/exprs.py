@@ -1,0 +1,361 @@
+"""Query expressions over CP terms, with sound interval (bounds) semantics.
+
+The paper lets users "use multiple CP functions and apply arithmetic
+operations in queries" — e.g. Scenario 1 normalizes a CP by the ROI area and
+Scenario 3 ranks by ``CP(intersect(...))/CP(union(...))`` (IoU).  This module
+gives those expressions two evaluation modes:
+
+* ``bounds``  — interval arithmetic over CHI-derived (lower, upper) bounds;
+                never touches mask bytes.  Soundness: the exact value always
+                lies inside the returned interval.
+* ``exact``   — evaluation against loaded mask bytes (the verification path).
+
+Two unit kinds exist:
+
+* per-**mask** expressions (Filter/Top-K/scalar-agg) built from :class:`CP`;
+* per-**group** expressions (the paper's MASK_AGG, GROUP BY image_id) built
+  from :class:`AggCP` over the masks of one image — intersection / union of
+  thresholded member masks, with bounds derived purely from member CP bounds:
+
+      intersect:  ub = min_i ub_i,  lb = max(0, Σ lb_i − (n−1)·|roi|)
+      union:      lb = max_i lb_i,  ub = min(|roi|, Σ ub_i)
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from . import chi as chi_lib
+from . import cp as cp_lib
+
+_INF = np.float64(np.inf)
+
+
+def _as_rois(roi, positions: np.ndarray, store_rois: Optional[np.ndarray],
+             cfg) -> np.ndarray:
+    """Resolve a term's ROI spec to an ``(n, 4)`` array for these rows.
+
+    ``roi`` is ``None`` (full mask), a 4-tuple constant rectangle, or the
+    string ``"provided"`` meaning per-mask ROIs supplied by the caller
+    (the paper's mask-dependent ROIs, e.g. YOLO boxes keyed by image).
+    """
+    n = len(positions)
+    if roi is None:
+        return cp_lib.normalize_rois(None, n, cfg.height, cfg.width)
+    if isinstance(roi, str) and roi == "provided":
+        if store_rois is None:
+            raise ValueError("query uses provided ROIs but none were given")
+        return cp_lib.normalize_rois(store_rois[positions], n, cfg.height, cfg.width)
+    return cp_lib.normalize_rois(np.asarray(roi), n, cfg.height, cfg.width)
+
+
+class Node:
+    """Expression tree base."""
+
+    def __truediv__(self, other):
+        return BinOp("/", self, _wrap(other))
+
+    def __mul__(self, other):
+        return BinOp("*", self, _wrap(other))
+
+    def __add__(self, other):
+        return BinOp("+", self, _wrap(other))
+
+    def __sub__(self, other):
+        return BinOp("-", self, _wrap(other))
+
+    def cp_terms(self):
+        return []
+
+
+def _wrap(x):
+    return x if isinstance(x, Node) else Const(float(x))
+
+
+@dataclasses.dataclass(frozen=True)
+class Const(Node):
+    value: float
+
+    def cp_terms(self):
+        return []
+
+
+@dataclasses.dataclass(frozen=True)
+class CP(Node):
+    """CP(mask, roi, (lv, uv)) — the paper's primitive."""
+
+    roi: object  # None | (r0,c0,r1,c1) | "provided"
+    lv: float
+    uv: float
+
+    def cp_terms(self):
+        return [self]
+
+
+@dataclasses.dataclass(frozen=True)
+class RoiArea(Node):
+    """Pixel area of the term's ROI — for normalized CPs (Scenario 1)."""
+
+    roi: object
+
+    def cp_terms(self):
+        return []
+
+
+@dataclasses.dataclass(frozen=True)
+class AggCP(Node):
+    """CP(MASK_AGG(mask > thresh), roi, (lv, uv)) over one image's masks.
+
+    ``agg`` ∈ {"intersect", "union"}.  The aggregated mask is binary, so the
+    counted pixels are those where the intersection/union holds; ``lv/uv``
+    are implied (count of 1s) and kept for API symmetry.
+    """
+
+    agg: str
+    thresh: float
+    roi: object
+
+    def cp_terms(self):
+        return [self]
+
+
+@dataclasses.dataclass(frozen=True)
+class BinOp(Node):
+    op: str
+    left: Node
+    right: Node
+
+    def cp_terms(self):
+        return self.left.cp_terms() + self.right.cp_terms()
+
+
+# ---------------------------------------------------------------------------
+# Interval arithmetic
+# ---------------------------------------------------------------------------
+
+
+def _interval_binop(op, llb, lub, rlb, rub):
+    if op == "+":
+        return llb + rlb, lub + rub
+    if op == "-":
+        return llb - rub, lub - rlb
+    if op == "*":
+        cands = np.stack([llb * rlb, llb * rub, lub * rlb, lub * rub])
+        return cands.min(0), cands.max(0)
+    if op == "/":
+        # CP counts are >= 0; we only support non-negative denominators
+        # (true for all paper queries).  den lb == 0 → upper bound +inf.
+        with np.errstate(divide="ignore", invalid="ignore"):
+            lb = np.where(rub > 0, llb / rub, 0.0)
+            ub = np.where(rlb > 0, lub / rlb, np.where(lub > 0, _INF, 0.0))
+        return lb, ub
+    raise ValueError(f"unknown op {op}")
+
+
+# ---------------------------------------------------------------------------
+# Per-mask evaluation
+# ---------------------------------------------------------------------------
+
+
+class MaskEvalContext:
+    """Binds an expression to a store partition + candidate row positions.
+
+    ``partial_rows``: verification for single-CP expressions loads only each
+    mask's ROI row-span (store.load_rows) — a beyond-paper I/O optimization;
+    disabled automatically when the expression needs full masks or the
+    store's cross-query cache is active (full masks are what's shared).
+    """
+
+    def __init__(self, store, positions: np.ndarray,
+                 provided_rois: Optional[np.ndarray] = None,
+                 partial_rows: bool = True):
+        self.store = store
+        self.cfg = store.cfg
+        self.positions = np.asarray(positions, dtype=np.int64)
+        self.provided_rois = provided_rois
+        self.partial_rows = partial_rows
+        self._loaded: Optional[np.ndarray] = None  # aligned with positions
+        self._rows: list = []
+        self._rows_used = 0
+
+    # bytes ----------------------------------------------------------------
+    def masks_for(self, idx: np.ndarray) -> np.ndarray:
+        """Load (and cache) mask bytes for candidate indices ``idx``."""
+        if self._loaded is None:
+            self._loaded = np.full((len(self.positions),), -1, dtype=np.int64)
+        missing = idx[self._loaded[idx] < 0]
+        if len(missing):
+            new = self.store.load(self.positions[missing])
+            self._loaded[missing] = self._rows_used + np.arange(len(missing))
+            self._rows.append(new)             # amortized growth (no O(n²))
+            self._rows_used += len(missing)
+        if len(self._rows) > 1:
+            self._rows = [np.concatenate(self._rows, axis=0)]
+        return self._rows[0][self._loaded[idx]]
+
+    def _can_partial(self, node) -> bool:
+        return (self.partial_rows and self._loaded is None and
+                self.store._cache_map is None and
+                len(node.cp_terms()) <= 1)
+
+    # bounds -----------------------------------------------------------------
+    def bounds(self, node: Node):
+        """(lb, ub) float64 arrays over all candidate positions."""
+        n = len(self.positions)
+        if isinstance(node, Const):
+            v = np.full(n, node.value)
+            return v.copy(), v.copy()
+        if isinstance(node, RoiArea):
+            rois = _as_rois(node.roi, self.positions, self.provided_rois, self.cfg)
+            a = cp_lib.roi_area(rois).astype(np.float64)
+            return a.copy(), a.copy()
+        if isinstance(node, CP):
+            rois = _as_rois(node.roi, self.positions, self.provided_rois, self.cfg)
+            table = self.store.chi_table[jnp.asarray(self.positions)]
+            lb, ub = chi_lib.chi_bounds(table, self.cfg, rois, node.lv, node.uv)
+            return np.asarray(lb, np.float64), np.asarray(ub, np.float64)
+        if isinstance(node, BinOp):
+            llb, lub = self.bounds(node.left)
+            rlb, rub = self.bounds(node.right)
+            return _interval_binop(node.op, llb, lub, rlb, rub)
+        raise TypeError(f"node {node} not valid in a per-mask expression")
+
+    # exact ------------------------------------------------------------------
+    def exact(self, node: Node, idx: np.ndarray) -> np.ndarray:
+        """Exact value for candidate indices ``idx`` (loads mask bytes)."""
+        self._use_partial = self._can_partial(node)
+        return self._exact_node(node, idx)
+
+    def _cp_partial(self, node: CP, idx: np.ndarray) -> np.ndarray:
+        """Exact CP reading only each mask's ROI row span from disk."""
+        rois = _as_rois(node.roi, self.positions[idx], self.provided_rois,
+                        self.cfg)
+        spans = rois[:, [0, 2]]
+        buf, heights = self.store.load_rows(self.positions[idx], spans)
+        local = np.stack([np.zeros(len(idx), np.int64), rois[:, 1],
+                          heights.astype(np.int64), rois[:, 3]], axis=1)
+        counts = kops.cp_count(jnp.asarray(buf),
+                               jnp.asarray(local, jnp.int32),
+                               jnp.asarray(node.lv, buf.dtype),
+                               jnp.asarray(min(node.uv, 3.4e38), buf.dtype))
+        return np.asarray(counts, np.float64)
+
+    def _exact_node(self, node: Node, idx: np.ndarray) -> np.ndarray:
+        if isinstance(node, Const):
+            return np.full(len(idx), node.value)
+        if isinstance(node, RoiArea):
+            rois = _as_rois(node.roi, self.positions[idx], self.provided_rois,
+                            self.cfg)
+            return cp_lib.roi_area(rois).astype(np.float64)
+        if isinstance(node, CP):
+            if self._use_partial:
+                return self._cp_partial(node, idx)
+            masks = self.masks_for(idx)
+            rois = _as_rois(node.roi, self.positions[idx], self.provided_rois,
+                            self.cfg)
+            # verification hot path → Pallas cp_count on TPU, jnp ref on CPU
+            counts = kops.cp_count(jnp.asarray(masks), jnp.asarray(rois),
+                                   jnp.asarray(node.lv, masks.dtype),
+                                   jnp.asarray(min(node.uv, 3.4e38), masks.dtype))
+            return np.asarray(counts, np.float64)
+        if isinstance(node, BinOp):
+            l = self._exact_node(node.left, idx)
+            r = self._exact_node(node.right, idx)
+            if node.op == "/":
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    out = np.where(r != 0, l / np.where(r == 0, 1, r), 0.0)
+                return out
+            return {"+": np.add, "-": np.subtract, "*": np.multiply}[node.op](l, r)
+        raise TypeError(f"node {node} not valid in a per-mask expression")
+
+
+# ---------------------------------------------------------------------------
+# Per-group (MASK_AGG) evaluation
+# ---------------------------------------------------------------------------
+
+
+class GroupEvalContext:
+    """Binds an AggCP expression to image groups.
+
+    ``group_positions``: (n_groups, group_size) row positions — one image's
+    masks per row (the paper's ``GROUP BY image_id`` with
+    ``mask_type IN (...)``).
+    """
+
+    def __init__(self, store, group_positions: np.ndarray,
+                 image_ids: np.ndarray,
+                 provided_rois: Optional[np.ndarray] = None):
+        self.store = store
+        self.cfg = store.cfg
+        self.groups = np.asarray(group_positions, dtype=np.int64)
+        self.image_ids = np.asarray(image_ids)
+        self.provided_rois = provided_rois
+        self._ctx = MaskEvalContext(store, self.groups.reshape(-1), provided_rois)
+
+    def _member_bounds(self, node: AggCP):
+        """Per-member CP bounds for the thresholded mask (value > thresh)."""
+        member = CP(node.roi, node.thresh, float("inf"))
+        lb, ub = self._ctx.bounds(member)
+        g, s = self.groups.shape
+        return lb.reshape(g, s), ub.reshape(g, s)
+
+    def _areas(self, node: AggCP):
+        rois = _as_rois(node.roi, self.groups[:, 0], self.provided_rois, self.cfg)
+        return cp_lib.roi_area(rois).astype(np.float64)
+
+    def bounds(self, node: Node):
+        if isinstance(node, Const):
+            v = np.full(len(self.groups), node.value)
+            return v.copy(), v.copy()
+        if isinstance(node, AggCP):
+            mlb, mub = self._member_bounds(node)
+            area = self._areas(node)
+            n = self.groups.shape[1]
+            if node.agg == "intersect":
+                ub = mub.min(axis=1)
+                lb = np.maximum(0.0, mlb.sum(axis=1) - (n - 1) * area)
+            elif node.agg == "union":
+                lb = mlb.max(axis=1)
+                ub = np.minimum(area, mub.sum(axis=1))
+            else:
+                raise ValueError(f"unknown agg {node.agg}")
+            return lb.astype(np.float64), ub.astype(np.float64)
+        if isinstance(node, BinOp):
+            llb, lub = self.bounds(node.left)
+            rlb, rub = self.bounds(node.right)
+            return _interval_binop(node.op, llb, lub, rlb, rub)
+        raise TypeError(f"node {node} not valid in a group expression")
+
+    def exact(self, node: Node, gidx: np.ndarray) -> np.ndarray:
+        if isinstance(node, Const):
+            return np.full(len(gidx), node.value)
+        if isinstance(node, AggCP):
+            g, s = self.groups.shape
+            flat_idx = (gidx[:, None] * s + np.arange(s)[None, :]).reshape(-1)
+            masks = self._ctx.masks_for(flat_idx)
+            masks = masks.reshape(len(gidx), s, self.cfg.height, self.cfg.width)
+            rois = _as_rois(node.roi, self.groups[gidx, 0], self.provided_rois,
+                            self.cfg)
+            # fused threshold+agg+count → Pallas mask_agg kernel on TPU
+            inter, union = kops.mask_agg_counts(
+                jnp.asarray(masks), jnp.asarray(rois),
+                jnp.asarray(node.thresh, masks.dtype))
+            counts = inter if node.agg == "intersect" else union
+            return np.asarray(counts, np.float64)
+        if isinstance(node, BinOp):
+            l = self.exact(node.left, gidx)
+            r = self.exact(node.right, gidx)
+            if node.op == "/":
+                with np.errstate(divide="ignore", invalid="ignore"):
+                    return np.where(r != 0, l / np.where(r == 0, 1, r), 0.0)
+            return {"+": np.add, "-": np.subtract, "*": np.multiply}[node.op](l, r)
+        raise TypeError(f"node {node} not valid in a group expression")
+
+
+def is_group_expr(node: Node) -> bool:
+    return any(isinstance(t, AggCP) for t in node.cp_terms())

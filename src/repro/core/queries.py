@@ -1,0 +1,318 @@
+"""SQL-ish query front-end for MaskSearch (the demo GUI's "Query Command").
+
+Supports the paper's textual query classes verbatim, e.g.::
+
+    SELECT mask_id FROM MasksDatabaseView
+    WHERE CP(mask, roi, (0.8, 1.0)) < 5000;
+
+    SELECT mask_id FROM MasksDatabaseView
+    ORDER BY CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 25;
+
+    SELECT image_id,
+           CP(intersect(mask > 0.8), roi, (0.5, 2.0))
+         / CP(union(mask > 0.8), roi, (0.5, 2.0)) AS iou
+    FROM MasksDatabaseView WHERE mask_type IN (1, 2)
+    GROUP BY image_id ORDER BY iou ASC LIMIT 25;
+
+    SELECT SCALAR_AGG(AVG, CP(mask, roi, (0.9, 1.0))) FROM MasksDatabaseView;
+
+plus arithmetic over CP terms and ``AREA(roi)`` for normalized counts
+(Scenario 1).  ``roi`` refers to caller-provided per-mask rectangles (e.g.
+YOLO boxes); ``full_img`` is the whole mask; a literal ``(r0, c0, r1, c1)``
+rectangle is also accepted.  The parser builds the expression trees from
+``core.exprs`` and a :class:`Query` plan executed by ``core.engine``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+from . import engine
+from .exprs import CP, AggCP, BinOp, Const, Node, RoiArea
+
+_TOKEN_RE = re.compile(r"""
+      (?P<num>\d+\.\d*|\.\d+|\d+|inf)
+    | (?P<name>[A-Za-z_][A-Za-z_0-9]*)
+    | (?P<op>[(),+\-*/<>=;]|<=|>=)
+""", re.VERBOSE)
+
+
+def _tokenize(text: str):
+    tokens = []
+    i = 0
+    text = text.strip()
+    while i < len(text):
+        if text[i].isspace():
+            i += 1
+            continue
+        if text[i:i + 2] in ("<=", ">="):
+            tokens.append(text[i:i + 2])
+            i += 2
+            continue
+        m = _TOKEN_RE.match(text, i)
+        if not m:
+            raise SyntaxError(f"bad token at ...{text[i:i+20]!r}")
+        tokens.append(m.group(0))
+        i = m.end()
+    return tokens
+
+
+@dataclasses.dataclass
+class Query:
+    """A parsed + planned query, runnable against a MaskStore."""
+
+    kind: str                      # "filter" | "topk" | "scalar_agg"
+    select: str                    # "mask_id" | "image_id"
+    expr: Optional[Node] = None
+    op: Optional[str] = None
+    threshold: Optional[float] = None
+    k: Optional[int] = None
+    desc: bool = True
+    agg: Optional[str] = None
+    mask_types: Optional[tuple] = None
+    group_by_image: bool = False
+
+    def run(self, store, *, provided_rois=None, use_index: bool = True,
+            **kw):
+        common = dict(mask_types=self.mask_types,
+                      group_by_image=self.group_by_image,
+                      provided_rois=provided_rois, use_index=use_index)
+        if self.kind == "filter":
+            return engine.filter_query(store, self.expr, self.op,
+                                       self.threshold, **common, **kw)
+        if self.kind == "topk":
+            ids, scores, stats = engine.topk_query(
+                store, self.expr, self.k, desc=self.desc, **common, **kw)
+            return (ids, scores), stats
+        if self.kind == "scalar_agg":
+            common.pop("group_by_image")
+            return engine.scalar_agg(store, self.expr, self.agg, **common, **kw)
+        raise ValueError(self.kind)
+
+
+class _Parser:
+    def __init__(self, tokens):
+        self.toks = tokens
+        self.i = 0
+
+    # -- token helpers ----------------------------------------------------
+    def peek(self, off: int = 0):
+        j = self.i + off
+        return self.toks[j] if j < len(self.toks) else None
+
+    def next(self):
+        tok = self.peek()
+        if tok is None:
+            raise SyntaxError("unexpected end of query")
+        self.i += 1
+        return tok
+
+    def expect(self, want: str):
+        tok = self.next()
+        if tok.upper() != want.upper():
+            raise SyntaxError(f"expected {want!r}, got {tok!r}")
+        return tok
+
+    def accept(self, want: str) -> bool:
+        if self.peek() is not None and self.peek().upper() == want.upper():
+            self.i += 1
+            return True
+        return False
+
+    def number(self) -> float:
+        tok = self.next()
+        if tok == "inf":
+            return float("inf")
+        try:
+            return float(tok)
+        except ValueError as e:
+            raise SyntaxError(f"expected number, got {tok!r}") from e
+
+    # -- grammar -----------------------------------------------------------
+    def parse(self) -> Query:
+        self.expect("SELECT")
+        q = Query(kind="filter", select="mask_id")
+        # select list — possibly SCALAR_AGG
+        if self.peek().upper() == "SCALAR_AGG":
+            self.next(); self.expect("(")
+            q.agg = self.next().upper()
+            self.expect(",")
+            q.expr = self.expr()
+            self.expect(")")
+            q.kind = "scalar_agg"
+        else:
+            q.select = self.next()
+            if q.select not in ("mask_id", "image_id"):
+                raise SyntaxError(f"can only SELECT mask_id/image_id, got {q.select}")
+            alias = {}
+            while self.accept(","):
+                e = self.expr()
+                self.expect("AS")
+                alias[self.next()] = e
+            q._aliases = alias
+        self.expect("FROM")
+        self.next()  # view name, ignored
+        # WHERE
+        if self.accept("WHERE"):
+            self._where(q)
+        if self.accept("GROUP"):
+            self.expect("BY")
+            self.expect("image_id")
+            q.group_by_image = True
+        if self.accept("ORDER"):
+            self.expect("BY")
+            nxt = self.peek()
+            aliases = getattr(q, "_aliases", {})
+            if nxt in aliases:
+                self.next()
+                order_expr = aliases[nxt]
+            else:
+                order_expr = self.expr()
+            q.desc = True
+            if self.accept("ASC"):
+                q.desc = False
+            else:
+                self.accept("DESC")
+            self.expect("LIMIT")
+            q.k = int(self.number())
+            q.kind = "topk"
+            q.expr = order_expr
+        self.accept(";")
+        if q.kind == "filter" and q.expr is None:
+            raise SyntaxError("filter query needs a CP predicate or ORDER BY")
+        if q.select == "image_id":
+            q.group_by_image = True
+        return q
+
+    def _where(self, q: Query):
+        while True:
+            if (self.peek() or "").lower() == "mask_type":
+                self.next()
+                self.expect("IN")
+                self.expect("(")
+                types = [int(self.number())]
+                while self.accept(","):
+                    types.append(int(self.number()))
+                self.expect(")")
+                q.mask_types = tuple(types)
+            else:
+                expr = self.expr()
+                op = self.next()
+                if op not in ("<", "<=", ">", ">="):
+                    raise SyntaxError(f"bad comparison {op!r}")
+                q.expr = expr
+                q.op = op
+                q.threshold = self.number()
+            if not self.accept("AND"):
+                break
+
+    # expression grammar: expr := term (('+'|'-') term)*
+    def expr(self) -> Node:
+        node = self.term()
+        while self.peek() in ("+", "-"):
+            op = self.next()
+            node = BinOp(op, node, self.term())
+        return node
+
+    def term(self) -> Node:
+        node = self.factor()
+        while self.peek() in ("*", "/"):
+            op = self.next()
+            node = BinOp(op, node, self.factor())
+        return node
+
+    def factor(self) -> Node:
+        tok = self.peek()
+        if tok == "(":
+            self.next()
+            node = self.expr()
+            self.expect(")")
+            return node
+        if tok.upper() == "CP":
+            return self._cp()
+        if tok.upper() == "AREA":
+            self.next(); self.expect("(")
+            roi = self._roi()
+            self.expect(")")
+            return RoiArea(roi)
+        # number literal
+        return Const(self.number())
+
+    def _cp(self) -> Node:
+        self.expect("CP"); self.expect("(")
+        tok = self.peek()
+        if tok.lower() in ("intersect", "union", "mask_agg"):
+            agg = self.next().lower()
+            self.expect("(")
+            self.expect("mask")
+            thresh = 0.5
+            if self.accept(">"):
+                thresh = self.number()
+            self.expect(")")
+            if agg == "mask_agg":
+                agg = "intersect"  # MASK_AGG default: thresholded intersection
+            self.expect(",")
+            roi = self._roi()
+            self.expect(",")
+            lv, uv = self._range()
+            self.expect(")")
+            del lv, uv  # aggregated mask is binary; range implied
+            return AggCP(agg, thresh, roi)
+        self.expect("mask")
+        self.expect(",")
+        roi = self._roi()
+        self.expect(",")
+        lv, uv = self._range()
+        self.expect(")")
+        return CP(roi, lv, uv)
+
+    def _roi(self):
+        tok = self.next()
+        if tok.lower() == "roi":
+            return "provided"
+        if tok.lower() == "full_img":
+            return None
+        if tok == "(":
+            vals = [self.number()]
+            for _ in range(3):
+                self.expect(",")
+                vals.append(self.number())
+            self.expect(")")
+            return tuple(int(v) for v in vals)
+        raise SyntaxError(f"bad ROI {tok!r}")
+
+    def _range(self):
+        self.expect("(")
+        lv = self.number()
+        self.expect(",")
+        uv = self.number()
+        self.expect(")")
+        return lv, uv
+
+
+def parse(sql: str) -> Query:
+    """Parse a MaskSearch query string into an executable plan."""
+    return _Parser(_tokenize(sql)).parse()
+
+
+def run(sql: str, store, **kw):
+    """One-shot: parse + execute. Returns (result, stats)."""
+    return parse(sql).run(store, **kw)
+
+
+# Convenience used by examples: the paper's three scenario queries.
+SCENARIO1_TOPK = (
+    "SELECT mask_id FROM MasksDatabaseView "
+    "ORDER BY CP(mask, roi, (0.8, 1.0)) / AREA(roi) ASC LIMIT 25;")
+SCENARIO2_TOPK = (
+    "SELECT mask_id FROM MasksDatabaseView "
+    "ORDER BY CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 25;")
+SCENARIO3_IOU = (
+    "SELECT image_id, CP(intersect(mask > 0.8), full_img, (0.5, 2.0)) "
+    "/ CP(union(mask > 0.8), full_img, (0.5, 2.0)) AS iou "
+    "FROM MasksDatabaseView WHERE mask_type IN (1, 2) "
+    "GROUP BY image_id ORDER BY iou ASC LIMIT 25;")

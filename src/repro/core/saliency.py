@@ -1,0 +1,113 @@
+"""Mask generation — the "masks come from models" half of the workflow.
+
+The demo's masks are model saliency maps (Grad-CAM-style) and object-detector
+boxes.  Our mask sources, per architecture family (DESIGN.md §7):
+
+  * **attention rollout** for transformer LMs — per-layer attention maps
+    multiplied through the residual stream (Abnar & Zuidema), giving a
+    (S × S) float mask per example;
+  * **last-layer attention maps** (cheaper; per-head or head-averaged);
+  * **input-gradient saliency** for any differentiable model (the only
+    option for attention-free Mamba-2) — |∂loss/∂embedding| reduced over
+    features, reshaped to a 2-D grid;
+  * **cross-attention maps** for enc-dec (whisper): (dec_len × enc_len);
+  * **expert-utilization maps** for MoE: (tokens × experts) routing heat map.
+
+Every source normalizes into the paper's data model: 2-D float arrays in
+[0, 1), ready for CHI ingest.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+Array = jax.Array
+
+
+def normalize01(mask: Array, axis=(-2, -1)) -> Array:
+    """Affinely map each mask to [0, 1) (per-mask min/max, ε-shrunk so the
+    max stays strictly below 1 — the paper's value domain)."""
+    lo = jnp.min(mask, axis=axis, keepdims=True)
+    hi = jnp.max(mask, axis=axis, keepdims=True)
+    out = (mask - lo) / jnp.maximum(hi - lo, 1e-12)
+    return out * (1.0 - 1e-6)
+
+
+def attention_rollout(attn: Array) -> Array:
+    """Attention rollout over a layer stack.
+
+    Args:
+      attn: (L, B, heads, S, S) post-softmax attention.
+    Returns:
+      (B, S, S) rollout masks in [0, 1).
+    """
+    a = jnp.mean(attn, axis=2)                       # head-average: (L, B, S, S)
+    s = a.shape[-1]
+    eye = jnp.eye(s, dtype=a.dtype)
+    a = 0.5 * a + 0.5 * eye                          # residual connection
+    a = a / jnp.sum(a, axis=-1, keepdims=True)
+
+    def step(carry, layer):
+        return layer @ carry, None
+
+    out, _ = jax.lax.scan(step, jnp.broadcast_to(eye, a.shape[1:]), a)
+    return normalize01(out)
+
+
+def last_layer_attention(attn_last: Array) -> Array:
+    """(B, heads, S, S) → (B, S, S) head-averaged map in [0, 1)."""
+    return normalize01(jnp.mean(attn_last, axis=1))
+
+
+def input_saliency(loss_fn, params, batch) -> Array:
+    """|∂loss/∂embeddings| saliency (works for every arch incl. Mamba-2).
+
+    ``loss_fn(params, batch, embeddings) -> scalar`` where ``embeddings`` is
+    the (B, S, D) input-embedding tensor the model consumes.  Returns
+    (B, S) per-token scores in [0, 1).
+    """
+    def wrt_embeddings(emb):
+        return loss_fn(params, batch, emb)
+
+    emb = batch["embeddings"]
+    g = jax.grad(wrt_embeddings)(emb)
+    scores = jnp.linalg.norm(g, axis=-1)             # (B, S)
+    return normalize01(scores, axis=(-1,))
+
+
+def tokens_to_grid(scores: Array, height: int, width: int) -> Array:
+    """Arrange (B, S) per-token scores into (B, height, width) masks.
+
+    Tokens fill the grid row-major; short sequences pad with 0, long ones
+    average-pool.  This is the canonical "LM tokens as a 2-D mask" layout
+    the query engine indexes.
+    """
+    b, s = scores.shape
+    cells = height * width
+    if s >= cells:
+        # average-pool s → cells
+        pad = (-s) % cells
+        x = jnp.pad(scores, ((0, 0), (0, pad)))
+        x = x.reshape(b, cells, -1).mean(-1)
+    else:
+        x = jnp.pad(scores, ((0, 0), (0, cells - s)))
+    return x.reshape(b, height, width)
+
+
+def resize_mask(mask: Array, height: int, width: int) -> Array:
+    """Bilinear-resize arbitrary 2-D maps (e.g. cross-attention (T×S)) onto
+    the store's canonical (H, W)."""
+    b = mask.shape[0]
+    return jax.image.resize(mask, (b, height, width), method="bilinear")
+
+
+def expert_utilization_map(router_probs: Array, height: int, width: int) -> Array:
+    """MoE routing heat map: (B, S, E) router probabilities → per-example
+    (H, W) mask (tokens × experts resized).  A MaskSearch client unique to
+    MoE archs: 'find batches whose expert load is most skewed' is a CP query
+    over these masks."""
+    return normalize01(resize_mask(router_probs, height, width))

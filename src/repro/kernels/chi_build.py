@@ -1,0 +1,85 @@
+"""Pallas TPU kernel: CHI construction (per-cell per-bin histograms).
+
+Index ingest is a one-pass streaming histogram: for each mask, for each of
+the G×G spatial cells, count pixels per value bin.  The kernel processes one
+**row of cells** per grid step — a ``(1, ch, W)`` VMEM tile (full lane width)
+— and turns the per-cell segmentation into an MXU matmul instead of a
+scatter:
+
+    for bin k:   inr   = (m >= e_k) & (m < e_{k+1})          # (ch, W) VPU
+                 rowct = sum_rows(inr)                       # (1, W)  VPU
+                 cells = rowct @ SEL                         # (1, G)  MXU
+
+where ``SEL[w, g] = [w // cw == g]`` is an iota-built block-diagonal selector
+living entirely in VMEM.  TPUs have no fast scatter; the selector matmul is
+the TPU-native segment-sum (DESIGN.md §3, "hardware adaptation").
+
+The cheap prefix sums that turn cell histograms into the CHI table stay in
+XLA (``core.chi.histograms_to_table``) where they fuse freely.
+
+Contract: G | H and G | W (production mask stores are padded to this); the
+ragged path falls back to the jnp reference in ops.py.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _chi_kernel(edges_ref, mask_ref, out_ref, *, ch: int, w: int, g: int,
+                nb: int):
+    m = mask_ref[0]                                       # (ch, W)
+    cw = w // g
+    # Block-diagonal selector, built from iota (never touches HBM).
+    col = jax.lax.broadcasted_iota(jnp.int32, (w, g), 0)
+    grp = jax.lax.broadcasted_iota(jnp.int32, (w, g), 1)
+    sel = (col // cw == grp).astype(jnp.float32)          # (W, G)
+
+    outs = []
+    for k in range(nb):                                    # static unroll
+        lo = edges_ref[k]
+        hi = edges_ref[k + 1]
+        inr = ((m >= lo) & (m < hi)).astype(jnp.float32)   # (ch, W)
+        rowct = jnp.sum(inr, axis=0, keepdims=True)        # (1, W)
+        cells = jnp.dot(rowct, sel,
+                        preferred_element_type=jnp.float32)  # (1, G)
+        outs.append(cells[0])
+    out_ref[0, 0] = jnp.stack(outs, axis=1).astype(jnp.int32)  # (G, NB)
+
+
+def chi_cell_hist_pallas(masks: jax.Array, interior_edges: jax.Array,
+                         grid: int, *, interpret: bool = False) -> jax.Array:
+    """(B, H, W), interior edges (NB-1,) → (B, G, G, NB) int32.
+
+    ``interior_edges`` are the finite thresholds; ±inf sentinels are added
+    here so the kernel's bin ranges cover the whole real line (matching
+    core.chi semantics for out-of-[0,1) pixel values).
+    """
+    b, h, w = masks.shape
+    g = grid
+    if h % g or w % g:
+        raise ValueError(f"chi_build kernel needs G|H and G|W, got {h}x{w}, G={g}")
+    ch = h // g
+    nb = interior_edges.shape[0] + 1
+    big = jnp.asarray(jnp.finfo(masks.dtype).max, masks.dtype)
+    edges = jnp.concatenate([
+        jnp.asarray([-big], masks.dtype),
+        interior_edges.astype(masks.dtype),
+        jnp.asarray([big], masks.dtype),
+    ])
+    kernel = functools.partial(_chi_kernel, ch=ch, w=w, g=g, nb=nb)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, g),
+        in_specs=[
+            pl.BlockSpec((nb + 1,), lambda i, j: (0,)),
+            pl.BlockSpec((1, ch, w), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, nb), lambda i, j: (i, j, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, g, g, nb), jnp.int32),
+        interpret=interpret,
+    )(edges, masks)

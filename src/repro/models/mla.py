@@ -1,0 +1,154 @@
+"""Multi-head Latent Attention (DeepSeek-V2/V3).
+
+Projections (per DeepSeek-V2 paper §2.1.1–2.1.3):
+
+    c_q   = x W_dq                         (q_lora_rank)
+    q     = RMS(c_q) W_uq     → per head: [q_nope (nope_dim) ; q_pe (rope_dim)]
+    c_kv  = x W_dkv                        (kv_lora_rank)
+    k_pe  = x W_kpe                        (rope_dim, shared across heads)
+    k     = [RMS(c_kv) W_uk ; k_pe]        per head
+    v     = RMS(c_kv) W_uv                 (v_head_dim per head)
+
+Train/prefill materialize k/v.  **Decode caches only (c_kv, k_pe)** —
+``kv_lora_rank + rope_dim`` floats per position — and uses the *absorbed*
+form: W_uk folds into the query (q_nope → latent space) and W_uv folds into
+the output projection, so per-step attention works directly against the
+compressed cache.  This is the memory- and bandwidth-optimal MLA decode and
+what makes deepseek's decode_32k/500k-class cells cache-light.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, init_rms, param, rms_norm, shard_act
+
+Array = jax.Array
+NEG_INF = -2.0e38
+
+
+def init_mla(key, cfg, dtype):
+    ks = jax.random.split(key, 8)
+    d, h = cfg.d_model, cfg.num_heads
+    qr, kvr = cfg.q_lora_rank, cfg.kv_lora_rank
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    return {
+        "w_dq": param(ks[0], (d, qr), ("embed", "q_lora"), dtype=dtype),
+        "q_norm": init_rms(ks[1], qr, axes=("q_lora",)),
+        "w_uq": param(ks[2], (qr, h, nd + rd), ("q_lora", "q_heads", "head_dim"),
+                      dtype=dtype),
+        "w_dkv": param(ks[3], (d, kvr), ("embed", "kv_lora"), dtype=dtype),
+        "kv_norm": init_rms(ks[4], kvr, axes=("kv_lora",)),
+        "w_kpe": param(ks[5], (d, rd), ("embed", "head_dim"), dtype=dtype),
+        "w_ukv": param(ks[6], (kvr, h, nd + vd), ("kv_lora", "q_heads", "head_dim"),
+                       dtype=dtype),
+        "w_o": param(ks[7], (h, vd, d), ("q_heads", "head_dim", "embed"),
+                     dtype=dtype),
+    }
+
+
+def _queries(p, cfg, x, positions):
+    nd, rd = cfg.qk_nope_dim, cfg.qk_rope_dim
+    cq = rms_norm(x @ p["w_dq"], p["q_norm"], cfg.norm_eps)
+    q = jnp.einsum("bsr,rhd->bshd", cq, p["w_uq"])
+    q_nope, q_pe = q[..., :nd], q[..., nd:]
+    q_pe = apply_rope(q_pe, positions, cfg.rope_theta)
+    return shard_act(q_nope, ("batch", "seq", "q_heads", None)), \
+        shard_act(q_pe, ("batch", "seq", "q_heads", None))
+
+
+def _latents(p, cfg, x, positions):
+    ckv = rms_norm(x @ p["w_dkv"], p["kv_norm"], cfg.norm_eps)
+    k_pe = apply_rope((x @ p["w_kpe"])[:, :, None, :], positions,
+                      cfg.rope_theta)[:, :, 0]
+    return (shard_act(ckv, ("batch", "seq", None)),
+            shard_act(k_pe, ("batch", "seq", None)))
+
+
+def mla_attention(p, cfg, x: Array, positions: Array) -> Array:
+    """Training/prefill: materialized per-head K/V, causal, **chunked** over
+    query blocks (same memory-efficient scheme as attention._sdpa — scores
+    for 128 MLA heads at 4k+ would otherwise dominate device memory)."""
+    b, s, _ = x.shape
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    q_nope, q_pe = _queries(p, cfg, x, positions)
+    ckv, k_pe = _latents(p, cfg, x, positions)
+    kv = jnp.einsum("bsr,rhd->bshd", ckv, p["w_ukv"])
+    k_nope, v = kv[..., :nd], kv[..., nd:]
+    k_nope = shard_act(k_nope, ("batch", "kv_seq", "q_heads", None))
+    v = shard_act(v, ("batch", "kv_seq", "q_heads", None))
+
+    bq = cfg.attn_q_block or s
+    bq = min(bq, s)
+    while s % bq:
+        bq -= 1
+    scale = 1.0 / jnp.sqrt(nd + rd).astype(jnp.float32)
+    k_pos = jnp.arange(s)
+    outs = []
+    for i in range(s // bq):                      # static unroll
+        qs = i * bq
+        qn = jax.lax.slice_in_dim(q_nope, qs, qs + bq, axis=1)
+        qp = jax.lax.slice_in_dim(q_pe, qs, qs + bq, axis=1)
+        scores = (jnp.einsum("bshd,bthd->bhst", qn, k_nope) +
+                  jnp.einsum("bshd,btd->bhst", qp, k_pe)).astype(jnp.float32)
+        scores = scores * scale
+        scores = shard_act(scores, ("batch", "q_heads", None, "kv_seq"))
+        causal = k_pos[None, :] <= (jnp.arange(qs, qs + bq))[:, None]
+        scores = jnp.where(causal[None, None], scores, NEG_INF)
+        probs = jax.nn.softmax(scores, axis=-1).astype(v.dtype)
+        outs.append(jnp.einsum("bhst,bthd->bshd", probs, v))
+    out = jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+    return jnp.einsum("bshd,hdo->bso", out, p["w_o"])
+
+
+# -- compressed cache --------------------------------------------------------
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, dtype):
+    return {
+        "ckv": jnp.zeros((batch, max_len, cfg.kv_lora_rank), dtype),
+        "kpe": jnp.zeros((batch, max_len, cfg.qk_rope_dim), dtype),
+    }
+
+
+def mla_prefill(p, cfg, x, positions, cache):
+    out = mla_attention(p, cfg, x, positions)
+    ckv, k_pe = _latents(p, cfg, x, positions)
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice(cache["ckv"], ckv, (0, 0, 0)),
+        "kpe": jax.lax.dynamic_update_slice(cache["kpe"], k_pe, (0, 0, 0)),
+    }
+    return out, cache
+
+
+def mla_decode(p, cfg, x, pos: Array, cache):
+    """Absorbed one-token decode against the compressed (c_kv, k_pe) cache.
+
+    q_lat = q_nope @ W_uk          (fold key up-proj into the query)
+    score = q_lat · c_kv + q_pe · k_pe
+    o_lat = probs · c_kv           (attend in latent space)
+    out   = (o_lat @ W_uv) @ W_o   (fold value up-proj into output)
+    """
+    b = x.shape[0]
+    nd, rd, vd = cfg.qk_nope_dim, cfg.qk_rope_dim, cfg.v_head_dim
+    positions = jnp.full((b, 1), pos)
+    q_nope, q_pe = _queries(p, cfg, x, positions)
+    ckv_new, kpe_new = _latents(p, cfg, x, positions)
+    cache = {
+        "ckv": jax.lax.dynamic_update_slice(cache["ckv"], ckv_new, (0, pos, 0)),
+        "kpe": jax.lax.dynamic_update_slice(cache["kpe"], kpe_new, (0, pos, 0)),
+    }
+    w_uk = p["w_ukv"][..., :nd]                        # (r, h, nd)
+    w_uv = p["w_ukv"][..., nd:]                        # (r, h, vd)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope, w_uk)  # (b,1,h,r)
+    t = cache["ckv"].shape[1]
+    scores = (jnp.einsum("bshr,btr->bhst", q_lat, cache["ckv"]) +
+              jnp.einsum("bshd,btd->bhst", q_pe, cache["kpe"]))
+    scores = scores.astype(jnp.float32) / jnp.sqrt(nd + rd).astype(jnp.float32)
+    valid = (jnp.arange(t) <= pos)[None, None, None]
+    scores = jnp.where(valid, scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    o_lat = jnp.einsum("bhst,btr->bshr", probs, cache["ckv"])
+    out = jnp.einsum("bshr,rhd->bshd", o_lat, w_uv)
+    return jnp.einsum("bshd,hdo->bso", out, p["w_o"]), cache

@@ -1,0 +1,12 @@
+"""build_model(cfg) — the single constructor the launcher/tests/examples use."""
+
+from __future__ import annotations
+
+from .encdec import EncDecLM
+from .transformer import DecoderLM
+
+
+def build_model(cfg):
+    if cfg.is_encoder_decoder:
+        return EncDecLM(cfg)
+    return DecoderLM(cfg)

@@ -1,0 +1,109 @@
+"""Mixture-of-Experts FFN (DeepSeek-style: shared + fine-grained routed).
+
+Routing: softmax top-k with a load-balancing auxiliary loss.  Dispatch uses
+the sort-based capacity scheme (no (T,E,C) one-hot tensors): token→expert
+assignments are sorted by expert id, each token gets its rank within its
+expert's queue, ranks ≥ capacity drop (residual passthrough keeps dropped
+tokens intact).  Under expert parallelism the (E, C, d) buffers are sharded
+on E over the "model" axis and XLA lowers the scatter/gather into the usual
+all-to-all pair.
+
+Expert FFNs are SwiGLU with stacked weights (E, d, ff) — one einsum per
+projection over all local experts.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import param, shard_act, silu
+
+Array = jax.Array
+
+
+def init_moe(key, cfg, dtype):
+    ks = jax.random.split(key, 5)
+    d, e, ff = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    p = {
+        "router": param(ks[0], (d, e), ("embed", "experts"), dtype=jnp.float32),
+        "gate": param(ks[1], (e, d, ff), ("experts", "embed", "expert_mlp"),
+                      dtype=dtype),
+        "up": param(ks[2], (e, d, ff), ("experts", "embed", "expert_mlp"),
+                    dtype=dtype),
+        "down": param(ks[3], (e, ff, d), ("experts", "expert_mlp", "embed"),
+                      dtype=dtype),
+    }
+    if cfg.num_shared_experts:
+        sff = cfg.moe_d_ff * cfg.num_shared_experts
+        kg, ku, kd = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "gate": param(kg, (d, sff), ("embed", "mlp"), dtype=dtype),
+            "up": param(ku, (d, sff), ("embed", "mlp"), dtype=dtype),
+            "down": param(kd, (sff, d), ("mlp", "embed"), dtype=dtype),
+        }
+    return p
+
+
+def moe_ffn(p, cfg, x: Array):
+    """x: (B, S, d) → (out (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    e, k = cfg.num_experts, cfg.top_k
+    t = b * s
+    xf = x.reshape(t, d)
+
+    logits = (xf.astype(jnp.float32) @ p["router"])          # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    topw, tope = jax.lax.top_k(probs, k)                     # (T, k)
+    topw = topw / jnp.maximum(topw.sum(-1, keepdims=True), 1e-9)
+
+    # load-balancing aux (Switch): E * Σ_e fraction_tokens_e · mean_prob_e
+    me = probs.mean(axis=0)
+    ce = jnp.zeros((e,), jnp.float32).at[tope.reshape(-1)].add(1.0) / (t * k)
+    aux = cfg.router_aux_weight * e * jnp.sum(me * ce)
+
+    capacity = max(int(cfg.capacity_factor * t * k / e), 1)
+
+    # sort-based dispatch ---------------------------------------------------
+    # Flat (T·k, …) dispatch rows are annotated with the "tokens" logical
+    # axis (→ data sharding): at 7168-wide models these tensors are ~15 GB
+    # replicated — the single biggest memory lever in the MoE cells
+    # (EXPERIMENTS.md §Perf).  GSPMD turns the token-sharded → expert-sharded
+    # scatter into the EP all-to-all.
+    flat_e = tope.reshape(-1)                                # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), k)
+    flat_w = topw.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)
+    se, st_, sw = flat_e[order], flat_t[order], flat_w[order]
+    # rank within expert queue = position − start offset of that expert
+    counts = jnp.zeros((e,), jnp.int32).at[se].add(1)
+    starts = jnp.concatenate([jnp.zeros((1,), jnp.int32),
+                              jnp.cumsum(counts)[:-1]])
+    rank = jnp.arange(t * k, dtype=jnp.int32) - starts[se]
+    keep = rank < capacity
+    slot = jnp.where(keep, rank, capacity - 1)
+
+    # gather tokens into (E, C, d) expert buffers
+    rows = jnp.where(keep[:, None], xf[st_], 0)
+    rows = shard_act(rows, ("tokens", "embed"))
+    buf = jnp.zeros((e, capacity, d), x.dtype)
+    buf = buf.at[se, slot].add(rows)
+    buf = shard_act(buf, ("experts", None, "embed"))
+
+    h = silu(jnp.einsum("ecd,edf->ecf", buf, p["gate"])) * \
+        jnp.einsum("ecd,edf->ecf", buf, p["up"])
+    h = shard_act(h, ("experts", None, "expert_mlp"))
+    out_buf = jnp.einsum("ecf,efd->ecd", h, p["down"])
+    out_buf = shard_act(out_buf, ("experts", None, "embed"))
+
+    # combine back to tokens, weighted by router prob
+    contrib = out_buf[se, slot] * jnp.where(keep, sw, 0.0)[:, None].astype(x.dtype)
+    contrib = shard_act(contrib, ("tokens", "embed"))
+    yf = jnp.zeros((t, d), x.dtype).at[st_].add(contrib)
+    yf = shard_act(yf, ("tokens", "embed"))
+
+    if cfg.num_shared_experts:
+        sp = p["shared"]
+        sh = silu(xf @ sp["gate"]) * (xf @ sp["up"])
+        yf = yf + sh @ sp["down"]
+    return yf.reshape(b, s, d), aux

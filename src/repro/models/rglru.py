@@ -1,0 +1,110 @@
+"""RG-LRU recurrent block (Griffin, arXiv:2402.19427; RecurrentGemma).
+
+The recurrent block is:   x → [linear branch: GeLU(W_gate x)]
+                            → [recurrence branch: conv1d(W_x x) → RG-LRU]
+                          merged by elementwise product → W_out.
+
+RG-LRU recurrence (per channel):
+    r_t = σ(W_r x_t)                      recurrence gate
+    i_t = σ(W_i x_t)                      input gate
+    a_t = exp(c · r_t · log a)            with  log a = −softplus(Λ) < 0, c = 8
+    h_t = a_t ⊙ h_{t−1} + √(1 − a_t²) ⊙ (i_t ⊙ x_t)
+
+Training uses ``jax.lax.associative_scan`` over the sequence (the linear
+recurrence (a, b) composes associatively) — O(log S) depth, fully parallel;
+decode is the one-step recurrence with an O(1) state.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import gelu, param, shard_act, silu
+
+Array = jax.Array
+_C = 8.0
+
+
+def init_rglru(key, cfg, dtype):
+    w = cfg.lru_width or cfg.d_model
+    ks = jax.random.split(key, 7)
+    return {
+        "w_x": param(ks[0], (cfg.d_model, w), ("embed", "mlp"), dtype=dtype),
+        "w_gate": param(ks[1], (cfg.d_model, w), ("embed", "mlp"), dtype=dtype),
+        "conv_w": param(ks[2], (cfg.conv_width, w), ("conv", "mlp"),
+                        dtype=dtype, scale=0.5),
+        "conv_b": param(ks[3], (w,), ("mlp",), scale="zeros"),
+        "w_r": param(ks[4], (w, w), ("mlp", "mlp2"), dtype=dtype),
+        "w_i": param(ks[5], (w, w), ("mlp", "mlp2"), dtype=dtype),
+        # Λ init so that a ∈ (0.9, 0.999) at r=1 (Griffin appendix)
+        "lam": param(ks[6], (w,), ("mlp",), scale=1.0),
+        "w_out": param(jax.random.fold_in(key, 9), (w, cfg.d_model),
+                       ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _conv(cfg, p, x: Array, conv_state: Array | None = None):
+    w = cfg.conv_width
+    if conv_state is not None:
+        xin = jnp.concatenate([conv_state, x], axis=1)
+    else:
+        xin = jnp.pad(x, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(xin[:, i:i + x.shape[1]] * p["conv_w"][i] for i in range(w))
+    return (out + p["conv_b"]).astype(x.dtype), xin[:, -(w - 1):]
+
+
+def _gates(p, x: Array):
+    """log_a (f32) and gated input; x is the conv'd recurrence branch."""
+    r = jax.nn.sigmoid((x @ p["w_r"]).astype(jnp.float32))
+    i = jax.nn.sigmoid((x @ p["w_i"]).astype(jnp.float32))
+    log_a = -_C * r * jax.nn.softplus(p["lam"].astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a * a, 1e-12)) * i * x.astype(jnp.float32)
+    return a, gated
+
+
+def rglru_scan(p, x: Array):
+    """(B,S,W) → (B,S,W) via associative scan of h_t = a_t h_{t−1} + b_t."""
+    a, b = _gates(p, x)
+
+    def combine(l, r):
+        (al, bl), (ar, br) = l, r
+        return al * ar, bl * ar + br
+
+    _, h = jax.lax.associative_scan(combine, (a, b), axis=1)
+    return h
+
+
+def rglru_block(p, cfg, x: Array):
+    """Full recurrent block, training path."""
+    gate = gelu(x @ p["w_gate"])
+    rec, _ = _conv(cfg, p, x @ p["w_x"])
+    h = rglru_scan(p, rec)
+    h = shard_act(h.astype(x.dtype), ("batch", "seq", "mlp"))
+    return (h * gate) @ p["w_out"]
+
+
+def init_rglru_cache(cfg, batch: int, dtype):
+    w = cfg.lru_width or cfg.d_model
+    return {
+        "h": jnp.zeros((batch, w), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, w), dtype),
+    }
+
+
+def rglru_prefill(p, cfg, x: Array, cache):
+    gate = gelu(x @ p["w_gate"])
+    rec, conv_state = _conv(cfg, p, x @ p["w_x"])
+    h = rglru_scan(p, rec)
+    out = (h.astype(x.dtype) * gate) @ p["w_out"]
+    return out, {"h": h[:, -1], "conv": conv_state}
+
+
+def rglru_decode(p, cfg, x: Array, cache):
+    gate = gelu(x @ p["w_gate"])
+    rec, conv_state = _conv(cfg, p, x @ p["w_x"], cache["conv"])
+    a, b = _gates(p, rec)
+    h = a[:, 0] * cache["h"] + b[:, 0]
+    out = (h[:, None].astype(x.dtype) * gate) @ p["w_out"]
+    return out, {"h": h, "conv": conv_state}

@@ -1,0 +1,203 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060).
+
+Training/prefill use the chunked SSD algorithm: quadratic attention-like
+einsums *within* fixed-size chunks plus a linear inter-chunk state
+recurrence; decode is the pure recurrence with an O(1) state
+``(B, H, P, N)`` + a depthwise-conv ring — which is why this arch owns the
+long_500k cell.
+
+Block layout (mamba2-style):
+    in_proj → [z (gate) | x | B | C | dt]
+    depthwise causal conv over [x|B|C] (width 4), SiLU
+    SSD(x·dt, A·dt, B, C) + D·x skip
+    RMSNorm(gated by z) → out_proj
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import init_rms, param, rms_norm, shard_act, silu
+
+Array = jax.Array
+
+
+def _dims(cfg):
+    d_inner = cfg.ssm_expand * cfg.d_model
+    nheads = cfg.ssm_heads or d_inner // cfg.ssm_head_dim
+    return d_inner, nheads, cfg.ssm_head_dim, cfg.ssm_state
+
+
+def init_ssm(key, cfg, dtype):
+    d_inner, h, p_, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    ks = jax.random.split(key, 6)
+    proj_out = 2 * d_inner + 2 * n + h
+    return {
+        "in_proj": param(ks[0], (cfg.d_model, proj_out), ("embed", "mlp"),
+                         dtype=dtype),
+        "conv_w": param(ks[1], (cfg.conv_width, conv_dim), ("conv", "mlp"),
+                        dtype=dtype, scale=0.5),
+        "conv_b": param(ks[2], (conv_dim,), ("mlp",), scale="zeros"),
+        # A stored as log(-A): A = -exp(a_log) ∈ (−∞, 0)
+        "a_log": param(ks[3], (h,), ("heads",), scale="zeros"),
+        "d_skip": param(ks[4], (h,), ("heads",), scale="ones"),
+        "dt_bias": param(ks[5], (h,), ("heads",), scale="zeros"),
+        "out_norm": init_rms(jax.random.fold_in(key, 7), d_inner,
+                             axes=("mlp",)),
+        "out_proj": param(jax.random.fold_in(key, 8), (d_inner, cfg.d_model),
+                          ("mlp", "embed"), dtype=dtype),
+    }
+
+
+def _split_proj(cfg, zxbcdt: Array):
+    d_inner, h, p_, n = _dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [d_inner, 2 * d_inner + 2 * n], axis=-1)
+    return z, xbc, dt
+
+
+def _conv(cfg, p, xbc: Array, conv_state: Array | None = None):
+    """Depthwise causal conv1d (width W).  conv_state: (B, W-1, C) history."""
+    w = cfg.conv_width
+    if conv_state is not None:
+        xbc_in = jnp.concatenate([conv_state, xbc], axis=1)
+    else:
+        xbc_in = jnp.pad(xbc, ((0, 0), (w - 1, 0), (0, 0)))
+    out = sum(xbc_in[:, i:i + xbc.shape[1]] * p["conv_w"][i]
+              for i in range(w))
+    return silu(out + p["conv_b"]).astype(xbc.dtype), xbc_in[:, -(w - 1):]
+
+
+def _segsum(x: Array) -> Array:
+    """(..., T) → (..., T, T) lower-tri cumulative sums: out[i,j] = Σ_{j<k≤i} x_k."""
+    t = x.shape[-1]
+    cs = jnp.cumsum(x, axis=-1)
+    out = cs[..., :, None] - cs[..., None, :]
+    mask = jnp.tril(jnp.ones((t, t), bool), k=0)
+    return jnp.where(mask, out, -jnp.inf)
+
+
+def ssd_chunked(cfg, x: Array, dt: Array, b_in: Array, c_in: Array, a: Array,
+                init_state: Array | None = None):
+    """Chunked SSD scan.
+
+    x: (B,S,H,P)  dt: (B,S,H)  b_in/c_in: (B,S,N)  a: (H,) negative reals.
+    Returns y: (B,S,H,P), final_state: (B,H,P,N).
+    """
+    bsz, s, h, p_ = x.shape
+    in_dtype = x.dtype
+    n = b_in.shape[-1]
+    cs = min(cfg.chunk_size, s)
+    assert s % cs == 0, f"seq {s} not divisible by chunk {cs}"
+    nc = s // cs
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32))              # (B,S,H) ≥ 0
+    dta = dt * a[None, None, :]                               # (B,S,H) ≤ 0
+    xdt = x * dt[..., None].astype(x.dtype)
+
+    def r(t_):  # (B,S,…) → (B,nc,cs,…)
+        return t_.reshape((bsz, nc, cs) + t_.shape[2:])
+
+    xc, dtac, bc, cc = r(xdt), r(dta), r(b_in), r(c_in)
+
+    # 1) intra-chunk (quadratic within the chunk)
+    l = jnp.exp(_segsum(dtac.transpose(0, 1, 3, 2)))          # (B,nc,H,cs,cs)
+    scores = jnp.einsum("bcin,bcjn,bchij->bchij",
+                        cc, bc, l.astype(cc.dtype))
+    y_diag = jnp.einsum("bchij,bcjhp->bcihp", scores, xc)
+
+    # 2) chunk-final states
+    a_cum = jnp.cumsum(dtac, axis=2)                          # (B,nc,cs,H)
+    decay_to_end = jnp.exp(a_cum[:, :, -1:, :] - a_cum)       # (B,nc,cs,H)
+    states = jnp.einsum("bcjn,bcjh,bcjhp->bchpn",
+                        bc, decay_to_end.astype(bc.dtype), xc)
+
+    # 3) inter-chunk recurrence over nc (sequential scan, tiny trip count)
+    chunk_decay = jnp.exp(a_cum[:, :, -1, :])                 # (B,nc,H)
+
+    def step(carry, inp):
+        st, dec = inp
+        new = carry * dec[..., None, None].astype(carry.dtype) + st
+        return new, carry  # emit the state *entering* this chunk
+
+    init = (jnp.zeros((bsz, h, p_, n), x.dtype) if init_state is None
+            else init_state)
+    final, entering = jax.lax.scan(
+        step, init,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)))
+    entering = entering.transpose(1, 0, 2, 3, 4)              # (B,nc,H,P,N)
+
+    # 4) inter-chunk contribution
+    decay_from_start = jnp.exp(a_cum)                         # (B,nc,cs,H)
+    y_off = jnp.einsum("bcin,bcih,bchpn->bcihp",
+                       cc, decay_from_start.astype(cc.dtype), entering)
+
+    y = (y_diag + y_off).reshape(bsz, s, h, p_).astype(in_dtype)
+    return y, final
+
+
+def ssm_block(p, cfg, x: Array):
+    """Full Mamba-2 block, training path.  x: (B,S,D) → (B,S,D)."""
+    d_inner, h, hp, n = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc, _ = _conv(cfg, p, xbc)
+    xs, b_in, c_in = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xs = shard_act(xs.reshape(x.shape[0], x.shape[1], h, hp),
+                   ("batch", "seq", "heads", None))
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, _ = ssd_chunked(cfg, xs, dt + p["dt_bias"], b_in, c_in, a)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(x.shape[0], x.shape[1], d_inner)
+    y = rms_norm((y * silu(z)).astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"]
+
+
+# -- cache (decode) ----------------------------------------------------------
+
+
+def init_ssm_cache(cfg, batch: int, dtype):
+    d_inner, h, hp, n = _dims(cfg)
+    conv_dim = d_inner + 2 * n
+    return {
+        "state": jnp.zeros((batch, h, hp, n), jnp.float32),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_dim), dtype),
+    }
+
+
+def ssm_prefill(p, cfg, x: Array, cache):
+    d_inner, h, hp, n = _dims(cfg)
+    zxbcdt = x @ p["in_proj"]
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc_conv, conv_state = _conv(cfg, p, xbc)
+    xs, b_in, c_in = jnp.split(xbc_conv, [d_inner, d_inner + n], axis=-1)
+    xs = xs.reshape(x.shape[0], x.shape[1], h, hp)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y, final = ssd_chunked(cfg, xs, dt + p["dt_bias"], b_in, c_in, a)
+    y = y + xs * p["d_skip"][None, None, :, None].astype(y.dtype)
+    y = y.reshape(x.shape[0], x.shape[1], d_inner)
+    y = rms_norm((y * silu(z)).astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    cache = {"state": final.astype(jnp.float32), "conv": conv_state}
+    return y @ p["out_proj"], cache
+
+
+def ssm_decode(p, cfg, x: Array, cache):
+    """One-token recurrence: h' = exp(dt·A)·h + dt·B·x ; y = C·h' + D·x."""
+    d_inner, h, hp, n = _dims(cfg)
+    bsz = x.shape[0]
+    zxbcdt = x @ p["in_proj"]                                 # (B,1,…)
+    z, xbc, dt = _split_proj(cfg, zxbcdt)
+    xbc, conv_state = _conv(cfg, p, xbc, cache["conv"])
+    xs, b_in, c_in = jnp.split(xbc, [d_inner, d_inner + n], axis=-1)
+    xs = xs.reshape(bsz, h, hp)
+    dt = jax.nn.softplus(dt[:, 0] + p["dt_bias"])             # (B,H)
+    a = -jnp.exp(p["a_log"].astype(jnp.float32))
+    decay = jnp.exp(dt * a[None, :])                          # (B,H)
+    dbx = jnp.einsum("bh,bn,bhp->bhpn", dt, b_in[:, 0], xs.astype(jnp.float32))
+    state = cache["state"] * decay[..., None, None] + dbx
+    y = jnp.einsum("bhpn,bn->bhp", state, c_in[:, 0].astype(jnp.float32))
+    y = y.astype(x.dtype) + xs * p["d_skip"][None, :, None].astype(x.dtype)
+    y = y.reshape(bsz, 1, d_inner)
+    y = rms_norm((y * silu(z)).astype(x.dtype), p["out_norm"], cfg.norm_eps)
+    return y @ p["out_proj"], {"state": state, "conv": conv_state}

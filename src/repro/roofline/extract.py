@@ -1,0 +1,193 @@
+"""Roofline-term extraction from compiled XLA artifacts (no real hardware).
+
+Per (arch × shape × mesh) cell we derive three per-chip time terms
+(TPU v5e constants from launch/mesh.py):
+
+    compute    = HLO_FLOPs_per_device / 197e12
+    memory     = HLO_bytes_per_device / 819e9
+    collective = collective_bytes_per_device / 50e9
+
+``cost_analysis()`` is per-device post-SPMD (verified empirically —
+tools/probes); collective bytes are parsed from the partitioned HLO: we sum
+the *output* shape bytes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute instruction (output size ≈ bytes crossing
+the links per device for ring algorithms, the standard approximation).
+
+**Scan correction**: XLA counts a while-loop body once.  Layer stacks are
+scanned, so cells are costed from 1-group and 2-group *unrolled* compiles:
+
+    cost(L groups) = cost(1) + (L − 1) · (cost(2) − cost(1))
+
+This is exact for homogeneous stacks (every group identical) and is the
+documented methodology in EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Optional
+
+import numpy as np
+
+from ..launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# e.g.:  %all-reduce.5 = f32[256,1024]{1,0} all-reduce(%x), replica_groups=...
+_INSTR_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    nbytes = _DTYPE_BYTES.get(dtype)
+    if nbytes is None:
+        return 0
+    if not dims:
+        return nbytes
+    n = 1
+    for d in dims.split(","):
+        n *= int(d)
+    return n * nbytes
+
+
+def collective_bytes(hlo_text: str) -> dict:
+    """Sum output bytes per collective kind from (partitioned) HLO text.
+    ``-done`` halves of async pairs are skipped (counted at ``-start``)."""
+    out = {k: 0 for k in _COLLECTIVES}
+    counts = {k: 0 for k in _COLLECTIVES}
+    for m in _INSTR_RE.finditer(hlo_text):
+        dtype, dims, kind = m.group(1), m.group(2), m.group(3)
+        if "-done(" in m.group(0):
+            continue
+        out[kind] += _shape_bytes(dtype, dims)
+        counts[kind] += 1
+    return {"bytes": out, "counts": counts,
+            "total_bytes": sum(out.values())}
+
+
+@dataclasses.dataclass
+class CellCost:
+    """Per-device costs for one compiled step."""
+
+    flops: float
+    bytes_accessed: float
+    coll_bytes: float
+    coll_counts: dict
+
+    @classmethod
+    def from_compiled(cls, compiled) -> "CellCost":
+        ca = compiled.cost_analysis()
+        coll = collective_bytes(compiled.as_text())
+        return cls(flops=float(ca.get("flops", 0.0)),
+                   bytes_accessed=float(ca.get("bytes accessed", 0.0)),
+                   coll_bytes=float(coll["total_bytes"]),
+                   coll_counts=coll["counts"])
+
+    def linearize(self, other: "CellCost", groups: int) -> "CellCost":
+        """self = 1-group cost, other = 2-group cost → full-stack cost."""
+        d = max(groups - 1, 0)
+        return CellCost(
+            flops=self.flops + d * (other.flops - self.flops),
+            bytes_accessed=self.bytes_accessed + d * (other.bytes_accessed -
+                                                      self.bytes_accessed),
+            coll_bytes=self.coll_bytes + d * (other.coll_bytes -
+                                              self.coll_bytes),
+            coll_counts={k: self.coll_counts.get(k, 0) + d * (
+                other.coll_counts.get(k, 0) - self.coll_counts.get(k, 0))
+                for k in _COLLECTIVES},
+        )
+
+
+@dataclasses.dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    model_flops: float          # 6·N_active·D analytic
+    hlo_flops_global: float
+    useful_ratio: float
+
+    @classmethod
+    def from_cost(cls, cost: CellCost, n_chips: int,
+                  model_flops: float) -> "Roofline":
+        compute = cost.flops / PEAK_FLOPS_BF16
+        memory = cost.bytes_accessed / HBM_BW
+        coll = cost.coll_bytes / ICI_BW
+        terms = {"compute": compute, "memory": memory, "collective": coll}
+        dominant = max(terms, key=terms.get)
+        hlo_global = cost.flops * n_chips
+        return cls(compute_s=compute, memory_s=memory, collective_s=coll,
+                   dominant=dominant, model_flops=model_flops,
+                   hlo_flops_global=hlo_global,
+                   useful_ratio=(model_flops / hlo_global
+                                 if hlo_global > 0 else 0.0))
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+def active_params(cfg) -> float:
+    """Parameter count that each token touches (MoE: top-k + shared only)."""
+    d = cfg.d_model
+    n = 0.0
+    # embeddings (tied or not, the matmul cost counts once at the head)
+    n += cfg.vocab_size * d
+    kinds = cfg.pattern_layers
+    for kind in kinds:
+        if kind in ("global", "local"):
+            if cfg.attention == "mla":
+                n += d * cfg.q_lora_rank + cfg.q_lora_rank * cfg.num_heads * (
+                    cfg.qk_nope_dim + cfg.qk_rope_dim)
+                n += d * cfg.kv_lora_rank + d * cfg.qk_rope_dim
+                n += cfg.kv_lora_rank * cfg.num_heads * (
+                    cfg.qk_nope_dim + cfg.v_head_dim)
+                n += cfg.num_heads * cfg.v_head_dim * d
+            else:
+                n += d * cfg.num_heads * cfg.head_dim * 2  # wq, wo
+                n += d * cfg.num_kv_heads * cfg.head_dim * 2
+        elif kind == "rglru":
+            w = cfg.lru_width or d
+            n += d * w * 2 + w * w * 2 + w * d
+        elif kind == "ssm":
+            d_inner = cfg.ssm_expand * d
+            nh = cfg.ssm_heads or d_inner // cfg.ssm_head_dim
+            proj = 2 * d_inner + 2 * cfg.ssm_state + nh
+            n += d * proj + d_inner * d
+    # FFN: dense layers full; MoE layers top-k routed + shared
+    moe_layers = (len(kinds) - cfg.first_k_dense) if cfg.num_experts else 0
+    dense_layers = len(kinds) - moe_layers
+    if cfg.attention != "none":  # ssm blocks have no separate FFN
+        n += dense_layers * 3 * d * cfg.d_ff if cfg.d_ff else 0
+    if cfg.num_experts:
+        per_expert = 3 * d * cfg.moe_d_ff
+        n += moe_layers * (cfg.top_k + cfg.num_shared_experts) * per_expert
+    if cfg.is_encoder_decoder:
+        # decoder cross-attn on top of the enc+dec self stacks
+        n += cfg.dec_layers * d * cfg.num_heads * cfg.head_dim * 4
+    return float(n)
+
+
+def model_flops_for(cfg, shape_kind: str, seq_len: int,
+                    global_batch: int) -> float:
+    """6·N_active·D(tokens); decode processes 1 token per sequence;
+    train pays 3× the forward (fwd+bwd)."""
+    n_active = active_params(cfg)
+    if shape_kind == "train":
+        tokens = global_batch * seq_len
+        return 6.0 * n_active * tokens
+    if shape_kind == "prefill":
+        tokens = global_batch * seq_len
+        return 2.0 * n_active * tokens
+    tokens = global_batch * 1
+    return 2.0 * n_active * tokens

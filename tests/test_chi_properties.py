@@ -1,0 +1,152 @@
+"""Property-based tests (hypothesis) for the system's core invariants:
+
+  1. CHI bounds are sound for arbitrary masks/ROIs/value ranges.
+  2. Aligned queries are answered exactly (lower == upper).
+  3. Engine results ≡ brute-force full scan for all query classes.
+  4. Interval arithmetic on expressions preserves soundness.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import chi, cp
+from repro.core.exprs import CP, BinOp, RoiArea
+
+
+def _mask_batch(seed, b, h, w, style):
+    rng = np.random.default_rng(seed)
+    if style == 0:      # uniform noise
+        return rng.random((b, h, w), dtype=np.float32)
+    if style == 1:      # blobby (spatially coherent)
+        from repro.data.masks import saliency_masks
+        return saliency_masks(b, h, w, seed=seed)[0]
+    if style == 2:      # near-binary
+        return (rng.random((b, h, w)) > 0.5).astype(np.float32) * 0.999
+    return np.zeros((b, h, w), np.float32)  # constant
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    style=st.integers(0, 3),
+    grid=st.sampled_from([2, 4, 8]),
+    nb=st.sampled_from([2, 4, 16]),
+    hw=st.tuples(st.integers(8, 48), st.integers(8, 48)),
+    roi=st.tuples(st.floats(0, 1), st.floats(0, 1), st.floats(0, 1),
+                  st.floats(0, 1)),
+    vrange=st.tuples(st.floats(0, 1), st.floats(0, 1)),
+)
+def test_bounds_sound(seed, style, grid, nb, hw, roi, vrange):
+    h, w = hw
+    b = 4
+    masks = _mask_batch(seed, b, h, w, style)
+    cfg = chi.CHIConfig(grid=grid, num_bins=nb, height=h, width=w)
+    table = chi.build_chi_np(masks, cfg)
+    r0 = int(roi[0] * h); r1 = int(roi[2] * h)
+    c0 = int(roi[1] * w); c1 = int(roi[3] * w)
+    r0, r1 = min(r0, r1), max(r0, r1)
+    c0, c1 = min(c0, c1), max(c0, c1)
+    lv, uv = sorted(vrange)
+    rois = np.tile([r0, c0, r1, c1], (b, 1))
+    lb, ub = chi.chi_bounds(np.asarray(table), cfg, rois, lv, uv)
+    lb, ub = np.asarray(lb), np.asarray(ub)
+    exact = np.array([cp.cp_exact_np(m, (r0, c0, r1, c1), lv, uv)
+                      for m in masks])
+    assert np.all(lb <= exact), (lb, exact)
+    assert np.all(exact <= ub), (exact, ub)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    grid=st.sampled_from([2, 4, 8]),
+    nb=st.sampled_from([4, 8]),
+    cells=st.tuples(st.integers(0, 8), st.integers(0, 8), st.integers(0, 8),
+                    st.integers(0, 8)),
+    bins=st.tuples(st.integers(0, 8), st.integers(0, 8)),
+)
+def test_aligned_queries_exact(seed, grid, nb, cells, bins):
+    h = w = 32
+    masks = _mask_batch(seed, 3, h, w, 1)
+    cfg = chi.CHIConfig(grid=grid, num_bins=nb, height=h, width=w)
+    table = chi.build_chi_np(masks, cfg)
+    rb, cb, edges = cfg.row_bounds, cfg.col_bounds, cfg.edges
+    i0, i1 = sorted((cells[0] % (grid + 1), cells[1] % (grid + 1)))
+    j0, j1 = sorted((cells[2] % (grid + 1), cells[3] % (grid + 1)))
+    k0, k1 = sorted((1 + bins[0] % (nb - 1), 1 + bins[1] % (nb - 1)))
+    roi = (int(rb[i0]), int(cb[j0]), int(rb[i1]), int(cb[j1]))
+    lv, uv = float(edges[k0]), float(edges[k1])
+    rois = np.tile(roi, (3, 1))
+    lb, ub = chi.chi_bounds(np.asarray(table), cfg, rois, lv, uv)
+    assert np.array_equal(np.asarray(lb), np.asarray(ub))
+    exact = np.array([cp.cp_exact_np(m, roi, lv, uv) for m in masks])
+    assert np.array_equal(np.asarray(lb), exact)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    op=st.sampled_from(["<", "<=", ">", ">="]),
+    frac=st.floats(0.0, 1.0),
+    expr_kind=st.integers(0, 2),
+)
+def test_filter_matches_full_scan(seed, op, frac, expr_kind):
+    from repro.core import engine, store
+    from repro.data.masks import object_boxes, saliency_masks
+    b, h, w = 24, 32, 32
+    masks = saliency_masks(b, h, w, seed=seed)[0]
+    rois = object_boxes(b, h, w, seed=seed + 1)
+    meta = np.zeros(b, store.MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(b)
+    meta["image_id"] = np.arange(b)
+    cfg = chi.CHIConfig(grid=4, num_bins=8, height=h, width=w)
+    st_ = store.MaskStore.create_memory(masks, meta, cfg)
+    exprs = [CP("provided", 0.6, 1.0),
+             BinOp("/", CP("provided", 0.6, 1.0), RoiArea("provided")),
+             BinOp("+", CP(None, 0.0, 0.3), CP(None, 0.7, 1.0))]
+    expr = exprs[expr_kind]
+    tmax = (h * w) if expr_kind != 1 else 1.0
+    thr = frac * tmax
+    ids_i, _ = engine.filter_query(st_, expr, op, thr, provided_rois=rois)
+    ids_s, _ = engine.filter_query(st_, expr, op, thr, provided_rois=rois,
+                                   use_index=False)
+    assert set(ids_i) == set(ids_s)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), k=st.integers(1, 20),
+       desc=st.booleans())
+def test_topk_matches_full_scan(seed, k, desc):
+    from repro.core import engine, store
+    from repro.data.masks import saliency_masks
+    b, h, w = 30, 32, 32
+    masks = saliency_masks(b, h, w, seed=seed)[0]
+    meta = np.zeros(b, store.MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(b)
+    meta["image_id"] = np.arange(b)
+    cfg = chi.CHIConfig(grid=4, num_bins=8, height=h, width=w)
+    st_ = store.MaskStore.create_memory(masks, meta, cfg)
+    expr = CP(None, 0.5, 0.9)
+    _, sc_i, _ = engine.topk_query(st_, expr, k, desc=desc, verify_batch=7)
+    _, sc_s, _ = engine.topk_query(st_, expr, k, desc=desc, use_index=False)
+    np.testing.assert_allclose(np.sort(sc_i), np.sort(sc_s))
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1),
+       agg=st.sampled_from(["SUM", "AVG", "MIN", "MAX"]))
+def test_scalar_agg_matches_full_scan(seed, agg):
+    from repro.core import engine, store
+    from repro.data.masks import saliency_masks
+    b, h, w = 16, 32, 32
+    masks = saliency_masks(b, h, w, seed=seed)[0]
+    meta = np.zeros(b, store.MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(b)
+    meta["image_id"] = np.arange(b)
+    cfg = chi.CHIConfig(grid=4, num_bins=8, height=h, width=w)
+    st_ = store.MaskStore.create_memory(masks, meta, cfg)
+    expr = CP(None, 0.4, 0.8)
+    v_i, _ = engine.scalar_agg(st_, expr, agg)
+    v_s, _ = engine.scalar_agg(st_, expr, agg, use_index=False)
+    assert abs(v_i - v_s) < 1e-6 * max(abs(v_s), 1)

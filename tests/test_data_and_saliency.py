@@ -1,0 +1,102 @@
+"""Data pipeline, saliency extraction, and augmentation tests."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import load_smoke
+from repro.core import augment, saliency
+from repro.data.masks import object_boxes, saliency_masks
+from repro.data.pipeline import AugmentedData, PrefetchIterator, SyntheticLMData
+from repro.models import build_model
+
+
+def test_pipeline_deterministic_and_host_sharded():
+    cfg = load_smoke("granite_3_2b")
+    d1 = SyntheticLMData(cfg, 16, 8, seed=3)
+    d2 = SyntheticLMData(cfg, 16, 8, seed=3)
+    np.testing.assert_array_equal(d1.batch_at(5)["tokens"],
+                                  d2.batch_at(5)["tokens"])
+    # host sharding: two hosts see different rows, together a full batch
+    h0 = SyntheticLMData(cfg, 16, 8, seed=3, host_index=0, host_count=2)
+    h1 = SyntheticLMData(cfg, 16, 8, seed=3, host_index=1, host_count=2)
+    assert h0.batch_at(0)["tokens"].shape[0] == 4
+    assert not np.array_equal(h0.batch_at(0)["tokens"],
+                              h1.batch_at(0)["tokens"])
+
+
+def test_prefetch_iterator():
+    cfg = load_smoke("granite_3_2b")
+    data = SyntheticLMData(cfg, 8, 4)
+    it = PrefetchIterator(iter([data.batch_at(i) for i in range(5)]), depth=2)
+    batches = list(it)
+    assert len(batches) == 5
+    np.testing.assert_array_equal(batches[2]["tokens"],
+                                  data.batch_at(2)["tokens"])
+
+
+def test_attention_rollout_properties():
+    L, B, Hh, S = 3, 2, 4, 16
+    attn = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(0), (L, B, Hh, S, S)), axis=-1)
+    roll = saliency.attention_rollout(attn)
+    assert roll.shape == (B, S, S)
+    r = np.asarray(roll)
+    assert r.min() >= 0.0 and r.max() < 1.0
+
+
+def test_input_saliency_and_grid():
+    cfg = load_smoke("granite_3_2b")
+    model = build_model(cfg)
+    params, _ = model.init(jax.random.PRNGKey(0))
+    tokens = jax.random.randint(jax.random.PRNGKey(1), (2, 32), 0,
+                                cfg.vocab_size)
+    emb = jnp.take(params["embedding"], tokens, axis=0)
+
+    def loss_fn(p, batch, embeddings):
+        # recompute loss with injected embeddings via a linear probe
+        return jnp.sum(embeddings ** 2) * 1e-3  # simple differentiable probe
+
+    scores = saliency.input_saliency(
+        loss_fn, params, {"embeddings": emb, "tokens": tokens})
+    assert scores.shape == (2, 32)
+    grid = saliency.tokens_to_grid(scores, 8, 8)
+    assert grid.shape == (2, 8, 8)
+    up = saliency.resize_mask(grid, 16, 16)
+    assert up.shape == (2, 16, 16)
+
+
+def test_randomize_outside_roi():
+    imgs, _ = saliency_masks(4, 32, 32, seed=0)
+    rois = object_boxes(4, 32, 32, seed=1)
+    out = augment.randomize_outside_roi(jax.random.PRNGKey(0),
+                                        jnp.asarray(imgs), jnp.asarray(rois))
+    out = np.asarray(out)
+    for i in range(4):
+        r0, c0, r1, c1 = rois[i]
+        np.testing.assert_array_equal(out[i, r0:r1, c0:c1],
+                                      imgs[i, r0:r1, c0:c1])
+        outside = np.ones((32, 32), bool)
+        outside[r0:r1, c0:c1] = False
+        assert not np.allclose(out[i][outside], imgs[i][outside])
+
+
+def test_augmented_data_mixes():
+    cfg = load_smoke("granite_3_2b")
+    base = SyntheticLMData(cfg, 16, 8, seed=4)
+    ad = AugmentedData(base)
+    plain = ad.batch_at(0)["tokens"].copy()
+    aug_batch = {"tokens": np.zeros((4, 16), np.int32),
+                 "labels": np.zeros((4, 16), np.int32)}
+    ad.add_augmented(aug_batch)
+    mixed = ad.batch_at(0)["tokens"]
+    assert np.array_equal(mixed[:4], np.zeros((4, 16), np.int32))
+    assert np.array_equal(mixed[4:], plain[4:])
+
+
+def test_expert_utilization_map():
+    probs = jax.nn.softmax(
+        jax.random.normal(jax.random.PRNGKey(2), (2, 64, 8)), axis=-1)
+    m = saliency.expert_utilization_map(probs, 32, 32)
+    assert m.shape == (2, 32, 32)
+    assert float(m.max()) < 1.0

@@ -1,0 +1,123 @@
+"""Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
+swept over shapes and dtypes.  Counts are integers → exact equality."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ops, ref
+from repro.kernels.chi_build import chi_cell_hist_pallas
+from repro.kernels.cp_count import cp_count_multi_pallas, cp_count_pallas
+from repro.kernels.mask_agg import mask_agg_counts_pallas
+
+SHAPES = [(3, 64, 64), (2, 128, 256), (5, 96, 160), (1, 256, 256), (4, 32, 512)]
+DTYPES = [jnp.float32, jnp.bfloat16]
+
+
+def _random(shape, dtype, seed=0):
+    rng = np.random.default_rng(seed)
+    m = rng.random(shape, dtype=np.float32)
+    return jnp.asarray(m, dtype)
+
+
+def _random_rois(b, h, w, seed=1):
+    rng = np.random.default_rng(seed)
+    r = np.sort(rng.integers(0, h + 1, (b, 2)), axis=1)
+    c = np.sort(rng.integers(0, w + 1, (b, 2)), axis=1)
+    return jnp.asarray(np.stack([r[:, 0], c[:, 0], r[:, 1], c[:, 1]], 1),
+                       jnp.int32)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+@pytest.mark.parametrize("dtype", DTYPES)
+def test_cp_count_matches_ref(shape, dtype):
+    b, h, w = shape
+    masks = _random(shape, dtype)
+    rois = _random_rois(b, h, w)
+    got = cp_count_pallas(masks, rois, 0.25, 0.8, interpret=True)
+    want = ref.cp_count_ref(masks, rois, jnp.asarray(0.25, dtype),
+                            jnp.asarray(0.8, dtype))
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape", SHAPES[:3])
+def test_cp_count_full_roi_and_extremes(shape):
+    b, h, w = shape
+    masks = _random(shape, jnp.float32, seed=7)
+    rois = jnp.tile(jnp.asarray([[0, 0, h, w]], jnp.int32), (b, 1))
+    got = cp_count_pallas(masks, rois, 0.0, 1.0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got), h * w)
+    # empty ROI and empty range
+    empty = jnp.tile(jnp.asarray([[5, 5, 5, w]], jnp.int32), (b, 1))
+    got0 = cp_count_pallas(masks, empty, 0.0, 1.0, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got0), 0)
+    got1 = cp_count_pallas(masks, rois, 0.5, 0.5, interpret=True)
+    np.testing.assert_array_equal(np.asarray(got1), 0)
+
+
+@pytest.mark.parametrize("q", [1, 3, 8])
+@pytest.mark.parametrize("shape", SHAPES[:3])
+def test_cp_count_multi_matches_ref(q, shape):
+    b, h, w = shape
+    masks = _random(shape, jnp.float32, seed=3)
+    rng = np.random.default_rng(4)
+    rois = jnp.stack([_random_rois(b, h, w, seed=10 + i) for i in range(q)])
+    bounds = np.sort(rng.random((q, 2)), axis=1)
+    lvs = jnp.asarray(bounds[:, 0], jnp.float32)
+    uvs = jnp.asarray(bounds[:, 1], jnp.float32)
+    got = cp_count_multi_pallas(masks, rois, lvs, uvs, interpret=True)
+    want = ref.cp_count_multi_ref(masks, rois, lvs, uvs)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("shape,grid", [((2, 64, 64), 8), ((3, 128, 256), 16),
+                                        ((1, 256, 256), 16), ((2, 96, 96), 4)])
+@pytest.mark.parametrize("nb", [4, 16])
+def test_chi_cell_hist_matches_ref(shape, grid, nb):
+    masks = _random(shape, jnp.float32, seed=5)
+    edges = jnp.asarray(np.arange(1, nb) / nb, jnp.float32)
+    got = chi_cell_hist_pallas(masks, edges, grid, interpret=True)
+    want = ref.chi_cell_hist_ref(masks, edges, grid)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+    # total count conserved
+    assert int(np.asarray(got).sum()) == int(np.prod(shape))
+
+
+def test_chi_cell_hist_matches_core_chi():
+    """Kernel output, prefix-summed, must equal the CHI built by core.chi."""
+    from repro.core import chi as chi_lib
+    b, h, w, g, nb = 2, 64, 96, 8, 8
+    masks = _random((b, h, w), jnp.float32, seed=11)
+    cfg = chi_lib.CHIConfig(grid=g, num_bins=nb, height=h, width=w)
+    hist = chi_cell_hist_pallas(masks, jnp.asarray(cfg.interior_edges), g,
+                                interpret=True)
+    table = chi_lib.histograms_to_table(hist)
+    want = chi_lib.build_chi_np(np.asarray(masks, np.float32), cfg)
+    np.testing.assert_array_equal(np.asarray(table), want)
+
+
+@pytest.mark.parametrize("s", [2, 3, 5])
+@pytest.mark.parametrize("shape", [(4, 64, 64), (2, 128, 128)])
+def test_mask_agg_matches_ref(s, shape):
+    n, h, w = shape
+    masks = _random((n, s, h, w), jnp.float32, seed=8)
+    rois = _random_rois(n, h, w, seed=9)
+    gi, gu = mask_agg_counts_pallas(masks, rois, 0.6, interpret=True)
+    wi, wu = ref.mask_agg_counts_ref(masks, rois, 0.6)
+    np.testing.assert_array_equal(np.asarray(gi), np.asarray(wi))
+    np.testing.assert_array_equal(np.asarray(gu), np.asarray(wu))
+
+
+def test_ops_wrappers_fallback_cpu():
+    """On CPU the ops layer uses the reference path and still agrees with the
+    forced-interpret Pallas path."""
+    b, h, w = 3, 64, 64
+    masks = _random((b, h, w), jnp.float32, seed=12)
+    rois = _random_rois(b, h, w, seed=13)
+    a = ops.cp_count(masks, rois, 0.2, 0.9)
+    bb = ops.cp_count(masks, rois, 0.2, 0.9, use_pallas=True, interpret=True)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
+    iou = ops.mask_agg_iou(masks.reshape(1, b, h, w),
+                           jnp.asarray([[0, 0, h, w]], jnp.int32), 0.5)
+    assert 0.0 <= float(iou[0]) <= 1.0

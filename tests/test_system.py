@@ -1,0 +1,61 @@
+"""End-to-end behaviour test: the full ML-workflow loop from the demo —
+train a small model → harvest attention masks into the store → query →
+augment → retrain step (Scenario 1, compressed)."""
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import load_smoke
+from repro.core import CHIConfig, MaskStore, queries, saliency
+from repro.core.store import MASK_META_DTYPE
+from repro.data.pipeline import SyntheticLMData
+from repro.models import build_model
+from repro.train.optimizer import OptConfig
+from repro.train.train_loop import init_train_state, make_train_step
+
+
+def test_full_workflow_loop():
+    cfg = load_smoke("granite_3_2b")
+    model = build_model(cfg)
+    opt_cfg = OptConfig(learning_rate=1e-3, warmup_steps=2, total_steps=30)
+    params, axes, opt = init_train_state(model, jax.random.PRNGKey(0), opt_cfg)
+    step = jax.jit(make_train_step(model, opt_cfg))
+    data = SyntheticLMData(cfg, seq_len=32, global_batch=8)
+
+    # 1. train a few steps
+    losses = []
+    for s in range(8):
+        params, opt, metrics = step(params, opt, data.batch_at(s))
+        losses.append(float(metrics["loss"]))
+    assert losses[-1] < losses[0], "training must reduce loss"
+
+    # 2. harvest attention masks into a MaskSearch store
+    batch = data.batch_at(100)
+    maps = model.attention_maps(params, batch)        # (B, H, S, S)
+    masks = saliency.normalize01(jnp.mean(maps, axis=1))
+    masks = np.asarray(masks, np.float32)
+    n, h, w = masks.shape
+    meta = np.zeros(n, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(n)
+    meta["image_id"] = np.arange(n)
+    chi_cfg = CHIConfig(grid=8, num_bins=8, height=h, width=w)
+    store = MaskStore.create_memory(masks, meta, chi_cfg)
+
+    # 3. query: which examples have the least diagonal-band attention?
+    (ids, scores), stats = queries.run(
+        "SELECT mask_id FROM MasksDatabaseView ORDER BY "
+        "CP(mask, full_img, (0.5, 1.0)) ASC LIMIT 4;", store)
+    assert len(ids) == 4
+    assert stats.n_candidates == n
+
+    # 4. augment the selected rows and take another train step
+    from repro.core.augment import mix_augmented
+    sel = np.isin(meta["mask_id"], ids)
+    new_tokens = mix_augmented(jax.random.PRNGKey(7),
+                               jnp.asarray(batch["tokens"]),
+                               jnp.asarray(sel), cfg.vocab_size)
+    batch2 = dict(batch, tokens=np.asarray(new_tokens))
+    params, opt, metrics = step(params, opt, batch2)
+    assert np.isfinite(float(metrics["loss"]))
