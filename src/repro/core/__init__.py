@@ -14,7 +14,8 @@ Public surface:
 
 from .chi import CHIConfig, build_chi, build_chi_np, chi_bounds  # noqa: F401
 from .cp import cp_exact, cp_exact_np, full_roi  # noqa: F401
-from .engine import ExecStats, filter_query, scalar_agg, topk_query  # noqa: F401
+from .engine import (ExecStats, FilterRun, TopKRun, filter_query,  # noqa: F401
+                     scalar_agg, topk_query)
 from .exprs import CP, AggCP, BinOp, Const, RoiArea  # noqa: F401
 from .queries import parse, run  # noqa: F401
 from .store import MASK_META_DTYPE, IOStats, MaskStore  # noqa: F401

@@ -103,24 +103,130 @@ def _exact_for(ctx, expr, idx):
 # ---------------------------------------------------------------------------
 
 
+class _VerifyRun:
+    """Shared machinery of resumable verification runs (DESIGN.md §3).
+
+    Construction runs the bounds pass (or reuses a cached ``bounds=(lb,
+    ub)`` pair from the service planner).  Subclasses fill ``pending``
+    (candidate indices in verification-priority order) and implement
+    :meth:`finished` and :meth:`_apply`.  Verification is then driven
+    either self-contained (:meth:`_drain`) or externally by the service
+    scheduler, which pairs :meth:`take_batch` with :meth:`apply_exact`
+    to fuse batches from many concurrent runs into one kernel pass.
+    """
+
+    def __init__(self, store, expr: Node, *,
+                 positions: Optional[np.ndarray] = None, mask_types=None,
+                 group_by_image: bool = False,
+                 provided_rois: Optional[np.ndarray] = None,
+                 verify_batch: int = 256, bounds=None):
+        self.store = store
+        self.expr = expr
+        self.verify_batch = max(int(verify_batch), 1)
+        self.ctx, self.ids = _make_context(store, expr, positions,
+                                           group_by_image, mask_types,
+                                           provided_rois)
+        self.stats = ExecStats(n_candidates=len(self.ids))
+        t0 = time.perf_counter()
+        if bounds is None:
+            lb, ub = self.ctx.bounds(expr)
+        else:
+            lb, ub = bounds
+        self.stats.bound_time_s = time.perf_counter() - t0
+        self.lb = np.asarray(lb, np.float64)
+        self.ub = np.asarray(ub, np.float64)
+        self.pending = np.empty(0, dtype=np.int64)
+        self.cursor = 0
+
+    @property
+    def n(self) -> int:
+        return len(self.ids)
+
+    def finished(self) -> bool:
+        raise NotImplementedError
+
+    def _apply(self, batch: np.ndarray, values: np.ndarray) -> None:
+        raise NotImplementedError
+
+    def take_batch(self) -> np.ndarray:
+        """Pop the next pending chunk; caller must ``apply_exact`` it."""
+        batch = self.pending[self.cursor:self.cursor + self.verify_batch]
+        self.cursor += len(batch)
+        return batch
+
+    def apply_exact(self, batch: np.ndarray, values: np.ndarray) -> None:
+        self._apply(batch, values)
+        self.stats.n_verified += len(batch)
+        self.stats.n_rounds += 1
+
+    def self_verify(self, batch: np.ndarray) -> None:
+        io0 = self.store.io.bytes_read
+        t0 = time.perf_counter()
+        self.apply_exact(batch, _exact_for(self.ctx, self.expr, batch))
+        self.stats.verify_time_s += time.perf_counter() - t0
+        self.stats.bytes_loaded += self.store.io.bytes_read - io0
+
+    def _drain(self) -> None:
+        while not self.finished():
+            batch = self.take_batch()
+            if not len(batch):
+                break
+            self.self_verify(batch)
+
+
+class FilterRun(_VerifyRun):
+    """Resumable verification state for a filter query: the undecided
+    residue is verified in chunks until exhausted."""
+
+    def __init__(self, store, expr: Node, op: str, threshold: float, *,
+                 positions: Optional[np.ndarray] = None, mask_types=None,
+                 group_by_image: bool = False,
+                 provided_rois: Optional[np.ndarray] = None,
+                 verify_batch: int = 256, bounds=None):
+        if op not in _OPS:
+            raise ValueError(f"bad comparison {op!r}")
+        self.op = op
+        self.threshold = threshold
+        super().__init__(store, expr, positions=positions,
+                         mask_types=mask_types, group_by_image=group_by_image,
+                         provided_rois=provided_rois,
+                         verify_batch=verify_batch, bounds=bounds)
+        accept, reject = _accept_reject(op, self.lb, self.ub, threshold)
+        self.accept = np.asarray(accept).copy()
+        self.pending = np.nonzero(~(accept | reject))[0]
+        self.stats.n_decided_by_bounds = self.n - len(self.pending)
+
+    def finished(self) -> bool:
+        return self.cursor >= len(self.pending)
+
+    def _apply(self, batch: np.ndarray, values: np.ndarray) -> None:
+        self.accept[batch] = _cmp(self.op, values, self.threshold)
+
+    def ensure(self) -> None:
+        self._drain()
+
+    def result(self) -> np.ndarray:
+        return self.ids[self.accept]
+
+
 def filter_query(store, expr: Node, op: str, threshold: float, *,
                  positions: Optional[np.ndarray] = None,
                  mask_types=None, group_by_image: bool = False,
                  provided_rois: Optional[np.ndarray] = None,
-                 use_index: bool = True):
+                 use_index: bool = True, bounds=None):
     """``SELECT {mask_id|image_id} WHERE expr op threshold``.
 
     Returns ``(ids, stats)``.  ``use_index=False`` is the full-scan baseline
-    (the paper's "without MaskSearch").
+    (the paper's "without MaskSearch").  ``bounds`` optionally supplies a
+    precomputed ``(lb, ub)`` pair (the service's bounds cache).
     """
-    ctx, ids = _make_context(store, expr, positions, group_by_image,
-                             mask_types, provided_rois,
-                             partial_rows=use_index)
-    n = len(ids)
-    stats = ExecStats(n_candidates=n)
-    io_before = store.io.bytes_read
-
     if not use_index:
+        ctx, ids = _make_context(store, expr, positions, group_by_image,
+                                 mask_types, provided_rois,
+                                 partial_rows=False)
+        n = len(ids)
+        stats = ExecStats(n_candidates=n)
+        io_before = store.io.bytes_read
         t0 = time.perf_counter()
         exact = _exact_for(ctx, expr, np.arange(n))
         keep = _cmp(op, exact, threshold)
@@ -129,22 +235,12 @@ def filter_query(store, expr: Node, op: str, threshold: float, *,
         stats.bytes_loaded = store.io.bytes_read - io_before
         return ids[keep], stats
 
-    t0 = time.perf_counter()
-    lb, ub = ctx.bounds(expr)
-    accept, reject = _accept_reject(op, lb, ub, threshold)
-    stats.bound_time_s = time.perf_counter() - t0
-    undecided = np.nonzero(~(accept | reject))[0]
-    stats.n_decided_by_bounds = n - len(undecided)
-
-    t0 = time.perf_counter()
-    if len(undecided):
-        exact = _exact_for(ctx, expr, undecided)
-        accept = accept.copy()
-        accept[undecided] = _cmp(op, exact, threshold)
-    stats.n_verified = len(undecided)
-    stats.verify_time_s = time.perf_counter() - t0
-    stats.bytes_loaded = store.io.bytes_read - io_before
-    return ids[accept], stats
+    run = FilterRun(store, expr, op, threshold, positions=positions,
+                    mask_types=mask_types, group_by_image=group_by_image,
+                    provided_rois=provided_rois,
+                    verify_batch=max(len(store), 1), bounds=bounds)
+    run.ensure()
+    return run.result(), run.stats
 
 
 def _cmp(op, values, threshold):
@@ -158,20 +254,120 @@ def _cmp(op, values, threshold):
 # ---------------------------------------------------------------------------
 
 
+class TopKRun(_VerifyRun):
+    """Resumable top-k verification state (the batched loop of §3, DESIGN.md).
+
+    Construction runs the bounds pass only; verification is then driven
+    either by :meth:`ensure` (the one-shot ``topk_query`` path) or
+    externally, one :meth:`take_batch`/:meth:`apply_exact` round at a time
+    (the service's sessions and fused scheduler).  The finality target ``k``
+    can *grow* between rounds — :meth:`target` re-derives the static pruning
+    frontier from the cached bounds, so a GUI's "next 25" costs only the
+    extra verification batches, never a fresh bounds pass.
+    """
+
+    def __init__(self, store, expr: Node, *, desc: bool = True,
+                 positions: Optional[np.ndarray] = None, mask_types=None,
+                 group_by_image: bool = False,
+                 provided_rois: Optional[np.ndarray] = None,
+                 verify_batch: int = 256, bounds=None):
+        self.desc = desc
+        super().__init__(store, expr, positions=positions,
+                         mask_types=mask_types, group_by_image=group_by_image,
+                         provided_rois=provided_rois,
+                         verify_batch=verify_batch, bounds=bounds)
+        # Scores: exact where bounds coincide, else pending verification.
+        self.scores = np.where(self.lb == self.ub, self.lb, np.nan)
+        self.known = ~np.isnan(self.scores)
+        self._known0 = self.known.copy()
+        self.k = 0
+        self.alive = np.zeros(self.n, dtype=bool)
+
+    def target(self, k: int) -> int:
+        """Set/raise the finality target to ``k`` (clamped to n) and
+        re-derive the static pruning frontier.  Idempotent for equal k."""
+        k = min(int(k), self.n)
+        if k == self.k:
+            return k
+        self.k = k
+        n = self.n
+        if n == 0 or k <= 0:
+            self.alive = np.zeros(n, dtype=bool)
+            self.pending = np.empty(0, dtype=np.int64)
+            self.cursor = 0
+            return k
+        # Static pruning: a candidate can make top-k only if its optimistic
+        # bound beats the k-th best pessimistic bound.
+        if self.desc:
+            tau = np.partition(self.lb, -k)[-k]
+            self.alive = self.ub >= tau
+        else:
+            tau = np.partition(self.ub, k - 1)[k - 1]
+            self.alive = self.lb <= tau
+        self.stats.n_decided_by_bounds = int(
+            n - np.count_nonzero(self.alive & ~self._known0))
+        pending = np.nonzero(self.alive & ~self.known)[0]
+        # verify most-promising first
+        key = self.ub[pending] if self.desc else self.lb[pending]
+        self.pending = pending[np.argsort(-key if self.desc else key,
+                                          kind="stable")]
+        self.cursor = 0
+        return k
+
+    def finished(self) -> bool:
+        """True iff the current top-``k`` can no longer change."""
+        have = np.nonzero(self.known & self.alive)[0]
+        if len(have) >= self.k > 0:
+            vals = self.scores[have]
+            kth = (np.partition(vals, -self.k)[-self.k] if self.desc
+                   else np.partition(vals, self.k - 1)[self.k - 1])
+            rest = self.pending[self.cursor:]
+            if len(rest) == 0:
+                return True
+            best_possible = (self.ub[rest].max() if self.desc
+                             else self.lb[rest].min())
+            # strict domination → no unverified candidate can displace top-k
+            return ((self.desc and best_possible < kth) or
+                    (not self.desc and best_possible > kth))
+        return self.cursor >= len(self.pending)
+
+    def _apply(self, batch: np.ndarray, values: np.ndarray) -> None:
+        self.scores[batch] = values
+        self.known[batch] = True
+
+    def ensure(self, k: Optional[int] = None) -> None:
+        """Drive verification until the top-``k`` is final."""
+        if k is not None:
+            self.target(k)
+        self._drain()
+
+    def result(self, k: Optional[int] = None):
+        """(ids, scores) of the current top-``k`` — call after :meth:`ensure`
+        (or after the scheduler reports :meth:`finished`).  Ties break by
+        candidate order, so paginated and one-shot runs agree exactly."""
+        k = self.k if k is None else min(int(k), self.n)
+        final = np.nonzero(self.known)[0]
+        if len(final) == 0 or k <= 0:
+            return self.ids[:0], self.scores[:0]
+        vals = self.scores[final]
+        order = final[_topk_order(vals, min(k, len(final)), self.desc)]
+        return self.ids[order], self.scores[order]
+
+
 def topk_query(store, expr: Node, k: int, *, desc: bool = True,
                positions: Optional[np.ndarray] = None,
                mask_types=None, group_by_image: bool = False,
                provided_rois: Optional[np.ndarray] = None,
-               use_index: bool = True, verify_batch: int = 256):
+               use_index: bool = True, verify_batch: int = 256,
+               bounds=None):
     """``SELECT ... ORDER BY expr {DESC|ASC} LIMIT k`` → (ids, scores, stats)."""
-    ctx, ids = _make_context(store, expr, positions, group_by_image,
-                             mask_types, provided_rois)
-    n = len(ids)
-    k = min(k, n)
-    stats = ExecStats(n_candidates=n)
-    io_before = store.io.bytes_read
-
     if not use_index:
+        ctx, ids = _make_context(store, expr, positions, group_by_image,
+                                 mask_types, provided_rois)
+        n = len(ids)
+        k = min(k, n)
+        stats = ExecStats(n_candidates=n)
+        io_before = store.io.bytes_read
         t0 = time.perf_counter()
         exact = _exact_for(ctx, expr, np.arange(n))
         order = _topk_order(exact, k, desc)
@@ -180,68 +376,24 @@ def topk_query(store, expr: Node, k: int, *, desc: bool = True,
         stats.bytes_loaded = store.io.bytes_read - io_before
         return ids[order], exact[order], stats
 
-    t0 = time.perf_counter()
-    lb, ub = ctx.bounds(expr)
-    stats.bound_time_s = time.perf_counter() - t0
-
-    # Scores: exact where bounds coincide, else pending verification.
-    scores = np.where(lb == ub, lb, np.nan)
-    known = ~np.isnan(scores)
-
-    # Static pruning: a candidate can make top-k only if its optimistic bound
-    # beats the k-th best pessimistic bound.
-    if desc:
-        tau = np.partition(lb, -k)[-k] if n >= k else -np.inf
-        alive = ub >= tau
-    else:
-        tau = np.partition(ub, k - 1)[k - 1] if n >= k else np.inf
-        alive = lb <= tau
-    stats.n_decided_by_bounds = int(n - np.count_nonzero(alive & ~known))
-
-    pending = np.nonzero(alive & ~known)[0]
-    # verify most-promising first
-    key = ub[pending] if desc else lb[pending]
-    pending = pending[np.argsort(-key if desc else key, kind="stable")]
-
-    t0 = time.perf_counter()
-    cursor = 0
-    while True:
-        have = np.nonzero(known & alive)[0]
-        if len(have) >= k:
-            vals = scores[have]
-            kth = (np.partition(vals, -k)[-k] if desc
-                   else np.partition(vals, k - 1)[k - 1])
-            rest = pending[cursor:]
-            if len(rest) == 0:
-                break
-            best_possible = ub[rest].max() if desc else lb[rest].min()
-            # strict domination → no unverified candidate can displace top-k
-            if (desc and best_possible < kth) or (not desc and best_possible > kth):
-                break
-        elif cursor >= len(pending):
-            break
-        batch = pending[cursor:cursor + verify_batch]
-        if len(batch) == 0:
-            break
-        exact = _exact_for(ctx, expr, batch)
-        scores[batch] = exact
-        known[batch] = True
-        cursor += len(batch)
-        stats.n_rounds += 1
-        stats.n_verified += len(batch)
-    stats.verify_time_s = time.perf_counter() - t0
-    stats.bytes_loaded = store.io.bytes_read - io_before
-
-    final = np.nonzero(known)[0]
-    vals = scores[final]
-    order = final[_topk_order(vals, k, desc)]
-    return ids[order], scores[order], stats
+    run = TopKRun(store, expr, desc=desc, positions=positions,
+                  mask_types=mask_types, group_by_image=group_by_image,
+                  provided_rois=provided_rois, verify_batch=verify_batch,
+                  bounds=bounds)
+    run.ensure(k)
+    ids, scores = run.result()
+    return ids, scores, run.stats
 
 
 def _topk_order(values, k, desc):
+    """Indices of the top-k, fully deterministic: ties break by ascending
+    candidate position.  CP scores are integer pixel counts, so boundary
+    ties are the norm — argpartition's arbitrary pick among equals would
+    let a paginated run (whose known-set grows between pages) select a
+    different tied candidate than a one-shot run."""
     v = -values if desc else values
-    part = np.argpartition(v, min(k, len(v)) - 1)[:k]
-    return part[np.argsort(v[part], kind="stable")]
+    order = np.lexsort((np.arange(len(v)), v))  # primary v, then index
+    return order[:k]
 
 
 # ---------------------------------------------------------------------------

@@ -183,6 +183,11 @@ class MaskEvalContext:
         self._rows: list = []
         self._rows_used = 0
 
+    def resolve_rois(self, roi, store_positions: np.ndarray) -> np.ndarray:
+        """Public ROI resolution for arbitrary store row positions — used by
+        the service scheduler to build fused cp_count_multi descriptor rows."""
+        return _as_rois(roi, store_positions, self.provided_rois, self.cfg)
+
     # bytes ----------------------------------------------------------------
     def masks_for(self, idx: np.ndarray) -> np.ndarray:
         """Load (and cache) mask bytes for candidate indices ``idx``."""
@@ -245,7 +250,11 @@ class MaskEvalContext:
                                jnp.asarray(min(node.uv, 3.4e38), buf.dtype))
         return np.asarray(counts, np.float64)
 
-    def _exact_node(self, node: Node, idx: np.ndarray) -> np.ndarray:
+    def _eval_tree(self, node: Node, idx: np.ndarray, cp_eval) -> np.ndarray:
+        """Shared exact-evaluation walker.  CP leaves delegate to ``cp_eval``
+        (loading + kernel here; precomputed fused counts in the scheduler),
+        so both paths share one set of expression semantics — notably the
+        guarded division."""
         if isinstance(node, Const):
             return np.full(len(idx), node.value)
         if isinstance(node, RoiArea):
@@ -253,25 +262,42 @@ class MaskEvalContext:
                             self.cfg)
             return cp_lib.roi_area(rois).astype(np.float64)
         if isinstance(node, CP):
-            if self._use_partial:
-                return self._cp_partial(node, idx)
-            masks = self.masks_for(idx)
-            rois = _as_rois(node.roi, self.positions[idx], self.provided_rois,
-                            self.cfg)
-            # verification hot path → Pallas cp_count on TPU, jnp ref on CPU
-            counts = kops.cp_count(jnp.asarray(masks), jnp.asarray(rois),
-                                   jnp.asarray(node.lv, masks.dtype),
-                                   jnp.asarray(min(node.uv, 3.4e38), masks.dtype))
-            return np.asarray(counts, np.float64)
+            return cp_eval(node, idx)
         if isinstance(node, BinOp):
-            l = self._exact_node(node.left, idx)
-            r = self._exact_node(node.right, idx)
+            l = self._eval_tree(node.left, idx, cp_eval)
+            r = self._eval_tree(node.right, idx, cp_eval)
             if node.op == "/":
                 with np.errstate(divide="ignore", invalid="ignore"):
                     out = np.where(r != 0, l / np.where(r == 0, 1, r), 0.0)
                 return out
             return {"+": np.add, "-": np.subtract, "*": np.multiply}[node.op](l, r)
         raise TypeError(f"node {node} not valid in a per-mask expression")
+
+    def _cp_exact(self, node: CP, idx: np.ndarray) -> np.ndarray:
+        if self._use_partial:
+            return self._cp_partial(node, idx)
+        masks = self.masks_for(idx)
+        rois = _as_rois(node.roi, self.positions[idx], self.provided_rois,
+                        self.cfg)
+        # verification hot path → Pallas cp_count on TPU, jnp ref on CPU
+        counts = kops.cp_count(jnp.asarray(masks), jnp.asarray(rois),
+                               jnp.asarray(node.lv, masks.dtype),
+                               jnp.asarray(min(node.uv, 3.4e38), masks.dtype))
+        return np.asarray(counts, np.float64)
+
+    def _exact_node(self, node: Node, idx: np.ndarray) -> np.ndarray:
+        return self._eval_tree(node, idx, self._cp_exact)
+
+
+def eval_with_counts(ctx: "MaskEvalContext", node: Node, idx: np.ndarray,
+                     counts: dict) -> np.ndarray:
+    """Exact per-mask expression value when every CP term's count was already
+    computed by a fused multi-query kernel pass (the service scheduler's
+    ``cp_count_multi`` route).  ``counts`` maps CP nodes (hashable frozen
+    dataclasses) to ``(len(idx),)`` count arrays; everything else runs
+    through the same walker as self-verification."""
+    return ctx._eval_tree(node, idx,
+                          lambda n, i: np.asarray(counts[n], np.float64))
 
 
 # ---------------------------------------------------------------------------

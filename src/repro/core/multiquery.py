@@ -40,8 +40,9 @@ def run_workload(store, sql_queries: Sequence[str], *, provided_rois=None,
                  use_index: bool = True, share_loads: bool = True):
     """Execute a workload; returns (results, WorkloadStats)."""
     plans = [parse(q) if isinstance(q, str) else q for q in sql_queries]
-    if share_loads:
-        store.enable_cache()
+    # enable_cache is idempotent: only clear on exit if we newly enabled it
+    # (the query service may already hold a longer-lived cross-session cache).
+    owns_cache = store.enable_cache() if share_loads else False
     files0, bytes0 = store.io.files_read, store.io.bytes_read
     t0 = time.perf_counter()
     results, stats = [], []
@@ -52,7 +53,7 @@ def run_workload(store, sql_queries: Sequence[str], *, provided_rois=None,
             results.append(res)
             stats.append(st)
     finally:
-        if share_loads:
+        if owns_cache:
             store.clear_cache()
     wall = time.perf_counter() - t0
     ws = WorkloadStats(per_query=stats, total_wall_s=wall,

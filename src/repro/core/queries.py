@@ -137,7 +137,7 @@ class _Parser:
         self.expect("SELECT")
         q = Query(kind="filter", select="mask_id")
         # select list — possibly SCALAR_AGG
-        if self.peek().upper() == "SCALAR_AGG":
+        if (self.peek() or "").upper() == "SCALAR_AGG":
             self.next(); self.expect("(")
             q.agg = self.next().upper()
             self.expect(",")
@@ -164,6 +164,13 @@ class _Parser:
             self.expect("image_id")
             q.group_by_image = True
         if self.accept("ORDER"):
+            if q.expr is not None:
+                # A CP WHERE predicate has no execution path under top-k;
+                # refuse rather than silently rank the unfiltered set.
+                raise SyntaxError(
+                    "a CP WHERE predicate cannot be combined with ORDER BY "
+                    "... LIMIT; only mask_type IN (...) filters compose "
+                    "with rankings")
             self.expect("BY")
             nxt = self.peek()
             aliases = getattr(q, "_aliases", {})
@@ -200,6 +207,10 @@ class _Parser:
                 self.expect(")")
                 q.mask_types = tuple(types)
             else:
+                if q.expr is not None:
+                    raise SyntaxError(
+                        "multiple CP predicates in WHERE are not supported; "
+                        "combine them into one expression")
                 expr = self.expr()
                 op = self.next()
                 if op not in ("<", "<=", ">", ">="):
@@ -227,6 +238,8 @@ class _Parser:
 
     def factor(self) -> Node:
         tok = self.peek()
+        if tok is None:
+            raise SyntaxError("unexpected end of query (expected expression)")
         if tok == "(":
             self.next()
             node = self.expr()
@@ -244,7 +257,7 @@ class _Parser:
 
     def _cp(self) -> Node:
         self.expect("CP"); self.expect("(")
-        tok = self.peek()
+        tok = self.peek() or ""
         if tok.lower() in ("intersect", "union", "mask_agg"):
             agg = self.next().lower()
             self.expect("(")

@@ -67,6 +67,28 @@ class IOStats:
         self.wall_time_s = 0.0
 
 
+@dataclasses.dataclass
+class CacheStats:
+    """Shared-load cache accounting (cross-query / cross-session sharing).
+
+    ``bytes_saved`` is the disk I/O that cache hits avoided — the quantity
+    the service's fused verification maximizes across in-flight sessions."""
+
+    hits: int = 0
+    misses: int = 0
+    bytes_saved: int = 0
+
+    @property
+    def hit_rate(self) -> float:
+        total = self.hits + self.misses
+        return self.hits / total if total else 0.0
+
+    def reset(self) -> None:
+        self.hits = 0
+        self.misses = 0
+        self.bytes_saved = 0
+
+
 MASK_META_DTYPE = np.dtype([
     ("mask_id", np.int64),
     ("image_id", np.int64),
@@ -94,6 +116,7 @@ class MaskStore:
         # Array-based: _cache_map[pos] = row into _cache_rows, -1 = miss.
         self._cache_map: np.ndarray | None = None
         self._cache_rows: list[np.ndarray] | None = None
+        self.cache_stats = CacheStats()
         if chi_table is None and masks is not None:
             chi_table = build_chi_np(np.asarray(masks), cfg)
         self._chi = jnp.asarray(chi_table) if chi_table is not None else None
@@ -175,11 +198,20 @@ class MaskStore:
 
     # -- mask-byte access (the metered path) --------------------------------
 
-    def enable_cache(self) -> None:
+    def enable_cache(self) -> bool:
         """Turn on the cross-query load cache (hits are not metered — the
-        bytes were already paid for by an earlier query in the workload)."""
+        bytes were already paid for by an earlier query in the workload).
+
+        Idempotent: returns True iff this call newly enabled the cache, so
+        nested users (a workload running under the query service, which
+        keeps a long-lived cross-session cache) don't clear an outer
+        owner's cache on the way out."""
+        if self._cache_map is not None:
+            return False
         self._cache_map = np.full(len(self.meta), -1, dtype=np.int64)
         self._cache_rows = [None, 0]        # [rows array, used count]
+        self.cache_stats.reset()
+        return True
 
     def clear_cache(self) -> None:
         self._cache_map = None
@@ -214,8 +246,15 @@ class MaskStore:
             return self._read_tier(positions)
         rows = self._cache_map[positions]
         miss = rows < 0
+        n_hit = int(np.count_nonzero(~miss))
+        itemsize = (self._masks.dtype.itemsize if self._masks is not None
+                    else 4)                      # disk tier stores float32
+        self.cache_stats.hits += n_hit
+        self.cache_stats.bytes_saved += (
+            n_hit * self.cfg.height * self.cfg.width * itemsize)
         if np.any(miss):
             miss_pos = np.unique(positions[miss])
+            self.cache_stats.misses += len(miss_pos)
             loaded = self._read_tier(miss_pos)
             base = self._cache_rows[1]
             arr = self._cache_rows[0]

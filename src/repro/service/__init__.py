@@ -1,0 +1,27 @@
+"""MaskSearch interactive query service (DESIGN.md §5).
+
+The serving layer between the SQL front-end and the engine: plan/result
+caching, incremental top-k sessions, and cross-query fused verification —
+the demo paper's interactive GUI loop as a subsystem.
+
+Public surface:
+  * :class:`MaskSearchService` — the stateful facade (:mod:`.api`).
+  * :class:`ServiceClient`     — stdlib HTTP client (:mod:`.client`).
+  * :func:`make_server` / ``python -m repro.service.server`` — HTTP front.
+  * :mod:`.planner` / :mod:`.session` / :mod:`.scheduler` — the pieces.
+"""
+
+from .api import MaskSearchService  # noqa: F401
+from .client import ServiceClient, ServiceError  # noqa: F401
+from .planner import Planner, bounds_key, result_key, roi_signature  # noqa: F401
+from .scheduler import FusedScheduler  # noqa: F401
+from .session import Session, SessionManager  # noqa: F401
+
+
+def __getattr__(name):
+    # Lazy so `python -m repro.service.server` doesn't pre-import the module
+    # through the package (runpy's double-import warning).
+    if name == "make_server":
+        from .server import make_server
+        return make_server
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -1,0 +1,282 @@
+"""MaskSearchService — the stateful layer between the SQL front-end and the
+engine (the demo GUI's backend).
+
+Responsibilities:
+
+* **plan + cache**: parse SQL once, canonicalize it into cache keys; answer
+  repeated queries from an LRU result cache (zero mask loads) and refined
+  queries (same expression, new threshold / larger LIMIT) from a CHI-bounds
+  cache (no new bounds pass).
+* **sessions**: top-k queries can open a session whose pages resume the
+  verification frontier incrementally (:mod:`.session`).
+* **concurrency**: batches of queries — and concurrent session pages — are
+  admitted together and their verification residues are merged into fused
+  ``cp_count_multi`` passes behind the store's shared-load cache
+  (:mod:`.scheduler`).
+
+All public methods are thread-safe (one lock: the store's I/O meters and
+caches are shared mutable state) and return JSON-serializable dicts, so the
+HTTP layer in :mod:`.server` is a thin translation.
+"""
+
+from __future__ import annotations
+
+import copy
+import dataclasses
+import threading
+import time
+from typing import Optional, Sequence
+
+import numpy as np
+
+from ..core.engine import ExecStats, FilterRun, TopKRun
+from ..core.queries import Query, parse
+from .planner import Planner, roi_signature
+from .scheduler import FusedScheduler
+from .session import SessionManager
+
+DEFAULT_PAGE = 25
+
+
+def _stats_dict(stats: ExecStats) -> dict:
+    d = dataclasses.asdict(stats)
+    d["load_fraction"] = stats.load_fraction
+    return {k: float(v) if isinstance(v, float) else int(v)
+            for k, v in d.items()}
+
+
+def _ids_list(ids) -> list:
+    return [int(x) for x in np.asarray(ids).tolist()]
+
+
+def _scores_list(scores) -> list:
+    return [float(x) for x in np.asarray(scores, np.float64).tolist()]
+
+
+class MaskSearchService:
+    """One service per mask-store partition."""
+
+    def __init__(self, store, *, provided_rois: Optional[np.ndarray] = None,
+                 result_cache_size: int = 128, bounds_cache_size: int = 64,
+                 verify_batch: int = 256, share_loads: bool = True,
+                 max_sessions: int = 256):
+        self.store = store
+        self.default_rois = provided_rois
+        # Hash the default ROI array once — per-query hashing of a large
+        # per-mask box array would serialize O(n) work behind the lock.
+        self._default_roi_sig = roi_signature(provided_rois)
+        self.verify_batch = verify_batch
+        self.planner = Planner(result_cache_size=result_cache_size,
+                               bounds_cache_size=bounds_cache_size)
+        self.sessions = SessionManager(max_sessions=max_sessions)
+        self.scheduler = FusedScheduler(store)
+        self._lock = threading.RLock()
+        self._counts = {"total": 0, "filter": 0, "topk": 0, "scalar_agg": 0,
+                        "result_cache_hits": 0}
+        self._started_s = time.monotonic()
+        # Long-lived cross-session shared-load cache: every verification load
+        # any query pays for is reusable by every later query.
+        self._owns_cache = store.enable_cache() if share_loads else False
+
+    def close(self) -> None:
+        with self._lock:
+            if self._owns_cache:
+                self.store.clear_cache()
+                self._owns_cache = False
+
+    # -- internals --------------------------------------------------------
+
+    def _plan(self, sql) -> Query:
+        return parse(sql) if isinstance(sql, str) else sql
+
+    def _rois(self, rois):
+        """→ (resolved roi array, content signature)."""
+        if rois is None:
+            return self.default_rois, self._default_roi_sig
+        rois = np.asarray(rois)
+        return rois, roi_signature(rois)
+
+    def _build_run(self, plan: Query, rois, roi_sig: str):
+        """Construct the resumable run for a plan, going through the bounds
+        cache (a hit skips the CHI pass entirely)."""
+        cached = self.planner.cached_bounds(plan, roi_sig)
+        common = dict(mask_types=plan.mask_types,
+                      group_by_image=plan.group_by_image,
+                      provided_rois=rois, verify_batch=self.verify_batch,
+                      bounds=cached)
+        if plan.kind == "topk":
+            run = TopKRun(self.store, plan.expr, desc=plan.desc, **common)
+        elif plan.kind == "filter":
+            run = FilterRun(self.store, plan.expr, plan.op, plan.threshold,
+                            **common)
+        else:
+            raise ValueError(f"no resumable run for kind {plan.kind!r}")
+        if cached is None:
+            self.planner.store_bounds(plan, roi_sig, run.lb, run.ub)
+        return run
+
+    def _finish_payload(self, plan: Query, run, *, cache_hit: bool = False,
+                        session_id: Optional[str] = None) -> dict:
+        if plan.kind == "topk":
+            ids, scores = run.result()
+            body = {"ids": _ids_list(ids), "scores": _scores_list(scores)}
+        else:
+            body = {"ids": _ids_list(run.result())}
+        payload = {"kind": plan.kind, **body,
+                   "stats": _stats_dict(run.stats), "cache_hit": cache_hit}
+        if session_id is not None:
+            payload["session"] = session_id
+        return payload
+
+    def _cache_hit_payload(self, cached: dict) -> dict:
+        """A warm hit re-serves the stored body with zeroed I/O stats — no
+        mask loads, no bounds pass (the acceptance contract).  Deep copy:
+        the caller must not be able to mutate the cached ids/scores."""
+        payload = copy.deepcopy(cached)
+        zero = ExecStats(n_candidates=cached["stats"].get("n_candidates", 0))
+        payload["stats"] = _stats_dict(zero)
+        payload["cache_hit"] = True
+        self._counts["result_cache_hits"] += 1
+        return payload
+
+    # -- one-shot queries -------------------------------------------------
+
+    def query(self, sql, *, rois=None, session: bool = False,
+              page_size: Optional[int] = None) -> dict:
+        """Execute one query.  ``session=True`` (top-k only) opens an
+        incremental session and returns its first page."""
+        with self._lock:
+            plan = self._plan(sql)
+            rois, roi_sig = self._rois(rois)
+            self._counts["total"] += 1
+            self._counts[plan.kind] = self._counts.get(plan.kind, 0) + 1
+
+            if session:
+                if plan.kind != "topk":
+                    raise ValueError("sessions require a top-k (ORDER BY … "
+                                     f"LIMIT) query, got {plan.kind!r}")
+                run = self._build_run(plan, rois, roi_sig)
+                size = page_size or plan.k or DEFAULT_PAGE
+                sess = self.sessions.create(
+                    sql if isinstance(sql, str) else repr(plan), run, size)
+                return self._serve_page(sess, size)
+
+            cached = self.planner.cached_result(plan, roi_sig)
+            if cached is not None:
+                return self._cache_hit_payload(cached)
+
+            if plan.kind == "scalar_agg":
+                value, stats = plan.run(self.store, provided_rois=rois)
+                payload = {"kind": "scalar_agg", "value": float(value),
+                           "stats": _stats_dict(stats), "cache_hit": False}
+            else:
+                run = self._build_run(plan, rois, roi_sig)
+                if plan.kind == "topk":
+                    run.ensure(plan.k)
+                else:
+                    run.ensure()
+                payload = self._finish_payload(plan, run)
+            self.planner.store_result(plan, roi_sig, copy.deepcopy(payload))
+            return payload
+
+    def submit_batch(self, sqls: Sequence, *, rois=None) -> list:
+        """Admit several queries at once; their verification residues are
+        merged into fused kernel passes (the online multi-query path)."""
+        with self._lock:
+            rois, roi_sig = self._rois(rois)
+            entries = []
+            jobs = []
+            for sql in sqls:
+                plan = self._plan(sql)
+                self._counts["total"] += 1
+                self._counts[plan.kind] = self._counts.get(plan.kind, 0) + 1
+                cached = self.planner.cached_result(plan, roi_sig)
+                if cached is not None:
+                    entries.append((plan, None, self._cache_hit_payload(cached)))
+                    continue
+                if plan.kind == "scalar_agg":
+                    value, stats = plan.run(self.store, provided_rois=rois)
+                    payload = {"kind": "scalar_agg", "value": float(value),
+                               "stats": _stats_dict(stats),
+                               "cache_hit": False}
+                    self.planner.store_result(plan, roi_sig, copy.deepcopy(payload))
+                    entries.append((plan, None, payload))
+                    continue
+                run = self._build_run(plan, rois, roi_sig)
+                if plan.kind == "topk":
+                    run.target(plan.k)
+                jobs.append(run)
+                entries.append((plan, run, None))
+            if jobs:
+                self.scheduler.drive(jobs)
+            results = []
+            for plan, run, payload in entries:
+                if payload is None:
+                    payload = self._finish_payload(plan, run)
+                    self.planner.store_result(plan, roi_sig, copy.deepcopy(payload))
+                results.append(payload)
+            return results
+
+    # -- sessions ---------------------------------------------------------
+
+    def _serve_page(self, sess, k: Optional[int], *,
+                    scheduler_driven: bool = False) -> dict:
+        lo, hi = sess.page_bounds(k)
+        if not scheduler_driven:
+            sess.run.ensure(hi)
+        ids, scores = sess.run.result(hi)
+        page_ids, page_scores = ids[lo:hi], scores[lo:hi]
+        sess.served = hi
+        sess.pages_served += 1
+        return {"kind": "topk", "session": sess.id,
+                "page": {"offset": lo, "ids": _ids_list(page_ids),
+                         "scores": _scores_list(page_scores)},
+                "served": hi, "total_candidates": sess.run.n,
+                "exhausted": sess.exhausted,
+                "stats": _stats_dict(sess.run.stats), "cache_hit": False}
+
+    def next_page(self, session_id: str, k: Optional[int] = None) -> dict:
+        """Resume a session's verification frontier for the next page."""
+        with self._lock:
+            sess = self.sessions.get(session_id)
+            return self._serve_page(sess, k)
+
+    def next_pages(self, requests: dict) -> dict:
+        """Advance several sessions at once: their frontiers are fused into
+        shared verification passes.  ``requests`` maps session_id → k
+        (None → session page size)."""
+        with self._lock:
+            sessions = []
+            for sid, k in requests.items():
+                sess = self.sessions.get(sid)
+                _, hi = sess.page_bounds(k)
+                sess.run.target(hi)
+                sessions.append((sess, k))
+            self.scheduler.drive([s.run for s, _ in sessions])
+            return {s.id: self._serve_page(s, k, scheduler_driven=True)
+                    for s, k in sessions}
+
+    def drop_session(self, session_id: str) -> bool:
+        with self._lock:
+            return self.sessions.drop(session_id)
+
+    # -- introspection ----------------------------------------------------
+
+    def stats(self) -> dict:
+        with self._lock:
+            io = self.store.io
+            cache = self.store.cache_stats
+            return {
+                "uptime_s": time.monotonic() - self._started_s,
+                "queries": dict(self._counts),
+                **self.planner.stats(),
+                "sessions": self.sessions.stats(),
+                "scheduler": self.scheduler.stats.as_dict(),
+                "store_io": {"files_read": io.files_read,
+                             "bytes_read": io.bytes_read,
+                             "wall_time_s": io.wall_time_s,
+                             "modeled_ebs_time_s": io.modeled_ebs_time_s},
+                "shared_cache": {"hits": cache.hits, "misses": cache.misses,
+                                 "bytes_saved": cache.bytes_saved,
+                                 "hit_rate": cache.hit_rate},
+            }

@@ -1,0 +1,69 @@
+"""Minimal stdlib client for the MaskSearch query service.
+
+Mirrors the HTTP API one-to-one; used by the interactive example, the
+service smoke tests, and ``bench_serve``.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Optional, Sequence
+from urllib import request as _request
+from urllib.error import HTTPError
+
+
+class ServiceError(RuntimeError):
+    def __init__(self, code: int, message: str):
+        super().__init__(f"HTTP {code}: {message}")
+        self.code = code
+
+
+class ServiceClient:
+    def __init__(self, base_url: str, *, timeout: float = 30.0):
+        self.base_url = base_url.rstrip("/")
+        self.timeout = timeout
+
+    # -- plumbing ---------------------------------------------------------
+    def _call(self, method: str, path: str, body: Optional[dict] = None):
+        data = json.dumps(body).encode() if body is not None else None
+        req = _request.Request(
+            self.base_url + path, data=data, method=method,
+            headers={"Content-Type": "application/json"} if data else {})
+        try:
+            with _request.urlopen(req, timeout=self.timeout) as resp:
+                return json.loads(resp.read())
+        except HTTPError as e:
+            try:
+                message = json.loads(e.read()).get("error", str(e))
+            except Exception:          # noqa: BLE001 — best-effort decode
+                message = str(e)
+            raise ServiceError(e.code, message) from e
+
+    # -- API --------------------------------------------------------------
+    def query(self, sql: str, *, rois=None, session: bool = False,
+              page_size: Optional[int] = None) -> dict:
+        body = {"sql": sql, "session": session}
+        if page_size is not None:
+            body["page_size"] = page_size
+        if rois is not None:
+            body["rois"] = [[int(v) for v in row] for row in rois]
+        return self._call("POST", "/query", body)
+
+    def workload(self, sqls: Sequence[str], *, rois=None) -> list:
+        body = {"sqls": list(sqls)}
+        if rois is not None:
+            body["rois"] = [[int(v) for v in row] for row in rois]
+        return self._call("POST", "/workload", body)
+
+    def next_page(self, session_id: str, k: Optional[int] = None) -> dict:
+        suffix = f"?k={int(k)}" if k is not None else ""
+        return self._call("GET", f"/session/{session_id}/page{suffix}")
+
+    def drop_session(self, session_id: str) -> dict:
+        return self._call("DELETE", f"/session/{session_id}")
+
+    def stats(self) -> dict:
+        return self._call("GET", "/stats")
+
+    def healthz(self) -> dict:
+        return self._call("GET", "/healthz")

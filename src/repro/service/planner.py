@@ -1,0 +1,135 @@
+"""Query planning for the interactive service: canonical cache keys + LRU
+result/bounds caches.
+
+Two cache tiers, matching how a GUI session actually refines queries:
+
+* **result cache** — keyed by the *whole* plan (expression, comparison,
+  threshold, k, order, mask_types, ROI content).  A repeated query is
+  answered with zero mask loads.
+* **bounds cache** — keyed by everything that determines the candidate set
+  and the CHI bounds pass, but *not* by threshold/op/k.  A refined query
+  (same expression, new threshold or larger LIMIT) reuses the prior bounds
+  pass for free and pays only for the changed verification residue.
+
+Keys are canonical strings built from the frozen-dataclass expression reprs
+(deterministic) plus a content hash of any caller-provided ROI array.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+from collections import OrderedDict
+from typing import Optional
+
+import numpy as np
+
+from ..core.exprs import Node, is_group_expr
+from ..core.queries import Query
+
+
+def expr_signature(node: Optional[Node]) -> str:
+    """Deterministic canonical form of an expression tree (frozen dataclass
+    reprs are stable and include every field)."""
+    return repr(node)
+
+
+def roi_signature(rois: Optional[np.ndarray]) -> str:
+    """Content hash of a provided-ROI array (the per-mask boxes a session
+    queries against); two sessions sharing boxes share cache entries."""
+    if rois is None:
+        return "none"
+    arr = np.ascontiguousarray(np.asarray(rois))
+    return hashlib.sha1(arr.tobytes() + str(arr.shape).encode()).hexdigest()[:16]
+
+
+def result_key(q: Query, roi_sig: str) -> str:
+    return "|".join([
+        q.kind, q.select, expr_signature(q.expr), str(q.op), str(q.threshold),
+        str(q.k), str(q.desc), str(q.agg), str(q.mask_types),
+        str(q.group_by_image), roi_sig,
+    ])
+
+
+def bounds_key(q: Query, roi_sig: str) -> str:
+    """Everything that pins the candidate set + bounds — NOT op/threshold/k,
+    so a refined query hits the same entry."""
+    grouped = q.group_by_image or (q.expr is not None and is_group_expr(q.expr))
+    return "|".join([
+        expr_signature(q.expr), str(q.mask_types), str(grouped), roi_sig,
+    ])
+
+
+@dataclasses.dataclass
+class CacheInfo:
+    hits: int = 0
+    misses: int = 0
+    evictions: int = 0
+    size: int = 0
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class LRUCache:
+    """Tiny ordered-dict LRU with hit/miss/eviction accounting."""
+
+    def __init__(self, capacity: int):
+        self.capacity = max(int(capacity), 0)
+        self._data: OrderedDict = OrderedDict()
+        self.info = CacheInfo()
+
+    def get(self, key):
+        if key in self._data:
+            self._data.move_to_end(key)
+            self.info.hits += 1
+            return self._data[key]
+        self.info.misses += 1
+        return None
+
+    def put(self, key, value) -> None:
+        if self.capacity == 0:
+            return
+        if key in self._data:
+            self._data.move_to_end(key)
+        self._data[key] = value
+        while len(self._data) > self.capacity:
+            self._data.popitem(last=False)
+            self.info.evictions += 1
+        self.info.size = len(self._data)
+
+    def __len__(self) -> int:
+        return len(self._data)
+
+    def clear(self) -> None:
+        self._data.clear()
+        self.info.size = 0
+
+
+class Planner:
+    """Canonicalizes parsed plans into cache keys and owns the two caches."""
+
+    def __init__(self, *, result_cache_size: int = 128,
+                 bounds_cache_size: int = 64):
+        self.result_cache = LRUCache(result_cache_size)
+        self.bounds_cache = LRUCache(bounds_cache_size)
+
+    # -- result tier ------------------------------------------------------
+    def cached_result(self, q: Query, roi_sig: str):
+        return self.result_cache.get(result_key(q, roi_sig))
+
+    def store_result(self, q: Query, roi_sig: str, payload) -> None:
+        self.result_cache.put(result_key(q, roi_sig), payload)
+
+    # -- bounds tier ------------------------------------------------------
+    def cached_bounds(self, q: Query, roi_sig: str):
+        """(lb, ub) float64 arrays from a prior bounds pass, or None."""
+        return self.bounds_cache.get(bounds_key(q, roi_sig))
+
+    def store_bounds(self, q: Query, roi_sig: str, lb: np.ndarray,
+                     ub: np.ndarray) -> None:
+        self.bounds_cache.put(bounds_key(q, roi_sig), (lb, ub))
+
+    def stats(self) -> dict:
+        return {"result_cache": self.result_cache.info.as_dict(),
+                "bounds_cache": self.bounds_cache.info.as_dict()}

@@ -1,0 +1,185 @@
+"""Thin stdlib HTTP/JSON front for :class:`MaskSearchService`.
+
+Endpoints (all JSON):
+
+* ``POST /query``    — body ``{"sql": "...", "session": bool?,
+  "page_size": int?, "rois": [[r0,c0,r1,c1], ...]?}`` → one result, or the
+  first page + ``session`` id.
+* ``POST /workload`` — body ``{"sqls": ["...", ...]}`` → list of results,
+  verified in fused cross-query passes.
+* ``GET /session/<id>/page?k=N`` — next page of an open session.
+* ``DELETE /session/<id>``       — drop a session.
+* ``GET /stats``     — cache / I/O / session counters.
+* ``GET /healthz``   — liveness.
+
+Run it::
+
+    PYTHONPATH=src python -m repro.service.server --synthetic 500 --port 8765
+    PYTHONPATH=src python -m repro.service.server --root /path/to/maskdb
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import re
+from http.server import BaseHTTPRequestHandler, ThreadingHTTPServer
+from urllib.parse import parse_qs, urlparse
+
+import numpy as np
+
+from .api import MaskSearchService
+
+_SESSION_PAGE_RE = re.compile(r"^/session/([^/]+)/page$")
+_SESSION_RE = re.compile(r"^/session/([^/]+)$")
+
+
+class ServiceHandler(BaseHTTPRequestHandler):
+    service: MaskSearchService = None  # bound by make_server
+    verbose: bool = False
+
+    # -- plumbing ---------------------------------------------------------
+    def log_message(self, fmt, *args):  # noqa: N802
+        if self.verbose:
+            super().log_message(fmt, *args)
+
+    def _send(self, obj, code: int = 200) -> None:
+        body = json.dumps(obj).encode()
+        self.send_response(code)
+        self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _error(self, code: int, message: str) -> None:
+        self._send({"error": message}, code)
+
+    def _body(self) -> dict:
+        length = int(self.headers.get("Content-Length") or 0)
+        raw = self.rfile.read(length) if length else b"{}"
+        return json.loads(raw or b"{}")
+
+    def _guard(self, fn):
+        try:
+            fn()
+        except (SyntaxError, ValueError) as e:
+            self._error(400, str(e))
+        except KeyError as e:
+            self._error(404, str(e))
+        except Exception as e:              # noqa: BLE001 — serving loop
+            self._error(500, f"{type(e).__name__}: {e}")
+
+    # -- routes -----------------------------------------------------------
+    def do_POST(self):  # noqa: N802
+        path = urlparse(self.path).path
+        if path == "/query":
+            def run():
+                body = self._body()
+                if "sql" not in body:
+                    raise ValueError("body must contain 'sql'")
+                rois = body.get("rois")
+                self._send(self.service.query(
+                    body["sql"],
+                    rois=np.asarray(rois, np.int64) if rois else None,
+                    session=bool(body.get("session", False)),
+                    page_size=body.get("page_size")))
+            return self._guard(run)
+        if path == "/workload":
+            def run():
+                body = self._body()
+                if "sqls" not in body:
+                    raise ValueError("body must contain 'sqls'")
+                rois = body.get("rois")
+                self._send(self.service.submit_batch(
+                    body["sqls"],
+                    rois=np.asarray(rois, np.int64) if rois else None))
+            return self._guard(run)
+        self._error(404, f"no route {path}")
+
+    def do_GET(self):  # noqa: N802
+        parsed = urlparse(self.path)
+        m = _SESSION_PAGE_RE.match(parsed.path)
+        if m:
+            sid = m.group(1)
+
+            def run():
+                qs = parse_qs(parsed.query)
+                try:
+                    k = int(qs["k"][0]) if "k" in qs else None
+                except ValueError:
+                    raise ValueError(f"bad page size k={qs['k'][0]!r}")
+                self._send(self.service.next_page(sid, k))
+            return self._guard(run)
+        if parsed.path == "/stats":
+            return self._guard(lambda: self._send(self.service.stats()))
+        if parsed.path == "/healthz":
+            return self._send({"ok": True})
+        self._error(404, f"no route {parsed.path}")
+
+    def do_DELETE(self):  # noqa: N802
+        m = _SESSION_RE.match(urlparse(self.path).path)
+        if m:
+            return self._guard(lambda: self._send(
+                {"dropped": self.service.drop_session(m.group(1))}))
+        self._error(404, "no route")
+
+
+def make_server(service: MaskSearchService, host: str = "127.0.0.1",
+                port: int = 0, *, verbose: bool = False) -> ThreadingHTTPServer:
+    """Bind a threading HTTP server to the service (port 0 → ephemeral)."""
+    handler = type("BoundServiceHandler", (ServiceHandler,),
+                   {"service": service, "verbose": verbose})
+    return ThreadingHTTPServer((host, port), handler)
+
+
+def _synthetic_store(n: int, size: int):
+    from ..core import CHIConfig, MaskStore
+    from ..core.store import MASK_META_DTYPE
+    from ..data.masks import object_boxes, saliency_masks
+    rois = object_boxes(n, size, size, seed=1)
+    masks, _ = saliency_masks(n, size, size, seed=0, attacked_fraction=0.15,
+                              boxes=rois)
+    meta = np.zeros(n, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(n)
+    meta["image_id"] = np.arange(n) // 2
+    meta["mask_type"] = np.arange(n) % 2 + 1
+    cfg = CHIConfig(grid=16, num_bins=16, height=size, width=size)
+    return MaskStore.create_memory(masks, meta, cfg), rois
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser(description="MaskSearch query service")
+    src = ap.add_mutually_exclusive_group(required=True)
+    src.add_argument("--root", help="existing on-disk mask DB root")
+    src.add_argument("--synthetic", type=int, metavar="N",
+                     help="serve an N-mask synthetic in-memory DB")
+    ap.add_argument("--size", type=int, default=128,
+                    help="mask side for --synthetic")
+    ap.add_argument("--host", default="127.0.0.1")
+    ap.add_argument("--port", type=int, default=8765)
+    ap.add_argument("--verify-batch", type=int, default=256)
+    ap.add_argument("--verbose", action="store_true")
+    args = ap.parse_args(argv)
+
+    if args.root:
+        from ..core import MaskStore
+        store, rois = MaskStore.open_disk(args.root), None
+    else:
+        store, rois = _synthetic_store(args.synthetic, args.size)
+    service = MaskSearchService(store, provided_rois=rois,
+                                verify_batch=args.verify_batch)
+    httpd = make_server(service, args.host, args.port, verbose=args.verbose)
+    host, port = httpd.server_address[:2]
+    print(f"masksearch service: {len(store)} masks on http://{host}:{port}",
+          flush=True)
+    try:
+        httpd.serve_forever()
+    except KeyboardInterrupt:
+        pass
+    finally:
+        httpd.server_close()
+        service.close()
+
+
+if __name__ == "__main__":
+    main()

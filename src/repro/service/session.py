@@ -1,0 +1,82 @@
+"""Interactive sessions: incremental top-k result delivery.
+
+A session wraps a resumable :class:`repro.core.engine.TopKRun`.  The GUI's
+"LIMIT 25 → next 25" interaction becomes: raise the run's finality target to
+``served + k`` (re-deriving the pruning frontier from the *cached* bounds —
+no new CHI pass) and run only the extra verification batches the larger
+target needs.  Pagination over n pages therefore returns exactly the
+ids/scores of a one-shot ``LIMIT n·k`` query, at a fraction of fresh cost.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import itertools
+import time
+from collections import OrderedDict
+from typing import Optional
+
+from ..core.engine import TopKRun
+
+_session_counter = itertools.count(1)
+
+
+@dataclasses.dataclass
+class Session:
+    id: str
+    sql: str
+    run: TopKRun
+    page_size: int
+    served: int = 0
+    pages_served: int = 0
+    created_s: float = dataclasses.field(default_factory=time.monotonic)
+    last_used_s: float = dataclasses.field(default_factory=time.monotonic)
+
+    @property
+    def exhausted(self) -> bool:
+        return self.served >= self.run.n
+
+    def page_bounds(self, k: Optional[int]) -> tuple[int, int]:
+        k = self.page_size if k is None else max(int(k), 1)
+        return self.served, min(self.served + k, self.run.n)
+
+
+class SessionManager:
+    """Holds live sessions with LRU eviction beyond ``max_sessions``."""
+
+    def __init__(self, max_sessions: int = 256):
+        self.max_sessions = max_sessions
+        self._sessions: OrderedDict[str, Session] = OrderedDict()
+        self.created = 0
+        self.evicted = 0
+
+    def create(self, sql: str, run: TopKRun, page_size: int) -> Session:
+        sid = f"s{next(_session_counter)}-{id(run) & 0xffff:04x}"
+        sess = Session(id=sid, sql=sql, run=run,
+                       page_size=max(int(page_size), 1))
+        self._sessions[sid] = sess
+        self.created += 1
+        while len(self._sessions) > self.max_sessions:
+            self._sessions.popitem(last=False)
+            self.evicted += 1
+        return sess
+
+    def get(self, sid: str) -> Session:
+        sess = self._sessions.get(sid)
+        if sess is None:
+            raise KeyError(f"unknown or expired session {sid!r}")
+        self._sessions.move_to_end(sid)
+        sess.last_used_s = time.monotonic()
+        return sess
+
+    def drop(self, sid: str) -> bool:
+        return self._sessions.pop(sid, None) is not None
+
+    def __len__(self) -> int:
+        return len(self._sessions)
+
+    def stats(self) -> dict:
+        return {"active": len(self._sessions), "created": self.created,
+                "evicted": self.evicted,
+                "pages_served": sum(s.pages_served
+                                    for s in self._sessions.values())}

@@ -8,7 +8,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (dev extra)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.core import chi, cp
 from repro.core.exprs import CP, BinOp, RoiArea

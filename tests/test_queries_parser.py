@@ -1,0 +1,142 @@
+"""Parser edge-case tests for the SQL-ish front-end (core/queries.py)."""
+
+import numpy as np
+import pytest
+
+from repro.core import CHIConfig, MaskStore, engine, queries
+from repro.core.exprs import AggCP, BinOp, CP, Const, RoiArea
+from repro.core.store import MASK_META_DTYPE
+from repro.data.masks import saliency_masks
+
+
+@pytest.fixture(scope="module")
+def small_store():
+    b, h, w = 16, 32, 32
+    masks = saliency_masks(b, h, w, seed=3)[0]
+    meta = np.zeros(b, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(b)
+    meta["image_id"] = np.arange(b) // 2
+    meta["mask_type"] = np.arange(b) % 2 + 1
+    cfg = CHIConfig(grid=4, num_bins=8, height=h, width=w)
+    return MaskStore.create_memory(masks, meta, cfg)
+
+
+# -- ORDER BY aliases --------------------------------------------------------
+
+def test_order_by_alias_resolves_to_expression():
+    q = queries.parse(
+        "SELECT image_id, CP(intersect(mask > 0.8), full_img, (0.5, 2.0)) "
+        "/ CP(union(mask > 0.8), full_img, (0.5, 2.0)) AS iou "
+        "FROM V GROUP BY image_id ORDER BY iou ASC LIMIT 7;")
+    assert q.kind == "topk" and q.k == 7 and q.desc is False
+    assert q.group_by_image
+    assert isinstance(q.expr, BinOp) and q.expr.op == "/"
+    assert isinstance(q.expr.left, AggCP) and q.expr.left.agg == "intersect"
+    assert isinstance(q.expr.right, AggCP) and q.expr.right.agg == "union"
+
+
+def test_order_by_inline_expression_and_desc_default():
+    q = queries.parse("SELECT mask_id FROM V "
+                      "ORDER BY CP(mask, full_img, (0.2, 0.6)) LIMIT 3;")
+    assert q.kind == "topk" and q.desc is True      # DESC is the default
+    q = queries.parse("SELECT mask_id FROM V "
+                      "ORDER BY CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 3;")
+    assert q.desc is True
+
+
+# -- WHERE: mask_type IN + AND chains ---------------------------------------
+
+def test_mask_type_in_with_predicate_and_chain(small_store):
+    q = queries.parse(
+        "SELECT mask_id FROM V WHERE mask_type IN (1, 2) AND "
+        "CP(mask, full_img, (0.0, 1.0)) >= 0;")
+    assert q.mask_types == (1, 2)
+    assert q.op == ">=" and q.threshold == 0
+    ids, _ = q.run(small_store)
+    assert len(ids) == len(small_store)             # trivially-true predicate
+
+    # order-independent: predicate first, mask_type second
+    q2 = queries.parse(
+        "SELECT mask_id FROM V WHERE CP(mask, full_img, (0.0, 1.0)) >= 0 "
+        "AND mask_type IN (2);")
+    assert q2.mask_types == (2,)
+    ids2, _ = q2.run(small_store)
+    types = small_store.meta["mask_type"][small_store.positions_of(ids2)]
+    assert np.all(types == 2)
+
+
+def test_multiple_cp_predicates_rejected():
+    with pytest.raises(SyntaxError):
+        queries.parse("SELECT mask_id FROM V WHERE "
+                      "CP(mask, full_img, (0.0, 0.5)) > 1 AND "
+                      "CP(mask, full_img, (0.5, 1.0)) > 1;")
+
+
+# -- literal ROI rectangles --------------------------------------------------
+
+def test_literal_roi_rectangle(small_store):
+    q = queries.parse("SELECT mask_id FROM V WHERE "
+                      "CP(mask, (4, 4, 28, 28), (0.5, 1.0)) >= 0;")
+    assert isinstance(q.expr, CP) and q.expr.roi == (4, 4, 28, 28)
+    ids_q, _ = q.run(small_store)
+    ids_e, _ = engine.filter_query(small_store, CP((4, 4, 28, 28), 0.5, 1.0),
+                                   ">=", 0)
+    assert set(ids_q) == set(ids_e)
+
+
+def test_roi_area_and_arithmetic():
+    q = queries.parse("SELECT mask_id FROM V WHERE "
+                      "CP(mask, roi, (0.8, 1.0)) / AREA(roi) "
+                      "+ 0.5 * CP(mask, roi, (0.0, 0.2)) < 10;")
+    assert isinstance(q.expr, BinOp) and q.expr.op == "+"
+    assert isinstance(q.expr.left.right, RoiArea)
+    assert isinstance(q.expr.right.left, Const)
+    assert q.expr.right.left.value == 0.5
+
+
+# -- SCALAR_AGG forms --------------------------------------------------------
+
+@pytest.mark.parametrize("agg", ["SUM", "AVG", "MIN", "MAX"])
+def test_scalar_agg_forms(small_store, agg):
+    q = queries.parse(f"SELECT SCALAR_AGG({agg}, "
+                      "CP(mask, full_img, (0.4, 0.8))) FROM V;")
+    assert q.kind == "scalar_agg" and q.agg == agg
+    value, _ = q.run(small_store)
+    want, _ = engine.scalar_agg(small_store, CP(None, 0.4, 0.8), agg)
+    assert abs(value - want) < 1e-9
+
+
+def test_scalar_agg_case_insensitive():
+    q = queries.parse("SELECT SCALAR_AGG(avg, "
+                      "CP(mask, full_img, (0.0, 1.0))) FROM V;")
+    assert q.agg == "AVG"
+
+
+# -- malformed queries -------------------------------------------------------
+
+@pytest.mark.parametrize("sql", [
+    "SELECT mask_id FROM V ORDER BY CP(mask, full_img, (0.2, 0.6));",  # no LIMIT
+    "SELECT mask_id FROM V;",                       # filter without predicate
+    "SELECT mask_id FROM V WHERE CP(mask, roi) < 5;",      # CP arity
+    "SELECT mask_id FROM V WHERE CP(mask, roi, (0.5, 1.0)) = 5;",  # bad op
+    "SELECT mask_id FROM V WHERE CP(mask, bogus, (0.5, 1.0)) < 5;",  # bad ROI
+    "SELECT nothing FROM V;",                       # bad select column
+    "SELECT mask_id FROM V WHERE mask_type IN 1;",  # IN without parens
+    "SELECT mask_id FROM V GROUP BY mask_id;",      # can only group by image
+    "SELECT",                                       # truncated
+    # a CP WHERE predicate would be silently dropped by ORDER BY — refused
+    "SELECT mask_id FROM V WHERE CP(mask, full_img, (0.5, 1.0)) > 100 "
+    "ORDER BY CP(mask, full_img, (0.0, 0.5)) DESC LIMIT 5;",
+    "SELECT mask_id FROM V WHERE ",                 # ends where expr expected
+    "SELECT mask_id FROM V ORDER BY ",              # ends where expr expected
+    "SELECT mask_id FROM V WHERE CP(",              # ends inside CP(
+])
+def test_malformed_queries_raise_syntaxerror(sql):
+    with pytest.raises(SyntaxError):
+        queries.parse(sql)
+
+
+def test_image_id_select_implies_grouping():
+    q = queries.parse("SELECT image_id FROM V ORDER BY "
+                      "CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 4;")
+    assert q.group_by_image

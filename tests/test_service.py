@@ -1,0 +1,273 @@
+"""Service-layer tests: sessions, plan/result caching, fused verification,
+and the HTTP/JSON API — the acceptance contract of the serving subsystem.
+
+Key invariants:
+  * pagination over n pages ≡ one-shot ``LIMIT n·k`` (ids AND scores);
+  * a warm result-cache hit performs zero mask loads;
+  * concurrent fused verification loads strictly fewer bytes than running
+    the same queries serially without sharing;
+  * the HTTP front is a faithful translation of the service API.
+"""
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import CHIConfig, MaskStore, engine, queries
+from repro.core.store import MASK_META_DTYPE
+from repro.data.masks import object_boxes, saliency_masks
+from repro.service import MaskSearchService, ServiceClient, make_server
+
+B, H, W = 60, 64, 64
+
+TOPK_SQL = ("SELECT mask_id FROM MasksDatabaseView ORDER BY "
+            "CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 5;")
+
+
+@pytest.fixture(scope="module")
+def db(tmp_path_factory):
+    root = tmp_path_factory.mktemp("servicedb")
+    rois = object_boxes(B, H, W, seed=2)
+    masks, _ = saliency_masks(B, H, W, seed=1, attacked_fraction=0.25,
+                              boxes=rois)
+    meta = np.zeros(B, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(B) + 1000
+    meta["image_id"] = np.arange(B) // 2
+    meta["mask_type"] = np.arange(B) % 2 + 1
+    cfg = CHIConfig(grid=8, num_bins=16, height=H, width=W)
+    MaskStore.create_disk(str(root), masks, meta, cfg)
+    return str(root), rois
+
+
+def _fresh_service(root, rois=None, **kw):
+    return MaskSearchService(MaskStore.open_disk(root), provided_rois=rois,
+                             **kw)
+
+
+def test_session_pagination_matches_oneshot(db):
+    root, rois = db
+    svc = _fresh_service(root, verify_batch=8)
+    first = svc.query(TOPK_SQL, session=True, page_size=5)
+    pages = [first["page"]]
+    for _ in range(3):
+        pages.append(svc.next_page(first["session"])["page"])
+    paged_ids = sum((p["ids"] for p in pages), [])
+    paged_scores = sum((p["scores"] for p in pages), [])
+    assert [p["offset"] for p in pages] == [0, 5, 10, 15]
+
+    store = MaskStore.open_disk(root)
+    plan = queries.parse(TOPK_SQL)
+    ids, scores, _ = engine.topk_query(store, plan.expr, 20, desc=plan.desc)
+    assert paged_ids == [int(x) for x in ids]
+    np.testing.assert_allclose(paged_scores, scores)
+
+
+def test_pagination_matches_oneshot_with_tied_scores():
+    """CP scores are integer counts, so boundary ties are the norm; the
+    deterministic tie-break (by candidate order) must make paginated and
+    one-shot runs agree even when the k-th rank is heavily tied."""
+    b, h, w = 40, 32, 32
+    # only 4 distinct mask patterns → massively tied scores
+    base = saliency_masks(4, h, w, seed=9)[0]
+    masks = base[np.arange(b) % 4]
+    meta = np.zeros(b, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(b)
+    meta["image_id"] = np.arange(b)
+    cfg = CHIConfig(grid=4, num_bins=8, height=h, width=w)
+    store = MaskStore.create_memory(masks, meta, cfg)
+    svc = MaskSearchService(store, verify_batch=4)
+
+    sql = ("SELECT mask_id FROM MasksDatabaseView ORDER BY "
+           "CP(mask, full_img, (0.3, 0.7)) DESC LIMIT 5;")
+    first = svc.query(sql, session=True, page_size=5)
+    pages = [first["page"]]
+    for _ in range(3):
+        pages.append(svc.next_page(first["session"])["page"])
+    paged_ids = sum((p["ids"] for p in pages), [])
+
+    store2 = MaskStore.create_memory(masks, meta, cfg)
+    plan = queries.parse(sql)
+    ids, scores, _ = engine.topk_query(store2, plan.expr, 20, desc=True)
+    assert paged_ids == [int(x) for x in ids]
+    assert len(set(paged_ids)) == 20                 # no dup/drop across pages
+
+
+def test_pagination_is_incremental_not_rerun(db):
+    root, _ = db
+    svc = _fresh_service(root, verify_batch=8)
+    first = svc.query(TOPK_SQL, session=True, page_size=5)
+    verified_p1 = first["stats"]["n_verified"]
+    page2 = svc.next_page(first["session"])
+    # the second page resumes the frontier: strictly fewer new verifications
+    # than re-running a LIMIT 10 query from scratch
+    store = MaskStore.open_disk(root)
+    plan = queries.parse(TOPK_SQL)
+    _, _, full = engine.topk_query(store, plan.expr, 10, desc=True)
+    assert page2["stats"]["n_verified"] - verified_p1 < full.n_verified
+
+
+def test_warm_result_cache_zero_mask_loads(db):
+    root, _ = db
+    svc = _fresh_service(root)
+    cold = svc.query(TOPK_SQL)
+    assert not cold["cache_hit"]
+    io_before = svc.store.io.bytes_read
+    warm = svc.query(TOPK_SQL)
+    assert warm["cache_hit"]
+    assert warm["stats"]["bytes_loaded"] == 0
+    assert svc.store.io.bytes_read == io_before      # zero mask loads
+    assert warm["ids"] == cold["ids"]
+    np.testing.assert_allclose(warm["scores"], cold["scores"])
+    # caller mutation must not poison the cache
+    warm["ids"].reverse()
+    cold["ids"].clear()
+    again = svc.query(TOPK_SQL)
+    assert again["cache_hit"] and again["ids"] == [int(x) for x in
+                                                   np.asarray(warm["ids"])[::-1]]
+
+
+def test_bounds_cache_reused_across_thresholds(db):
+    root, _ = db
+    svc = _fresh_service(root)
+    base = "SELECT mask_id FROM MasksDatabaseView WHERE " \
+           "CP(mask, full_img, (0.2, 0.6)) > {};"
+    svc.query(base.format(500))
+    assert svc.planner.bounds_cache.info.misses == 1
+    out = svc.query(base.format(800))
+    assert svc.planner.bounds_cache.info.hits >= 1   # refined query: free pass
+
+    store = MaskStore.open_disk(root)
+    plan = queries.parse(base.format(800))
+    ids_ref, _ = engine.filter_query(store, plan.expr, plan.op,
+                                     plan.threshold)
+    assert sorted(out["ids"]) == sorted(int(x) for x in ids_ref)
+
+
+def test_fused_batch_loads_fewer_bytes_than_serial(db):
+    root, _ = db
+    sqls = ["SELECT mask_id FROM MasksDatabaseView ORDER BY "
+            f"CP(mask, full_img, ({lv}, {lv + 0.4})) DESC LIMIT 15;"
+            for lv in (0.2, 0.25, 0.3)]
+
+    svc = _fresh_service(root, verify_batch=8)
+    io0 = svc.store.io.bytes_read
+    fused = svc.submit_batch(sqls)
+    fused_bytes = svc.store.io.bytes_read - io0
+    assert svc.scheduler.stats.fused_passes > 0
+    assert svc.store.cache_stats.bytes_saved > 0     # residues overlapped
+
+    serial_store = MaskStore.open_disk(root)         # no sharing at all
+    io0 = serial_store.io.bytes_read
+    serial = [queries.parse(s).run(serial_store) for s in sqls]
+    serial_bytes = serial_store.io.bytes_read - io0
+
+    assert fused_bytes < serial_bytes
+    for got, ((ids, scores), _) in zip(fused, serial):
+        assert got["ids"] == [int(x) for x in ids]
+        np.testing.assert_allclose(got["scores"], scores)
+
+
+def test_concurrent_session_pages_fused(db):
+    root, _ = db
+    svc = _fresh_service(root, verify_batch=8)
+    sids = []
+    for lv in (0.2, 0.25):
+        r = svc.query("SELECT mask_id FROM MasksDatabaseView ORDER BY "
+                      f"CP(mask, full_img, ({lv}, {lv + 0.4})) DESC LIMIT 5;",
+                      session=True, page_size=5)
+        sids.append(r["session"])
+    passes0 = svc.scheduler.stats.fused_passes
+    pages = svc.next_pages({sid: None for sid in sids})
+    assert set(pages) == set(sids)
+    for sid in sids:
+        assert pages[sid]["page"]["offset"] == 5
+        assert len(pages[sid]["page"]["ids"]) == 5
+    assert svc.scheduler.stats.fused_passes >= passes0
+
+
+def test_filter_and_scalar_through_service(db):
+    root, rois = db
+    svc = _fresh_service(root, rois)
+    fsql = ("SELECT mask_id FROM MasksDatabaseView WHERE "
+            "CP(mask, roi, (0.8, 1.0)) / AREA(roi) < 0.05;")
+    got = svc.query(fsql)
+    store = MaskStore.open_disk(root)
+    plan = queries.parse(fsql)
+    want, _ = engine.filter_query(store, plan.expr, plan.op, plan.threshold,
+                                  provided_rois=rois)
+    assert sorted(got["ids"]) == sorted(int(x) for x in want)
+
+    ssql = ("SELECT SCALAR_AGG(AVG, CP(mask, full_img, (0.5, 1.0))) "
+            "FROM MasksDatabaseView;")
+    got = svc.query(ssql)
+    want_v, _ = engine.scalar_agg(store, queries.parse(ssql).expr, "AVG")
+    assert abs(got["value"] - want_v) < 1e-9
+    # scalar results are result-cached too
+    warm = svc.query(ssql)
+    assert warm["cache_hit"] and warm["value"] == got["value"]
+
+
+def test_group_query_through_batch_fallback(db):
+    root, _ = db
+    svc = _fresh_service(root, verify_batch=8)
+    out = svc.submit_batch([queries.SCENARIO3_IOU])
+    store = MaskStore.open_disk(root)
+    (ids, scores), _ = queries.run(queries.SCENARIO3_IOU, store)
+    assert out[0]["ids"] == [int(x) for x in ids]
+    np.testing.assert_allclose(out[0]["scores"], scores)
+    assert svc.scheduler.stats.fallback_batches > 0  # MASK_AGG can't fuse
+
+
+def test_session_errors(db):
+    root, _ = db
+    svc = _fresh_service(root)
+    with pytest.raises(ValueError):
+        svc.query("SELECT SCALAR_AGG(AVG, CP(mask, full_img, (0.5, 1.0))) "
+                  "FROM V;", session=True)
+    with pytest.raises(KeyError):
+        svc.next_page("no-such-session")
+    r = svc.query(TOPK_SQL, session=True)
+    assert svc.drop_session(r["session"])
+    with pytest.raises(KeyError):
+        svc.next_page(r["session"])
+
+
+def test_http_roundtrip(db):
+    root, _ = db
+    svc = _fresh_service(root, verify_batch=8)
+    httpd = make_server(svc, "127.0.0.1", 0)
+    thread = threading.Thread(target=httpd.serve_forever, daemon=True)
+    thread.start()
+    try:
+        host, port = httpd.server_address[:2]
+        client = ServiceClient(f"http://{host}:{port}")
+        assert client.healthz()["ok"]
+
+        one = client.query(TOPK_SQL)
+        assert one["kind"] == "topk" and len(one["ids"]) == 5
+
+        sess = client.query(TOPK_SQL, session=True, page_size=5)
+        page2 = client.next_page(sess["session"], k=5)
+        assert page2["page"]["offset"] == 5
+        assert client.drop_session(sess["session"])["dropped"]
+
+        batch = client.workload([TOPK_SQL, TOPK_SQL.replace("0.2", "0.25")])
+        assert len(batch) == 2 and batch[0]["cache_hit"]  # one-shot above
+
+        stats = client.stats()
+        assert stats["queries"]["total"] >= 4
+        assert "shared_cache" in stats and "result_cache" in stats
+
+        from repro.service import ServiceError
+        with pytest.raises(ServiceError) as err:
+            client.query("SELECT nonsense FROM V;")
+        assert err.value.code == 400
+        with pytest.raises(ServiceError) as err:
+            client.next_page("missing")
+        assert err.value.code == 404
+    finally:
+        httpd.shutdown()
+        httpd.server_close()
+        thread.join(timeout=5)
+        svc.close()
