@@ -12,6 +12,10 @@ Measured:
   * serve_fused / serve_serial — Q concurrent top-k queries through the
                                 fused scheduler vs serial unshared runs
                                 (bytes shared is the headline).
+  * serve_filtered_topk / serve_filtered_naive — a predicate-tree WHERE
+                                composed with ORDER BY … LIMIT: three-valued
+                                bounds pruning vs the naive filter-then-rank
+                                full scan (bytes avoided is the headline).
 
     PYTHONPATH=src python benchmarks/bench_serve.py --json BENCH_serve.json
 """
@@ -180,6 +184,53 @@ def bench_fused(root, record):
     }
 
 
+FILTERED_TOPK = (
+    "SELECT mask_id FROM MasksDatabaseView "
+    "WHERE CP(mask, roi, (0.8, 1.0)) > 200 "
+    "AND NOT CP(mask, full_img, (0.2, 0.6)) < 100 "
+    "ORDER BY CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 25;")
+
+
+def bench_filtered_topk(root, rois, record):
+    """Predicate tree + ranking through one run vs naive filter-then-rank."""
+    from repro.core import MaskStore, queries
+    from repro.core.plan import run_plan
+
+    svc = _fresh_service(root, rois, verify_batch=256)
+    t0 = time.perf_counter()
+    out = svc.query(FILTERED_TOPK)
+    t_idx = time.perf_counter() - t0
+    idx_bytes = svc.store.io.bytes_read
+    verified = out["stats"]["n_verified"]
+    cands = out["stats"]["n_candidates"]
+    n_hits = len(out["ids"])
+    svc.close()
+
+    store = MaskStore.open_disk(root)
+    plan = queries.parse(FILTERED_TOPK).plan
+    t0 = time.perf_counter()
+    (ids0, _), _ = run_plan(store, plan, provided_rois=rois,
+                            use_index=False)
+    t_naive = time.perf_counter() - t0
+    naive_bytes = store.io.bytes_read
+    assert [int(x) for x in ids0] == out["ids"]      # pruning is exact
+
+    _row("serve_filtered_topk", t_idx,
+         f"bytes={idx_bytes};verified={verified}/{cands};hits={n_hits}")
+    _row("serve_filtered_naive", t_naive,
+         f"bytes={naive_bytes};prune_gain="
+         f"{naive_bytes / max(idx_bytes, 1):.2f}x_bytes")
+    record["filtered_topk"] = {
+        "sql": FILTERED_TOPK,
+        "indexed": {"latency_s": t_idx, "bytes_loaded": idx_bytes,
+                    "n_verified": verified, "n_candidates": cands,
+                    "n_hits": n_hits},
+        "naive_filter_then_rank": {"latency_s": t_naive,
+                                   "bytes_loaded": naive_bytes},
+        "bytes_ratio": naive_bytes / max(idx_bytes, 1),
+    }
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-masks", type=int, default=2000)
@@ -200,6 +251,7 @@ def main():
         bench_refine(root, rois, record)
         bench_pagination(root, record)
         bench_fused(root, record)
+        bench_filtered_topk(root, rois, record)
     finally:
         shutil.rmtree(tmpdir, ignore_errors=True)
     if args.json:

@@ -5,7 +5,10 @@ Every query runs in two phases:
 1. **Filter** — CHI-derived bounds are computed for every candidate (no mask
    bytes touched).  Candidates whose bounds already decide the predicate are
    accepted/pruned outright; bound-coincident candidates (``lb == ub``) have
-   *known exact scores* for free.
+   *known exact scores* for free.  Boolean predicate trees prune through
+   three-valued logic (:meth:`repro.core.exprs.Pred.decide`): a conjunction
+   rejects as soon as one conjunct must fail, a disjunction accepts as soon
+   as one disjunct must hold.
 2. **Verification** — only the undecided residue is loaded from the mask
    tier and evaluated exactly.  For Top-K, verification proceeds in rounds of
    ``verify_batch`` ordered by most-promising bound, and stops as soon as the
@@ -13,8 +16,15 @@ Every query runs in two phases:
    (the paper's incremental-threshold pruning, recast as fixed-size device
    batches — see DESIGN.md §3 on why batches instead of a per-mask heap).
 
-All functions return :class:`ExecStats` telling exactly how much I/O the
-index avoided — the quantity behind the paper's 100× claim.
+Physical execution is uniform: every run object — :class:`FilterRun`,
+:class:`TopKRun`, :class:`FilteredTopKRun`, :class:`ScalarAggRun`,
+:class:`MinMaxAggRun` — presents ``target / take_batch / apply_exact /
+finished / result`` (DESIGN.md §6), so sessions resume any of them and the
+service scheduler fuses their verification batches without knowing which
+operator it is driving.
+
+All runs expose :class:`ExecStats` telling exactly how much I/O the index
+avoided — the quantity behind the paper's 100× claim.
 """
 
 from __future__ import annotations
@@ -25,7 +35,8 @@ from typing import Optional
 
 import numpy as np
 
-from .exprs import (GroupEvalContext, MaskEvalContext, Node, is_group_expr)
+from .exprs import (Cmp, CP, GroupEvalContext, MaskEvalContext, Node, Pred,
+                    eval_with_counts, is_group_expr)
 
 
 @dataclasses.dataclass
@@ -43,28 +54,10 @@ class ExecStats:
         return self.n_verified / max(self.n_candidates, 1)
 
 
-_OPS = {
-    "<":  (lambda ub, t: ub < t,  lambda lb, t: lb >= t),
-    "<=": (lambda ub, t: ub <= t, lambda lb, t: lb > t),
-    ">":  (lambda lb, t: lb > t,  lambda ub, t: ub <= t),
-    ">=": (lambda lb, t: lb >= t, lambda ub, t: ub < t),
-}
-
-
-def _accept_reject(op: str, lb, ub, threshold: float):
-    """Sound bound decisions: accept iff the predicate must hold, reject iff
-    it cannot hold, for exact ∈ [lb, ub]."""
-    if op in ("<", "<="):
-        acc_fn, rej_fn = _OPS[op]
-        return acc_fn(ub, threshold), rej_fn(lb, threshold)
-    acc_fn, rej_fn = _OPS[op]
-    return acc_fn(lb, threshold), rej_fn(ub, threshold)
-
-
-def _make_context(store, expr: Node, positions, group_by_image: bool,
-                  mask_types, provided_rois, partial_rows: bool = True):
+def _make_context(store, grouped: bool, positions, mask_types, provided_rois,
+                  partial_rows: bool = True):
     """Build the evaluation context + the id array that results refer to."""
-    if is_group_expr(expr) or group_by_image:
+    if grouped:
         sel = (store.select(mask_type=mask_types) if mask_types is not None
                else np.arange(len(store)))
         if positions is not None:
@@ -92,49 +85,49 @@ def _make_context(store, expr: Node, positions, group_by_image: bool,
     return ctx, store.meta["mask_id"][positions]
 
 
-def _exact_for(ctx, expr, idx):
-    if isinstance(ctx, GroupEvalContext):
-        return ctx.exact(expr, idx)
-    return ctx.exact(expr, idx)
+def _grouped_for(exprs, group_by_image: bool) -> bool:
+    return group_by_image or any(is_group_expr(e) for e in exprs)
 
 
 # ---------------------------------------------------------------------------
-# Filter query
+# The uniform resumable run
 # ---------------------------------------------------------------------------
 
 
 class _VerifyRun:
-    """Shared machinery of resumable verification runs (DESIGN.md §3).
+    """Shared machinery of resumable verification runs (DESIGN.md §3/§6).
 
-    Construction runs the bounds pass (or reuses a cached ``bounds=(lb,
-    ub)`` pair from the service planner).  Subclasses fill ``pending``
-    (candidate indices in verification-priority order) and implement
-    :meth:`finished` and :meth:`_apply`.  Verification is then driven
-    either self-contained (:meth:`_drain`) or externally by the service
-    scheduler, which pairs :meth:`take_batch` with :meth:`apply_exact`
-    to fuse batches from many concurrent runs into one kernel pass.
+    Construction runs the bounds pass — per distinct value expression,
+    through an optional ``bounds_hook`` (``get(expr) -> (lb, ub) | None``,
+    ``put(expr, lb, ub)``) such as the service planner's bounds cache.
+    Subclasses fill ``pending`` (candidate indices in verification-priority
+    order) and implement :meth:`finished`, :meth:`_apply` and
+    :meth:`result`.  Verification is then driven either self-contained
+    (:meth:`ensure`) or externally by the service scheduler, which pairs
+    :meth:`take_batch` with :meth:`apply_exact` to fuse batches from many
+    concurrent runs into one kernel pass; :meth:`cp_terms` and
+    :meth:`fused_values` are the fusion contract.
     """
 
-    def __init__(self, store, expr: Node, *,
+    def __init__(self, store, exprs, *,
                  positions: Optional[np.ndarray] = None, mask_types=None,
                  group_by_image: bool = False,
                  provided_rois: Optional[np.ndarray] = None,
-                 verify_batch: int = 256, bounds=None):
+                 verify_batch: int = 256, bounds_hook=None):
         self.store = store
-        self.expr = expr
+        self.exprs = tuple(exprs)
         self.verify_batch = max(int(verify_batch), 1)
-        self.ctx, self.ids = _make_context(store, expr, positions,
-                                           group_by_image, mask_types,
-                                           provided_rois)
+        grouped = _grouped_for(self.exprs, group_by_image)
+        self.ctx, self.ids = _make_context(store, grouped, positions,
+                                           mask_types, provided_rois)
+        if (isinstance(self.ctx, MaskEvalContext) and
+                len({t for e in self.exprs for t in e.cp_terms()}) > 1):
+            # ROI-row partial loads only pay off for a single distinct CP
+            # term; a multi-term run shares one full-mask load instead.
+            self.ctx.partial_rows = False
         self.stats = ExecStats(n_candidates=len(self.ids))
-        t0 = time.perf_counter()
-        if bounds is None:
-            lb, ub = self.ctx.bounds(expr)
-        else:
-            lb, ub = bounds
-        self.stats.bound_time_s = time.perf_counter() - t0
-        self.lb = np.asarray(lb, np.float64)
-        self.ub = np.asarray(ub, np.float64)
+        self._bounds_hook = bounds_hook
+        self._bounds_memo: dict = {}
         self.pending = np.empty(0, dtype=np.int64)
         self.cursor = 0
 
@@ -142,10 +135,65 @@ class _VerifyRun:
     def n(self) -> int:
         return len(self.ids)
 
+    # -- bounds ------------------------------------------------------------
+    def expr_bounds(self, expr: Node):
+        """(lb, ub) float64 arrays for ``expr`` over all candidates, memoized
+        per run and (optionally) cached across runs by the bounds hook."""
+        if expr in self._bounds_memo:
+            return self._bounds_memo[expr]
+        t0 = time.perf_counter()
+        cached = self._bounds_hook.get(expr) if self._bounds_hook else None
+        if cached is not None:
+            lb, ub = cached
+        else:
+            lb, ub = self.ctx.bounds(expr)
+            lb = np.asarray(lb, np.float64)
+            ub = np.asarray(ub, np.float64)
+            if self._bounds_hook is not None:
+                self._bounds_hook.put(expr, lb, ub)
+        self.stats.bound_time_s += time.perf_counter() - t0
+        self._bounds_memo[expr] = (lb, ub)
+        return lb, ub
+
+    # -- the uniform drive interface --------------------------------------
+    def target(self, k: Optional[int] = None) -> Optional[int]:
+        """Set/raise the finality target (top-k runs); no-op elsewhere, so
+        callers can drive any run kind uniformly."""
+        return k
+
     def finished(self) -> bool:
         raise NotImplementedError
 
-    def _apply(self, batch: np.ndarray, values: np.ndarray) -> None:
+    def result(self):
+        raise NotImplementedError
+
+    def cp_terms(self) -> list:
+        """All CP terms this run's verification evaluates (fusion input)."""
+        return [t for e in self.exprs for t in e.cp_terms()]
+
+    def exact_values(self, batch: np.ndarray):
+        """Self-contained exact evaluation of one batch (loads mask bytes)."""
+        raise NotImplementedError
+
+    def _self_counts(self, batch: np.ndarray):
+        """Per-CP-term exact counts for ``batch``, evaluated **once per
+        distinct term** (a predicate and a ranking sharing an expression
+        share its loads/kernel rows even in self-verification), or None when
+        the run isn't a pure per-mask CP evaluation."""
+        if not isinstance(self.ctx, MaskEvalContext):
+            return None
+        terms = set(self.cp_terms())
+        if terms and all(isinstance(t, CP) for t in terms):
+            return {t: self.ctx.exact(t, batch) for t in terms}
+        return None
+
+    def fused_values(self, batch: np.ndarray, counts: dict):
+        """Exact evaluation when every CP term's count was precomputed by a
+        fused multi-query kernel pass (``counts``: CP node → array aligned
+        with ``batch``)."""
+        raise NotImplementedError
+
+    def _apply(self, batch: np.ndarray, values) -> None:
         raise NotImplementedError
 
     def take_batch(self) -> np.ndarray:
@@ -154,7 +202,7 @@ class _VerifyRun:
         self.cursor += len(batch)
         return batch
 
-    def apply_exact(self, batch: np.ndarray, values: np.ndarray) -> None:
+    def apply_exact(self, batch: np.ndarray, values) -> None:
         self._apply(batch, values)
         self.stats.n_verified += len(batch)
         self.stats.n_rounds += 1
@@ -162,7 +210,7 @@ class _VerifyRun:
     def self_verify(self, batch: np.ndarray) -> None:
         io0 = self.store.io.bytes_read
         t0 = time.perf_counter()
-        self.apply_exact(batch, _exact_for(self.ctx, self.expr, batch))
+        self.apply_exact(batch, self.exact_values(batch))
         self.stats.verify_time_s += time.perf_counter() - t0
         self.stats.bytes_loaded += self.store.io.bytes_read - io0
 
@@ -173,25 +221,48 @@ class _VerifyRun:
                 break
             self.self_verify(batch)
 
+    def ensure(self, k: Optional[int] = None) -> None:
+        """Drive verification to completion (optionally raising the target)."""
+        if k is not None:
+            self.target(k)
+        self._drain()
+
+
+def _as_pred(expr_or_pred, op, threshold) -> Pred:
+    if isinstance(expr_or_pred, Pred):
+        if op is not None or threshold is not None:
+            raise ValueError("op/threshold are implied by a predicate tree")
+        return expr_or_pred
+    return Cmp(expr_or_pred, op, threshold)
+
 
 class FilterRun(_VerifyRun):
-    """Resumable verification state for a filter query: the undecided
+    """Resumable verification state for a filter query — a boolean predicate
+    tree (or the legacy ``expr op threshold`` triple) whose bound-undecided
     residue is verified in chunks until exhausted."""
 
-    def __init__(self, store, expr: Node, op: str, threshold: float, *,
+    def __init__(self, store, expr_or_pred, op: Optional[str] = None,
+                 threshold: Optional[float] = None, *,
                  positions: Optional[np.ndarray] = None, mask_types=None,
                  group_by_image: bool = False,
                  provided_rois: Optional[np.ndarray] = None,
-                 verify_batch: int = 256, bounds=None):
-        if op not in _OPS:
-            raise ValueError(f"bad comparison {op!r}")
-        self.op = op
-        self.threshold = threshold
-        super().__init__(store, expr, positions=positions,
+                 verify_batch: int = 256, bounds=None, bounds_hook=None):
+        self.pred = _as_pred(expr_or_pred, op, threshold)
+        # legacy surface for single-comparison plans
+        if isinstance(self.pred, Cmp):
+            self.expr = self.pred.expr
+            self.op = self.pred.op
+            self.threshold = self.pred.threshold
+        else:
+            self.expr, self.op, self.threshold = None, None, None
+        super().__init__(store, self.pred.value_exprs(), positions=positions,
                          mask_types=mask_types, group_by_image=group_by_image,
                          provided_rois=provided_rois,
-                         verify_batch=verify_batch, bounds=bounds)
-        accept, reject = _accept_reject(op, self.lb, self.ub, threshold)
+                         verify_batch=verify_batch, bounds_hook=bounds_hook)
+        if bounds is not None and self.expr is not None:
+            self._bounds_memo[self.expr] = tuple(
+                np.asarray(b, np.float64) for b in bounds)
+        accept, reject = self.pred.decide(self.expr_bounds, self.ctx)
         self.accept = np.asarray(accept).copy()
         self.pending = np.nonzero(~(accept | reject))[0]
         self.stats.n_decided_by_bounds = self.n - len(self.pending)
@@ -199,54 +270,57 @@ class FilterRun(_VerifyRun):
     def finished(self) -> bool:
         return self.cursor >= len(self.pending)
 
-    def _apply(self, batch: np.ndarray, values: np.ndarray) -> None:
-        self.accept[batch] = _cmp(self.op, values, self.threshold)
+    def exact_values(self, batch):
+        counts = self._self_counts(batch)
+        if counts is not None:
+            return self.fused_values(batch, counts)
+        return self.pred.exact(self.ctx, batch)
 
-    def ensure(self) -> None:
-        self._drain()
+    def fused_values(self, batch, counts):
+        return self.pred.exact_with_counts(self.ctx, batch, counts)
+
+    def _apply(self, batch: np.ndarray, values) -> None:
+        self.accept[batch] = values
 
     def result(self) -> np.ndarray:
         return self.ids[self.accept]
 
 
-def filter_query(store, expr: Node, op: str, threshold: float, *,
+def filter_query(store, expr_or_pred, op: Optional[str] = None,
+                 threshold: Optional[float] = None, *,
                  positions: Optional[np.ndarray] = None,
                  mask_types=None, group_by_image: bool = False,
                  provided_rois: Optional[np.ndarray] = None,
                  use_index: bool = True, bounds=None):
-    """``SELECT {mask_id|image_id} WHERE expr op threshold``.
+    """``SELECT {mask_id|image_id} WHERE predicate``.
 
-    Returns ``(ids, stats)``.  ``use_index=False`` is the full-scan baseline
-    (the paper's "without MaskSearch").  ``bounds`` optionally supplies a
-    precomputed ``(lb, ub)`` pair (the service's bounds cache).
+    The predicate is either a :class:`repro.core.exprs.Pred` tree or the
+    legacy ``expr, op, threshold`` triple.  Returns ``(ids, stats)``.
+    ``use_index=False`` is the full-scan baseline (the paper's "without
+    MaskSearch").  ``bounds`` optionally supplies a precomputed ``(lb, ub)``
+    pair for a single-comparison predicate (legacy service surface).
     """
+    pred = _as_pred(expr_or_pred, op, threshold)
     if not use_index:
-        ctx, ids = _make_context(store, expr, positions, group_by_image,
-                                 mask_types, provided_rois,
-                                 partial_rows=False)
+        grouped = _grouped_for(pred.value_exprs(), group_by_image)
+        ctx, ids = _make_context(store, grouped, positions, mask_types,
+                                 provided_rois, partial_rows=False)
         n = len(ids)
         stats = ExecStats(n_candidates=n)
         io_before = store.io.bytes_read
         t0 = time.perf_counter()
-        exact = _exact_for(ctx, expr, np.arange(n))
-        keep = _cmp(op, exact, threshold)
+        keep = pred.exact(ctx, np.arange(n))
         stats.n_verified = n
         stats.verify_time_s = time.perf_counter() - t0
         stats.bytes_loaded = store.io.bytes_read - io_before
         return ids[keep], stats
 
-    run = FilterRun(store, expr, op, threshold, positions=positions,
+    run = FilterRun(store, pred, positions=positions,
                     mask_types=mask_types, group_by_image=group_by_image,
                     provided_rois=provided_rois,
                     verify_batch=max(len(store), 1), bounds=bounds)
     run.ensure()
     return run.result(), run.stats
-
-
-def _cmp(op, values, threshold):
-    import operator
-    return {"<": operator.lt, "<=": operator.le,
-            ">": operator.gt, ">=": operator.ge}[op](values, threshold)
 
 
 # ---------------------------------------------------------------------------
@@ -264,28 +338,55 @@ class TopKRun(_VerifyRun):
     can *grow* between rounds — :meth:`target` re-derives the static pruning
     frontier from the cached bounds, so a GUI's "next 25" costs only the
     extra verification batches, never a fresh bounds pass.
+
+    The frontier is written once, predicate-aware: a plain top-k is the
+    trivial case where every candidate is known to qualify (``p_true`` all
+    set); :class:`FilteredTopKRun` re-derives ``p_true``/``p_false`` from a
+    predicate tree and shares every line of the pruning machinery.
     """
 
     def __init__(self, store, expr: Node, *, desc: bool = True,
                  positions: Optional[np.ndarray] = None, mask_types=None,
                  group_by_image: bool = False,
                  provided_rois: Optional[np.ndarray] = None,
-                 verify_batch: int = 256, bounds=None):
+                 verify_batch: int = 256, bounds=None, bounds_hook=None,
+                 _pred_exprs=()):
         self.desc = desc
-        super().__init__(store, expr, positions=positions,
+        self.expr = expr
+        super().__init__(store, list(_pred_exprs) + [expr],
+                         positions=positions,
                          mask_types=mask_types, group_by_image=group_by_image,
                          provided_rois=provided_rois,
-                         verify_batch=verify_batch, bounds=bounds)
+                         verify_batch=verify_batch, bounds_hook=bounds_hook)
+        if bounds is not None:
+            self._bounds_memo[expr] = tuple(
+                np.asarray(b, np.float64) for b in bounds)
+        self._init_qualification()
+        self.lb, self.ub = self.expr_bounds(expr)
         # Scores: exact where bounds coincide, else pending verification.
         self.scores = np.where(self.lb == self.ub, self.lb, np.nan)
         self.known = ~np.isnan(self.scores)
-        self._known0 = self.known.copy()
+        self._resolved0 = self._resolved().copy()
         self.k = 0
         self.alive = np.zeros(self.n, dtype=bool)
 
-    def target(self, k: int) -> int:
+    def _init_qualification(self) -> None:
+        """Plain top-k: every candidate trivially satisfies the (absent)
+        predicate.  Overridden by FilteredTopKRun."""
+        self.p_true = np.ones(self.n, dtype=bool)
+        self.p_false = np.zeros(self.n, dtype=bool)
+        self.p_known = np.ones(self.n, dtype=bool)
+
+    def _resolved(self) -> np.ndarray:
+        """Candidates needing no verification: predicate known-false, or
+        predicate known (true) with an exact score."""
+        return self.p_false | (self.p_known & self.known)
+
+    def target(self, k: Optional[int] = None) -> int:
         """Set/raise the finality target to ``k`` (clamped to n) and
         re-derive the static pruning frontier.  Idempotent for equal k."""
+        if k is None:
+            return self.k
         k = min(int(k), self.n)
         if k == self.k:
             return k
@@ -297,16 +398,28 @@ class TopKRun(_VerifyRun):
             self.cursor = 0
             return k
         # Static pruning: a candidate can make top-k only if its optimistic
-        # bound beats the k-th best pessimistic bound.
+        # bound beats the k-th best pessimistic bound among candidates that
+        # *definitely* qualify — so no possibly-qualifying candidate is
+        # pruned on an assumption about another's unverified predicate.
+        possible = ~self.p_false
         if self.desc:
-            tau = np.partition(self.lb, -k)[-k]
-            self.alive = self.ub >= tau
+            definite = self.lb[self.p_true]
+            if len(definite) >= k:
+                tau = np.partition(definite, -k)[-k]
+                self.alive = possible & (self.ub >= tau)
+            else:
+                self.alive = possible
         else:
-            tau = np.partition(self.ub, k - 1)[k - 1]
-            self.alive = self.lb <= tau
+            # pessimistic for ASC is the *upper* bound
+            definite = self.ub[self.p_true]
+            if len(definite) >= k:
+                tau = np.partition(definite, k - 1)[k - 1]
+                self.alive = possible & (self.lb <= tau)
+            else:
+                self.alive = possible
         self.stats.n_decided_by_bounds = int(
-            n - np.count_nonzero(self.alive & ~self._known0))
-        pending = np.nonzero(self.alive & ~self.known)[0]
+            n - np.count_nonzero(self.alive & ~self._resolved0))
+        pending = np.nonzero(self.alive & ~self._resolved())[0]
         # verify most-promising first
         key = self.ub[pending] if self.desc else self.lb[pending]
         self.pending = pending[np.argsort(-key if self.desc else key,
@@ -316,7 +429,7 @@ class TopKRun(_VerifyRun):
 
     def finished(self) -> bool:
         """True iff the current top-``k`` can no longer change."""
-        have = np.nonzero(self.known & self.alive)[0]
+        have = np.nonzero(self.p_true & self.known & self.alive)[0]
         if len(have) >= self.k > 0:
             vals = self.scores[have]
             kth = (np.partition(vals, -self.k)[-self.k] if self.desc
@@ -331,22 +444,22 @@ class TopKRun(_VerifyRun):
                     (not self.desc and best_possible > kth))
         return self.cursor >= len(self.pending)
 
-    def _apply(self, batch: np.ndarray, values: np.ndarray) -> None:
+    def exact_values(self, batch):
+        return self.ctx.exact(self.expr, batch)
+
+    def fused_values(self, batch, counts):
+        return eval_with_counts(self.ctx, self.expr, batch, counts)
+
+    def _apply(self, batch: np.ndarray, values) -> None:
         self.scores[batch] = values
         self.known[batch] = True
-
-    def ensure(self, k: Optional[int] = None) -> None:
-        """Drive verification until the top-``k`` is final."""
-        if k is not None:
-            self.target(k)
-        self._drain()
 
     def result(self, k: Optional[int] = None):
         """(ids, scores) of the current top-``k`` — call after :meth:`ensure`
         (or after the scheduler reports :meth:`finished`).  Ties break by
         candidate order, so paginated and one-shot runs agree exactly."""
         k = self.k if k is None else min(int(k), self.n)
-        final = np.nonzero(self.known)[0]
+        final = np.nonzero(self.p_true & self.known)[0]
         if len(final) == 0 or k <= 0:
             return self.ids[:0], self.scores[:0]
         vals = self.scores[final]
@@ -362,14 +475,15 @@ def topk_query(store, expr: Node, k: int, *, desc: bool = True,
                bounds=None):
     """``SELECT ... ORDER BY expr {DESC|ASC} LIMIT k`` → (ids, scores, stats)."""
     if not use_index:
-        ctx, ids = _make_context(store, expr, positions, group_by_image,
-                                 mask_types, provided_rois)
+        grouped = _grouped_for([expr], group_by_image)
+        ctx, ids = _make_context(store, grouped, positions, mask_types,
+                                 provided_rois)
         n = len(ids)
         k = min(k, n)
         stats = ExecStats(n_candidates=n)
         io_before = store.io.bytes_read
         t0 = time.perf_counter()
-        exact = _exact_for(ctx, expr, np.arange(n))
+        exact = ctx.exact(expr, np.arange(n))
         order = _topk_order(exact, k, desc)
         stats.n_verified = n
         stats.verify_time_s = time.perf_counter() - t0
@@ -397,8 +511,168 @@ def _topk_order(values, k, desc):
 
 
 # ---------------------------------------------------------------------------
+# Filtered Top-K: predicate residue feeds the ranking frontier
+# ---------------------------------------------------------------------------
+
+
+class FilteredTopKRun(TopKRun):
+    """``WHERE predicate ORDER BY expr LIMIT k`` as one filter–verification
+    run (the query class the flat front-end refused outright).
+
+    The three-valued predicate decision and the ranking bounds come from the
+    same CHI pass: bound-rejected candidates leave the ranking frontier
+    immediately, bound-accepted ones rank on their score bounds, and the
+    *unknown* residue stays in the frontier optimistically (it might satisfy
+    the predicate with its optimistic score).  One verification batch
+    resolves both the predicate truth and the exact score — every CP term of
+    both trees is answered from one load of the mask bytes (and one fused
+    kernel row set when the scheduler drives this run).
+
+    All pruning machinery is inherited: the base frontier is already
+    predicate-aware (``p_true``/``p_false``/``p_known``), with τ drawn only
+    from *definitely*-qualifying candidates, so no possibly-qualifying
+    candidate is pruned on an assumption about another candidate's
+    unverified predicate.  This class only re-derives the qualification
+    masks from the predicate tree and verifies (predicate, score) pairs.
+    """
+
+    def __init__(self, store, pred: Pred, expr: Node, *, desc: bool = True,
+                 positions: Optional[np.ndarray] = None, mask_types=None,
+                 group_by_image: bool = False,
+                 provided_rois: Optional[np.ndarray] = None,
+                 verify_batch: int = 256, bounds_hook=None):
+        self.pred = pred
+        super().__init__(store, expr, desc=desc, positions=positions,
+                         mask_types=mask_types, group_by_image=group_by_image,
+                         provided_rois=provided_rois,
+                         verify_batch=verify_batch, bounds_hook=bounds_hook,
+                         _pred_exprs=pred.value_exprs())
+
+    def _init_qualification(self) -> None:
+        accept, reject = self.pred.decide(self.expr_bounds, self.ctx)
+        self.p_true = np.asarray(accept).copy()
+        self.p_false = np.asarray(reject).copy()
+        self.p_known = self.p_true | self.p_false
+
+    def exact_values(self, batch):
+        counts = self._self_counts(batch)
+        if counts is not None:
+            return self.fused_values(batch, counts)
+        return (self.pred.exact(self.ctx, batch),
+                self.ctx.exact(self.expr, batch))
+
+    def fused_values(self, batch, counts):
+        return (self.pred.exact_with_counts(self.ctx, batch, counts),
+                eval_with_counts(self.ctx, self.expr, batch, counts))
+
+    def _apply(self, batch: np.ndarray, values) -> None:
+        pred_vals, score_vals = values
+        pred_vals = np.asarray(pred_vals, bool)
+        self.p_true[batch] = pred_vals
+        self.p_false[batch] = ~pred_vals
+        self.p_known[batch] = True
+        self.scores[batch] = score_vals
+        self.known[batch] = True
+
+
+def filtered_topk_query(store, pred: Pred, expr: Node, k: int, *,
+                        desc: bool = True,
+                        positions: Optional[np.ndarray] = None,
+                        mask_types=None, group_by_image: bool = False,
+                        provided_rois: Optional[np.ndarray] = None,
+                        use_index: bool = True, verify_batch: int = 256):
+    """``WHERE predicate ORDER BY expr LIMIT k`` → (ids, scores, stats)."""
+    if not use_index:
+        grouped = _grouped_for(list(pred.value_exprs()) + [expr],
+                               group_by_image)
+        ctx, ids = _make_context(store, grouped, positions, mask_types,
+                                 provided_rois, partial_rows=False)
+        n = len(ids)
+        stats = ExecStats(n_candidates=n)
+        io_before = store.io.bytes_read
+        t0 = time.perf_counter()
+        keep = np.nonzero(pred.exact(ctx, np.arange(n)))[0]
+        exact = ctx.exact(expr, keep)
+        sub = _topk_order(exact, min(k, len(keep)), desc)
+        stats.n_verified = n
+        stats.verify_time_s = time.perf_counter() - t0
+        stats.bytes_loaded = store.io.bytes_read - io_before
+        return ids[keep[sub]], exact[sub], stats
+
+    run = FilteredTopKRun(store, pred, expr, desc=desc, positions=positions,
+                          mask_types=mask_types, group_by_image=group_by_image,
+                          provided_rois=provided_rois,
+                          verify_batch=verify_batch)
+    run.ensure(k)
+    ids, scores = run.result()
+    return ids, scores, run.stats
+
+
+# ---------------------------------------------------------------------------
 # Scalar aggregation
 # ---------------------------------------------------------------------------
+
+
+class ScalarAggRun(_VerifyRun):
+    """Resumable SUM/AVG: bound-coincident candidates are exact for free;
+    only the undecided residue verifies.  ``result()`` is the scalar."""
+
+    def __init__(self, store, expr: Node, agg: str, *,
+                 positions: Optional[np.ndarray] = None, mask_types=None,
+                 group_by_image: bool = False,
+                 provided_rois: Optional[np.ndarray] = None,
+                 verify_batch: int = 256, bounds_hook=None):
+        agg = agg.upper()
+        if agg not in ("SUM", "AVG"):
+            raise ValueError(f"ScalarAggRun handles SUM/AVG, got {agg!r}")
+        self.agg = agg
+        self.expr = expr
+        super().__init__(store, [expr], positions=positions,
+                         mask_types=mask_types, group_by_image=group_by_image,
+                         provided_rois=provided_rois,
+                         verify_batch=verify_batch, bounds_hook=bounds_hook)
+        lb, ub = self.expr_bounds(expr)
+        self.values = lb.astype(np.float64)   # astype copies; safe to mutate
+        self.pending = np.nonzero(lb != ub)[0]
+        self.stats.n_decided_by_bounds = self.n - len(self.pending)
+
+    def finished(self) -> bool:
+        return self.cursor >= len(self.pending)
+
+    def exact_values(self, batch):
+        return self.ctx.exact(self.expr, batch)
+
+    def fused_values(self, batch, counts):
+        return eval_with_counts(self.ctx, self.expr, batch, counts)
+
+    def _apply(self, batch: np.ndarray, values) -> None:
+        self.values[batch] = values
+
+    def result(self) -> float:
+        if self.agg == "SUM":
+            return float(self.values.sum())
+        return float(self.values.mean()) if self.n else float("nan")
+
+
+class MinMaxAggRun(TopKRun):
+    """MIN/MAX through the top-k pruning machinery (k = 1); ``result()`` is
+    the scalar (NaN on an empty candidate set, matching SUM/AVG's clean
+    empty-set behavior)."""
+
+    def __init__(self, store, expr: Node, agg: str, **kw):
+        agg = agg.upper()
+        if agg not in ("MIN", "MAX"):
+            raise ValueError(f"MinMaxAggRun handles MIN/MAX, got {agg!r}")
+        self.agg = agg
+        super().__init__(store, expr, desc=(agg == "MAX"), **kw)
+        TopKRun.target(self, 1)
+
+    def target(self, k: Optional[int] = None) -> int:
+        return self.k  # the finality target is always 1
+
+    def result(self) -> float:
+        _, scores = TopKRun.result(self, 1)
+        return float(scores[0]) if len(scores) else float("nan")
 
 
 def scalar_agg(store, expr: Node, agg: str, *,
@@ -408,36 +682,39 @@ def scalar_agg(store, expr: Node, agg: str, *,
     """``SELECT SCALAR_AGG(expr)`` with agg ∈ {SUM, AVG, MIN, MAX}.
 
     MIN/MAX reuse the top-k pruning machinery (k=1).  SUM/AVG verify only
-    bound-undecided masks.  Returns ``(value, stats)``.
+    bound-undecided masks.  Returns ``(value, stats)``.  An empty candidate
+    set (e.g. ``mask_type IN (...)`` matching nothing) yields NaN for
+    AVG/MIN/MAX and 0.0 for SUM, never an exception.
     """
     agg = agg.upper()
-    if agg in ("MIN", "MAX"):
-        ids, scores, stats = topk_query(
-            store, expr, 1, desc=(agg == "MAX"), positions=positions,
-            mask_types=mask_types, provided_rois=provided_rois,
-            use_index=use_index)
-        return float(scores[0]), stats
-
-    ctx, ids = _make_context(store, expr, positions, False, mask_types,
-                             provided_rois, partial_rows=use_index)
-    n = len(ids)
-    stats = ExecStats(n_candidates=n)
-    io_before = store.io.bytes_read
+    common = dict(positions=positions, mask_types=mask_types,
+                  provided_rois=provided_rois)
     if not use_index:
-        exact = _exact_for(ctx, expr, np.arange(n))
+        if agg in ("MIN", "MAX"):
+            _, scores, stats = topk_query(store, expr, 1,
+                                          desc=(agg == "MAX"),
+                                          use_index=False, **common)
+            value = float(scores[0]) if len(scores) else float("nan")
+            return value, stats
+        grouped = _grouped_for([expr], False)
+        ctx, ids = _make_context(store, grouped, positions, mask_types,
+                                 provided_rois, partial_rows=False)
+        n = len(ids)
+        stats = ExecStats(n_candidates=n)
+        io_before = store.io.bytes_read
+        exact = ctx.exact(expr, np.arange(n)) if n else np.empty(0)
         stats.n_verified = n
+        stats.bytes_loaded = store.io.bytes_read - io_before
+        if agg == "SUM":
+            value = float(exact.sum())
+        else:
+            value = float(exact.mean()) if n else float("nan")
+        return value, stats
+
+    if agg in ("MIN", "MAX"):
+        run = MinMaxAggRun(store, expr, agg, **common)
     else:
-        t0 = time.perf_counter()
-        lb, ub = ctx.bounds(expr)
-        stats.bound_time_s = time.perf_counter() - t0
-        exact = lb.astype(np.float64)
-        undecided = np.nonzero(lb != ub)[0]
-        stats.n_decided_by_bounds = n - len(undecided)
-        if len(undecided):
-            t0 = time.perf_counter()
-            exact[undecided] = _exact_for(ctx, expr, undecided)
-            stats.verify_time_s = time.perf_counter() - t0
-        stats.n_verified = len(undecided)
-    stats.bytes_loaded = store.io.bytes_read - io_before
-    value = float(exact.sum()) if agg == "SUM" else float(exact.mean())
-    return value, stats
+        run = ScalarAggRun(store, expr, agg,
+                           verify_batch=max(len(store), 1), **common)
+    run.ensure()
+    return run.result(), run.stats

@@ -135,6 +135,216 @@ class BinOp(Node):
 
 
 # ---------------------------------------------------------------------------
+# Comparison semantics (shared by predicates and the engine's filter path)
+# ---------------------------------------------------------------------------
+
+_CMP_EXACT = {
+    "<": np.less, "<=": np.less_equal,
+    ">": np.greater, ">=": np.greater_equal,
+}
+
+
+def cmp_exact(op: str, values, threshold):
+    """Exact truth of ``values op threshold`` (vectorized)."""
+    return _CMP_EXACT[op](values, threshold)
+
+
+def cmp_decide(op: str, lb, ub, threshold):
+    """Sound three-valued decision of ``exact op threshold`` from bounds.
+
+    Returns ``(accept, reject)`` boolean arrays: *accept* iff the comparison
+    must hold for every exact ∈ [lb, ub], *reject* iff it cannot hold;
+    neither → unknown (verification required).
+    """
+    if op == "<":
+        return ub < threshold, lb >= threshold
+    if op == "<=":
+        return ub <= threshold, lb > threshold
+    if op == ">":
+        return lb > threshold, ub <= threshold
+    if op == ">=":
+        return lb >= threshold, ub < threshold
+    raise ValueError(f"bad comparison {op!r}")
+
+
+# ---------------------------------------------------------------------------
+# Boolean predicate trees (the query-plan IR's WHERE clause)
+# ---------------------------------------------------------------------------
+
+
+class Pred:
+    """Boolean predicate tree over value expressions.
+
+    Two evaluation modes mirror :class:`Node`'s:
+
+    * :meth:`decide` — **three-valued** bounds evaluation.  Each subtree maps
+      its children's (accept, reject) pairs to its own, so conjunctions and
+      disjunctions of CP predicates still prune from CHI bounds alone:
+
+          Cmp:  sound interval comparison (``cmp_decide``)
+          And:  accept = a₁ ∧ a₂,  reject = r₁ ∨ r₂
+          Or:   accept = a₁ ∨ a₂,  reject = r₁ ∧ r₂
+          Not:  accept = r,        reject = a
+
+      Soundness invariant: accept ⇒ exact-true, reject ⇒ exact-false, for
+      every assignment of exact values inside the children's bounds.
+    * :meth:`exact` / :meth:`exact_with_counts` — truth against loaded mask
+      bytes (the verification path / the scheduler's fused-counts path).
+    """
+
+    def __and__(self, other):
+        return And(self, other)
+
+    def __or__(self, other):
+        return Or(self, other)
+
+    def __invert__(self):
+        return Not(self)
+
+    def value_exprs(self) -> list:
+        """Distinct value expressions (Cmp left-hand sides) in tree order."""
+        out: list = []
+        for e in self._value_exprs():
+            if e not in out:
+                out.append(e)
+        return out
+
+    def _value_exprs(self):
+        return []
+
+    def cp_terms(self) -> list:
+        return [t for e in self._value_exprs() for t in e.cp_terms()]
+
+    def decide(self, bounds_of, ctx):
+        """(accept, reject) bool arrays; ``bounds_of(expr) -> (lb, ub)``."""
+        raise NotImplementedError
+
+    def exact(self, ctx, idx: np.ndarray) -> np.ndarray:
+        raise NotImplementedError
+
+    def exact_with_counts(self, ctx, idx: np.ndarray, counts: dict) -> np.ndarray:
+        """Exact truth when every CP term's count is precomputed (fused)."""
+        raise NotImplementedError
+
+
+@dataclasses.dataclass(frozen=True)
+class Cmp(Pred):
+    """Leaf comparison ``expr op threshold`` with op ∈ {<, <=, >, >=}."""
+
+    expr: Node
+    op: str
+    threshold: float
+
+    def __post_init__(self):
+        if self.op not in _CMP_EXACT:
+            raise ValueError(f"bad comparison {self.op!r}")
+
+    def _value_exprs(self):
+        return [self.expr]
+
+    def decide(self, bounds_of, ctx):
+        lb, ub = bounds_of(self.expr)
+        return cmp_decide(self.op, lb, ub, self.threshold)
+
+    def exact(self, ctx, idx):
+        return cmp_exact(self.op, ctx.exact(self.expr, idx), self.threshold)
+
+    def exact_with_counts(self, ctx, idx, counts):
+        vals = eval_with_counts(ctx, self.expr, idx, counts)
+        return cmp_exact(self.op, vals, self.threshold)
+
+
+@dataclasses.dataclass(frozen=True)
+class TypeIn(Pred):
+    """``mask_type IN (...)`` as a composable leaf (never unknown)."""
+
+    types: tuple
+
+    def decide(self, bounds_of, ctx):
+        m = self._match(ctx, None)
+        return m, ~m
+
+    def _match(self, ctx, idx):
+        if not isinstance(ctx, MaskEvalContext):
+            raise TypeError("mask_type IN is a per-mask predicate; it cannot "
+                            "appear in a grouped (MASK_AGG) query")
+        if idx is None:
+            idx = np.arange(len(ctx.positions))
+        types = ctx.store.meta["mask_type"][ctx.positions[idx]]
+        return np.isin(types, np.asarray(self.types))
+
+    def exact(self, ctx, idx):
+        return self._match(ctx, idx)
+
+    def exact_with_counts(self, ctx, idx, counts):
+        return self._match(ctx, idx)
+
+
+@dataclasses.dataclass(frozen=True)
+class And(Pred):
+    left: Pred
+    right: Pred
+
+    def _value_exprs(self):
+        return self.left._value_exprs() + self.right._value_exprs()
+
+    def decide(self, bounds_of, ctx):
+        la, lr = self.left.decide(bounds_of, ctx)
+        ra, rr = self.right.decide(bounds_of, ctx)
+        return la & ra, lr | rr
+
+    def exact(self, ctx, idx):
+        return self.left.exact(ctx, idx) & self.right.exact(ctx, idx)
+
+    def exact_with_counts(self, ctx, idx, counts):
+        return (self.left.exact_with_counts(ctx, idx, counts) &
+                self.right.exact_with_counts(ctx, idx, counts))
+
+
+@dataclasses.dataclass(frozen=True)
+class Or(Pred):
+    left: Pred
+    right: Pred
+
+    def _value_exprs(self):
+        return self.left._value_exprs() + self.right._value_exprs()
+
+    def decide(self, bounds_of, ctx):
+        la, lr = self.left.decide(bounds_of, ctx)
+        ra, rr = self.right.decide(bounds_of, ctx)
+        return la | ra, lr & rr
+
+    def exact(self, ctx, idx):
+        return self.left.exact(ctx, idx) | self.right.exact(ctx, idx)
+
+    def exact_with_counts(self, ctx, idx, counts):
+        return (self.left.exact_with_counts(ctx, idx, counts) |
+                self.right.exact_with_counts(ctx, idx, counts))
+
+
+@dataclasses.dataclass(frozen=True)
+class Not(Pred):
+    child: Pred
+
+    def _value_exprs(self):
+        return self.child._value_exprs()
+
+    def decide(self, bounds_of, ctx):
+        a, r = self.child.decide(bounds_of, ctx)
+        return r, a
+
+    def exact(self, ctx, idx):
+        return ~self.child.exact(ctx, idx)
+
+    def exact_with_counts(self, ctx, idx, counts):
+        return ~self.child.exact_with_counts(ctx, idx, counts)
+
+
+def is_group_pred(pred: Pred) -> bool:
+    return any(isinstance(t, AggCP) for t in pred.cp_terms())
+
+
+# ---------------------------------------------------------------------------
 # Interval arithmetic
 # ---------------------------------------------------------------------------
 

@@ -16,11 +16,22 @@ Supports the paper's textual query classes verbatim, e.g.::
 
     SELECT SCALAR_AGG(AVG, CP(mask, roi, (0.9, 1.0))) FROM MasksDatabaseView;
 
-plus arithmetic over CP terms and ``AREA(roi)`` for normalized counts
-(Scenario 1).  ``roi`` refers to caller-provided per-mask rectangles (e.g.
-YOLO boxes); ``full_img`` is the whole mask; a literal ``(r0, c0, r1, c1)``
-rectangle is also accepted.  The parser builds the expression trees from
-``core.exprs`` and a :class:`Query` plan executed by ``core.engine``.
+plus arithmetic over CP terms (including unary minus and scientific-notation
+literals), ``AREA(roi)`` for normalized counts (Scenario 1), and **composable
+WHERE clauses**: comparisons combine with ``AND`` / ``OR`` / ``NOT`` and
+parentheses, and a predicate composes with ``ORDER BY … LIMIT`` — the
+refinement shapes the demo GUI stacks up, e.g.::
+
+    SELECT mask_id FROM MasksDatabaseView
+    WHERE CP(mask, roi, (0.8, 1.0)) > 500
+      AND NOT CP(mask, full_img, (0.2, 0.6)) < 100
+    ORDER BY CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 25;
+
+``roi`` refers to caller-provided per-mask rectangles (e.g. YOLO boxes);
+``full_img`` is the whole mask; a literal ``(r0, c0, r1, c1)`` rectangle is
+also accepted.  The parser builds expression trees from ``core.exprs`` and a
+:class:`~repro.core.plan.LogicalPlan` executed through ``core.plan``;
+:class:`Query` remains as a thin compatibility shim over the plan IR.
 """
 
 from __future__ import annotations
@@ -29,16 +40,19 @@ import dataclasses
 import re
 from typing import Optional
 
-import numpy as np
-
-from . import engine
-from .exprs import CP, AggCP, BinOp, Const, Node, RoiArea
+from . import plan as plan_lib
+from .exprs import (AggCP, And, BinOp, Cmp, Const, CP, Node, Not, Or, Pred,
+                    RoiArea, TypeIn)
+from .plan import LogicalPlan
 
 _TOKEN_RE = re.compile(r"""
-      (?P<num>\d+\.\d*|\.\d+|\d+|inf)
+      (?P<num>(?:\d+\.\d*|\.\d+|\d+)(?:[eE][+-]?\d+)?|inf)
     | (?P<name>[A-Za-z_][A-Za-z_0-9]*)
     | (?P<op>[(),+\-*/<>=;]|<=|>=)
 """, re.VERBOSE)
+
+_CMP_OPS = ("<", "<=", ">", ">=")
+_ARITH_OPS = ("+", "-", "*", "/")
 
 
 def _tokenize(text: str):
@@ -63,10 +77,16 @@ def _tokenize(text: str):
 
 @dataclasses.dataclass
 class Query:
-    """A parsed + planned query, runnable against a MaskStore."""
+    """A parsed query — a compatibility view over :class:`LogicalPlan`.
 
-    kind: str                      # "filter" | "topk" | "scalar_agg"
-    select: str                    # "mask_id" | "image_id"
+    The legacy flat fields (``kind``/``expr``/``op``/``threshold``/…) are
+    kept for existing callers; ``plan`` is the composable IR that actually
+    executes.  New code should use :func:`parse_plan` +
+    :func:`repro.core.plan.run_plan` directly.
+    """
+
+    kind: str                      # "filter" | "topk" | "filtered_topk"
+    select: str                    # "mask_id" | "image_id"   | "scalar_agg"
     expr: Optional[Node] = None
     op: Optional[str] = None
     threshold: Optional[float] = None
@@ -75,23 +95,80 @@ class Query:
     agg: Optional[str] = None
     mask_types: Optional[tuple] = None
     group_by_image: bool = False
+    predicate: Optional[Pred] = None
+    plan: Optional[LogicalPlan] = dataclasses.field(default=None, repr=False)
+
+    def __post_init__(self):
+        if self.plan is None:
+            self.plan = self._derive_plan()
+        self._flat_sig = self._snapshot()
+
+    def _snapshot(self):
+        return (self.kind, self.select, self.expr, self.op, self.threshold,
+                self.k, self.desc, self.agg, self.mask_types,
+                self.group_by_image, self.predicate)
+
+    def _derive_plan(self) -> LogicalPlan:
+        """Rebuild the IR from legacy fields (hand-constructed Queries)."""
+        pred = self.predicate
+        if pred is None and self.op is not None and self.kind == "filter":
+            pred = Cmp(self.expr, self.op, self.threshold)
+        if self.kind == "scalar_agg":
+            return LogicalPlan(select="mask_id", agg=self.agg,
+                               agg_expr=self.expr,
+                               mask_types=self.mask_types,
+                               group_by_image=False)
+        order = self.expr if self.kind in ("topk", "filtered_topk") else None
+        return LogicalPlan(select=self.select, predicate=pred,
+                           mask_types=self.mask_types, order_by=order,
+                           k=self.k, desc=self.desc,
+                           group_by_image=self.group_by_image)
+
+    def sync_plan(self) -> LogicalPlan:
+        """The executable plan, re-derived if the legacy flat fields were
+        mutated since it was built.  The pre-redesign Query read its flat
+        fields at call time, so parse-then-tweak callers (``q.threshold =
+        …; q.run(…)``) must see their mutations; mutated comparison fields
+        win over a predicate derived from the stale ones.  Every execution
+        path (``run`` and the service) goes through here."""
+        if self._snapshot() != self._flat_sig:
+            old_predicate = self._flat_sig[-1]
+            if (self.kind == "filter" and self.op is not None and
+                    self.predicate == old_predicate):
+                self.predicate = Cmp(self.expr, self.op, self.threshold)
+            self.plan = self._derive_plan()
+            self._flat_sig = self._snapshot()
+        return self.plan
 
     def run(self, store, *, provided_rois=None, use_index: bool = True,
             **kw):
-        common = dict(mask_types=self.mask_types,
-                      group_by_image=self.group_by_image,
-                      provided_rois=provided_rois, use_index=use_index)
-        if self.kind == "filter":
-            return engine.filter_query(store, self.expr, self.op,
-                                       self.threshold, **common, **kw)
-        if self.kind == "topk":
-            ids, scores, stats = engine.topk_query(
-                store, self.expr, self.k, desc=self.desc, **common, **kw)
-            return (ids, scores), stats
-        if self.kind == "scalar_agg":
-            common.pop("group_by_image")
-            return engine.scalar_agg(store, self.expr, self.agg, **common, **kw)
-        raise ValueError(self.kind)
+        """Execute against a MaskStore.  Result shapes are unchanged from
+        the flat front-end: filter → ``(ids, stats)``, rankings →
+        ``((ids, scores), stats)``, scalar agg → ``(value, stats)``."""
+        return plan_lib.run_plan(store, self.sync_plan(),
+                                 provided_rois=provided_rois,
+                                 use_index=use_index, **kw)
+
+
+def _legacy_query(plan: LogicalPlan, aliases=None) -> Query:
+    """Flatten a plan into the compat record (shared fields mirrored)."""
+    kind = plan.kind
+    expr = None
+    op = threshold = None
+    if kind in ("topk", "filtered_topk"):
+        expr = plan.order_by
+    elif kind == "scalar_agg":
+        expr = plan.agg_expr
+    elif isinstance(plan.predicate, Cmp):
+        expr = plan.predicate.expr
+        op = plan.predicate.op
+        threshold = plan.predicate.threshold
+    q = Query(kind=kind, select=plan.select, expr=expr, op=op,
+              threshold=threshold, k=plan.k, desc=plan.desc, agg=plan.agg,
+              mask_types=plan.mask_types, group_by_image=plan.group_by_image,
+              predicate=plan.predicate, plan=plan)
+    q._aliases = aliases or {}
+    return q
 
 
 class _Parser:
@@ -125,101 +202,156 @@ class _Parser:
 
     def number(self) -> float:
         tok = self.next()
+        sign = 1.0
+        if tok == "-":
+            sign = -1.0
+            tok = self.next()
         if tok == "inf":
-            return float("inf")
+            return sign * float("inf")
         try:
-            return float(tok)
+            return sign * float(tok)
         except ValueError as e:
             raise SyntaxError(f"expected number, got {tok!r}") from e
 
     # -- grammar -----------------------------------------------------------
     def parse(self) -> Query:
         self.expect("SELECT")
-        q = Query(kind="filter", select="mask_id")
-        # select list — possibly SCALAR_AGG
+        select = "mask_id"
+        agg = None
+        agg_expr = None
+        aliases = {}
         if (self.peek() or "").upper() == "SCALAR_AGG":
-            self.next(); self.expect("(")
-            q.agg = self.next().upper()
+            self.next()
+            self.expect("(")
+            agg = self.next().upper()
             self.expect(",")
-            q.expr = self.expr()
+            agg_expr = self.expr()
             self.expect(")")
-            q.kind = "scalar_agg"
         else:
-            q.select = self.next()
-            if q.select not in ("mask_id", "image_id"):
-                raise SyntaxError(f"can only SELECT mask_id/image_id, got {q.select}")
-            alias = {}
+            select = self.next()
+            if select not in ("mask_id", "image_id"):
+                raise SyntaxError(
+                    f"can only SELECT mask_id/image_id, got {select}")
             while self.accept(","):
                 e = self.expr()
                 self.expect("AS")
-                alias[self.next()] = e
-            q._aliases = alias
+                aliases[self.next()] = e
         self.expect("FROM")
         self.next()  # view name, ignored
-        # WHERE
+
+        mask_types = None
+        predicate = None
         if self.accept("WHERE"):
-            self._where(q)
+            mask_types, predicate = plan_lib.simplify_predicate(
+                self._pred_or())
+        group_by_image = False
         if self.accept("GROUP"):
             self.expect("BY")
             self.expect("image_id")
-            q.group_by_image = True
+            group_by_image = True
+        order_by = None
+        k = None
+        desc = True
         if self.accept("ORDER"):
-            if q.expr is not None:
-                # A CP WHERE predicate has no execution path under top-k;
-                # refuse rather than silently rank the unfiltered set.
-                raise SyntaxError(
-                    "a CP WHERE predicate cannot be combined with ORDER BY "
-                    "... LIMIT; only mask_type IN (...) filters compose "
-                    "with rankings")
             self.expect("BY")
             nxt = self.peek()
-            aliases = getattr(q, "_aliases", {})
             if nxt in aliases:
                 self.next()
-                order_expr = aliases[nxt]
+                order_by = aliases[nxt]
             else:
-                order_expr = self.expr()
-            q.desc = True
+                order_by = self.expr()
             if self.accept("ASC"):
-                q.desc = False
+                desc = False
             else:
                 self.accept("DESC")
             self.expect("LIMIT")
-            q.k = int(self.number())
-            q.kind = "topk"
-            q.expr = order_expr
+            k = int(self.number())
         self.accept(";")
-        if q.kind == "filter" and q.expr is None:
-            raise SyntaxError("filter query needs a CP predicate or ORDER BY")
-        if q.select == "image_id":
-            q.group_by_image = True
-        return q
+        if self.peek() is not None:
+            raise SyntaxError(f"trailing tokens at {self.peek()!r}")
 
-    def _where(self, q: Query):
-        while True:
-            if (self.peek() or "").lower() == "mask_type":
-                self.next()
-                self.expect("IN")
-                self.expect("(")
-                types = [int(self.number())]
-                while self.accept(","):
-                    types.append(int(self.number()))
-                self.expect(")")
-                q.mask_types = tuple(types)
-            else:
-                if q.expr is not None:
+        if agg is not None:
+            if predicate is not None:
+                raise SyntaxError(
+                    "SCALAR_AGG supports only mask_type IN (...) in WHERE")
+            if order_by is not None:
+                raise SyntaxError("SCALAR_AGG cannot be ordered")
+            plan = LogicalPlan(select="mask_id", agg=agg, agg_expr=agg_expr,
+                               mask_types=mask_types)
+        else:
+            if select == "image_id":
+                group_by_image = True
+            if order_by is None and predicate is None:
+                if mask_types is not None:
+                    # pure source filter: every candidate of the type(s)
+                    predicate = TypeIn(mask_types)
+                else:
                     raise SyntaxError(
-                        "multiple CP predicates in WHERE are not supported; "
-                        "combine them into one expression")
-                expr = self.expr()
-                op = self.next()
-                if op not in ("<", "<=", ">", ">="):
-                    raise SyntaxError(f"bad comparison {op!r}")
-                q.expr = expr
-                q.op = op
-                q.threshold = self.number()
-            if not self.accept("AND"):
-                break
+                        "filter query needs a predicate or ORDER BY")
+            plan = LogicalPlan(select=select, predicate=predicate,
+                               mask_types=mask_types, order_by=order_by,
+                               k=k, desc=desc, group_by_image=group_by_image)
+        try:
+            plan.validate()
+        except ValueError as e:
+            raise SyntaxError(str(e)) from e
+        return _legacy_query(plan, aliases)
+
+    # predicate grammar:  or := and (OR and)* ;  and := unary (AND unary)* ;
+    # unary := NOT unary | atom ;  atom := '(' or ')' | mask_type IN (...)
+    #                                    | expr cmp_op number
+    def _pred_or(self) -> Pred:
+        node = self._pred_and()
+        while self.accept("OR"):
+            node = Or(node, self._pred_and())
+        return node
+
+    def _pred_and(self) -> Pred:
+        node = self._pred_unary()
+        while self.accept("AND"):
+            node = And(node, self._pred_unary())
+        return node
+
+    def _pred_unary(self) -> Pred:
+        if self.accept("NOT"):
+            return Not(self._pred_unary())
+        return self._pred_atom()
+
+    def _pred_atom(self) -> Pred:
+        tok = self.peek()
+        if tok is None:
+            raise SyntaxError("unexpected end of query (expected predicate)")
+        if tok == "(":
+            # Backtracking disambiguation: '(' may open a parenthesized
+            # predicate or a parenthesized arithmetic expression.  Try the
+            # predicate read; if it fails — or the closing paren is followed
+            # by an operator, meaning the parens belonged to arithmetic —
+            # rewind and parse a comparison instead.
+            save = self.i
+            try:
+                self.next()
+                node = self._pred_or()
+                self.expect(")")
+            except SyntaxError:
+                self.i = save
+            else:
+                if (self.peek() or "") not in _CMP_OPS + _ARITH_OPS:
+                    return node
+                self.i = save
+        if (tok or "").lower() == "mask_type":
+            self.next()
+            self.expect("IN")
+            self.expect("(")
+            types = [int(self.number())]
+            while self.accept(","):
+                types.append(int(self.number()))
+            self.expect(")")
+            return TypeIn(tuple(types))
+        expr = self.expr()
+        op = self.next()
+        if op not in _CMP_OPS:
+            raise SyntaxError(f"bad comparison {op!r}")
+        return Cmp(expr, op, self.number())
 
     # expression grammar: expr := term (('+'|'-') term)*
     def expr(self) -> Node:
@@ -240,6 +372,12 @@ class _Parser:
         tok = self.peek()
         if tok is None:
             raise SyntaxError("unexpected end of query (expected expression)")
+        if tok == "-":                      # unary minus
+            self.next()
+            operand = self.factor()
+            if isinstance(operand, Const):
+                return Const(-operand.value)
+            return BinOp("-", Const(0.0), operand)
         if tok == "(":
             self.next()
             node = self.expr()
@@ -248,7 +386,8 @@ class _Parser:
         if tok.upper() == "CP":
             return self._cp()
         if tok.upper() == "AREA":
-            self.next(); self.expect("(")
+            self.next()
+            self.expect("(")
             roi = self._roi()
             self.expect(")")
             return RoiArea(roi)
@@ -256,7 +395,8 @@ class _Parser:
         return Const(self.number())
 
     def _cp(self) -> Node:
-        self.expect("CP"); self.expect("(")
+        self.expect("CP")
+        self.expect("(")
         tok = self.peek() or ""
         if tok.lower() in ("intersect", "union", "mask_agg"):
             agg = self.next().lower()
@@ -308,8 +448,13 @@ class _Parser:
 
 
 def parse(sql: str) -> Query:
-    """Parse a MaskSearch query string into an executable plan."""
+    """Parse a MaskSearch query string into an executable (compat) plan."""
     return _Parser(_tokenize(sql)).parse()
+
+
+def parse_plan(sql: str) -> LogicalPlan:
+    """Parse straight to the composable IR (:class:`LogicalPlan`)."""
+    return parse(sql).plan
 
 
 def run(sql: str, store, **kw):

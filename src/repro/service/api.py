@@ -3,10 +3,11 @@ engine (the demo GUI's backend).
 
 Responsibilities:
 
-* **plan + cache**: parse SQL once, canonicalize it into cache keys; answer
-  repeated queries from an LRU result cache (zero mask loads) and refined
-  queries (same expression, new threshold / larger LIMIT) from a CHI-bounds
-  cache (no new bounds pass).
+* **plan + cache**: parse SQL once to the logical-plan IR
+  (:mod:`repro.core.plan`), canonicalize it into cache keys; answer repeated
+  queries from an LRU result cache (zero mask loads) and refined queries
+  (same expressions, new thresholds / rearranged predicates / larger LIMIT)
+  from a per-expression CHI-bounds cache (no new bounds pass).
 * **sessions**: top-k queries can open a session whose pages resume the
   verification frontier incrementally (:mod:`.session`).
 * **concurrency**: batches of queries — and concurrent session pages — are
@@ -29,7 +30,8 @@ from typing import Optional, Sequence
 
 import numpy as np
 
-from ..core.engine import ExecStats, FilterRun, TopKRun
+from ..core.engine import ExecStats
+from ..core.plan import LogicalPlan, compile_plan
 from ..core.queries import Query, parse
 from .planner import Planner, roi_signature
 from .scheduler import FusedScheduler
@@ -71,7 +73,8 @@ class MaskSearchService:
         self.sessions = SessionManager(max_sessions=max_sessions)
         self.scheduler = FusedScheduler(store)
         self._lock = threading.RLock()
-        self._counts = {"total": 0, "filter": 0, "topk": 0, "scalar_agg": 0,
+        self._counts = {"total": 0, "filter": 0, "topk": 0,
+                        "filtered_topk": 0, "scalar_agg": 0,
                         "result_cache_hits": 0}
         self._started_s = time.monotonic()
         # Long-lived cross-session shared-load cache: every verification load
@@ -86,8 +89,14 @@ class MaskSearchService:
 
     # -- internals --------------------------------------------------------
 
-    def _plan(self, sql) -> Query:
-        return parse(sql) if isinstance(sql, str) else sql
+    def _plan(self, sql) -> LogicalPlan:
+        """Normalize any front-end shape (SQL text, compat Query, or a
+        LogicalPlan built directly) to the IR."""
+        if isinstance(sql, str):
+            return parse(sql).plan
+        if isinstance(sql, Query):
+            return sql.sync_plan()   # honor post-parse field mutations
+        return sql
 
     def _rois(self, rois):
         """→ (resolved roi array, content signature)."""
@@ -96,30 +105,24 @@ class MaskSearchService:
         rois = np.asarray(rois)
         return rois, roi_signature(rois)
 
-    def _build_run(self, plan: Query, rois, roi_sig: str):
-        """Construct the resumable run for a plan, going through the bounds
-        cache (a hit skips the CHI pass entirely)."""
-        cached = self.planner.cached_bounds(plan, roi_sig)
-        common = dict(mask_types=plan.mask_types,
-                      group_by_image=plan.group_by_image,
-                      provided_rois=rois, verify_batch=self.verify_batch,
-                      bounds=cached)
-        if plan.kind == "topk":
-            run = TopKRun(self.store, plan.expr, desc=plan.desc, **common)
-        elif plan.kind == "filter":
-            run = FilterRun(self.store, plan.expr, plan.op, plan.threshold,
-                            **common)
-        else:
-            raise ValueError(f"no resumable run for kind {plan.kind!r}")
-        if cached is None:
-            self.planner.store_bounds(plan, roi_sig, run.lb, run.ub)
-        return run
+    def _build_run(self, plan: LogicalPlan, rois, roi_sig: str):
+        """Compile the plan to its resumable run, going through the
+        per-expression bounds cache (a hit skips that CHI pass entirely)."""
+        return compile_plan(self.store, plan, provided_rois=rois,
+                            verify_batch=self.verify_batch,
+                            bounds_hook=self.planner.bounds_hook(plan,
+                                                                 roi_sig))
 
-    def _finish_payload(self, plan: Query, run, *, cache_hit: bool = False,
+    def _finish_payload(self, plan: LogicalPlan, run, *,
+                        cache_hit: bool = False,
                         session_id: Optional[str] = None) -> dict:
-        if plan.kind == "topk":
+        if plan.kind in ("topk", "filtered_topk"):
             ids, scores = run.result()
             body = {"ids": _ids_list(ids), "scores": _scores_list(scores)}
+        elif plan.kind == "scalar_agg":
+            value = float(run.result())
+            # NaN (empty candidate set) is not valid JSON — serve null.
+            body = {"value": None if np.isnan(value) else value}
         else:
             body = {"ids": _ids_list(run.result())}
         payload = {"kind": plan.kind, **body,
@@ -143,8 +146,9 @@ class MaskSearchService:
 
     def query(self, sql, *, rois=None, session: bool = False,
               page_size: Optional[int] = None) -> dict:
-        """Execute one query.  ``session=True`` (top-k only) opens an
-        incremental session and returns its first page."""
+        """Execute one query.  ``session=True`` (rankings only — plain or
+        predicate-filtered top-k) opens an incremental session and returns
+        its first page."""
         with self._lock:
             plan = self._plan(sql)
             rois, roi_sig = self._rois(rois)
@@ -152,30 +156,23 @@ class MaskSearchService:
             self._counts[plan.kind] = self._counts.get(plan.kind, 0) + 1
 
             if session:
-                if plan.kind != "topk":
-                    raise ValueError("sessions require a top-k (ORDER BY … "
+                if plan.kind not in ("topk", "filtered_topk"):
+                    raise ValueError("sessions require a ranking (ORDER BY … "
                                      f"LIMIT) query, got {plan.kind!r}")
                 run = self._build_run(plan, rois, roi_sig)
                 size = page_size or plan.k or DEFAULT_PAGE
                 sess = self.sessions.create(
-                    sql if isinstance(sql, str) else repr(plan), run, size)
+                    sql if isinstance(sql, str) else repr(plan), run, size,
+                    kind=plan.kind)
                 return self._serve_page(sess, size)
 
             cached = self.planner.cached_result(plan, roi_sig)
             if cached is not None:
                 return self._cache_hit_payload(cached)
 
-            if plan.kind == "scalar_agg":
-                value, stats = plan.run(self.store, provided_rois=rois)
-                payload = {"kind": "scalar_agg", "value": float(value),
-                           "stats": _stats_dict(stats), "cache_hit": False}
-            else:
-                run = self._build_run(plan, rois, roi_sig)
-                if plan.kind == "topk":
-                    run.ensure(plan.k)
-                else:
-                    run.ensure()
-                payload = self._finish_payload(plan, run)
+            run = self._build_run(plan, rois, roi_sig)
+            run.ensure(plan.k)
+            payload = self._finish_payload(plan, run)
             self.planner.store_result(plan, roi_sig, copy.deepcopy(payload))
             return payload
 
@@ -194,16 +191,10 @@ class MaskSearchService:
                 if cached is not None:
                     entries.append((plan, None, self._cache_hit_payload(cached)))
                     continue
-                if plan.kind == "scalar_agg":
-                    value, stats = plan.run(self.store, provided_rois=rois)
-                    payload = {"kind": "scalar_agg", "value": float(value),
-                               "stats": _stats_dict(stats),
-                               "cache_hit": False}
-                    self.planner.store_result(plan, roi_sig, copy.deepcopy(payload))
-                    entries.append((plan, None, payload))
-                    continue
+                # every plan kind — scalar aggregations included — compiles
+                # to a resumable run, so the whole batch fuses together
                 run = self._build_run(plan, rois, roi_sig)
-                if plan.kind == "topk":
+                if plan.k is not None:
                     run.target(plan.k)
                 jobs.append(run)
                 entries.append((plan, run, None))
@@ -222,16 +213,23 @@ class MaskSearchService:
     def _serve_page(self, sess, k: Optional[int], *,
                     scheduler_driven: bool = False) -> dict:
         lo, hi = sess.page_bounds(k)
-        if not scheduler_driven:
+        if sess.done:
+            hi = lo                              # nothing left to deliver
+        elif not scheduler_driven:
             sess.run.ensure(hi)
         ids, scores = sess.run.result(hi)
         page_ids, page_scores = ids[lo:hi], scores[lo:hi]
-        sess.served = hi
+        if not sess.done and len(ids) < hi:
+            # Fewer qualifying rows than the target: the run drained every
+            # possibly-qualifying candidate (a filtered ranking whose
+            # predicate matched < hi rows) — the result set is complete.
+            sess.done = True
+        sess.served = min(hi, len(ids)) if sess.done else hi
         sess.pages_served += 1
-        return {"kind": "topk", "session": sess.id,
+        return {"kind": sess.kind, "session": sess.id,
                 "page": {"offset": lo, "ids": _ids_list(page_ids),
                          "scores": _scores_list(page_scores)},
-                "served": hi, "total_candidates": sess.run.n,
+                "served": sess.served, "total_candidates": sess.run.n,
                 "exhausted": sess.exhausted,
                 "stats": _stats_dict(sess.run.stats), "cache_hit": False}
 
@@ -249,8 +247,9 @@ class MaskSearchService:
             sessions = []
             for sid, k in requests.items():
                 sess = self.sessions.get(sid)
-                _, hi = sess.page_bounds(k)
-                sess.run.target(hi)
+                if not sess.done:
+                    _, hi = sess.page_bounds(k)
+                    sess.run.target(hi)
                 sessions.append((sess, k))
             self.scheduler.drive([s.run for s, _ in sessions])
             return {s.id: self._serve_page(s, k, scheduler_driven=True)

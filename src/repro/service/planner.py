@@ -1,15 +1,19 @@
 """Query planning for the interactive service: canonical cache keys + LRU
-result/bounds caches.
+result/bounds caches, keyed off the logical-plan IR.
 
 Two cache tiers, matching how a GUI session actually refines queries:
 
-* **result cache** — keyed by the *whole* plan (expression, comparison,
-  threshold, k, order, mask_types, ROI content).  A repeated query is
+* **result cache** — keyed by the *whole* plan (predicate tree, ranking
+  expression, k, order, mask_types, ROI content).  A repeated query is
   answered with zero mask loads.
-* **bounds cache** — keyed by everything that determines the candidate set
-  and the CHI bounds pass, but *not* by threshold/op/k.  A refined query
-  (same expression, new threshold or larger LIMIT) reuses the prior bounds
-  pass for free and pays only for the changed verification residue.
+* **bounds cache** — keyed **per value expression** by everything that
+  determines the candidate set and the CHI bounds pass (expression, mask
+  types, grouping, ROI content) but *not* by comparison op / threshold / k
+  or by the rest of the plan.  A refined query (same expressions, new
+  thresholds, rearranged boolean structure, or a larger LIMIT) reuses every
+  prior bounds pass for free and pays only for the changed verification
+  residue — and two *different* plans sharing a CP expression share its
+  bounds entry.
 
 Keys are canonical strings built from the frozen-dataclass expression reprs
 (deterministic) plus a content hash of any caller-provided ROI array.
@@ -24,8 +28,14 @@ from typing import Optional
 
 import numpy as np
 
-from ..core.exprs import Node, is_group_expr
-from ..core.queries import Query
+from ..core.exprs import Node
+from ..core.plan import LogicalPlan
+
+
+def _as_plan(plan_or_query) -> LogicalPlan:
+    if isinstance(plan_or_query, LogicalPlan):
+        return plan_or_query
+    return plan_or_query.plan          # queries.Query compat
 
 
 def expr_signature(node: Optional[Node]) -> str:
@@ -43,20 +53,20 @@ def roi_signature(rois: Optional[np.ndarray]) -> str:
     return hashlib.sha1(arr.tobytes() + str(arr.shape).encode()).hexdigest()[:16]
 
 
-def result_key(q: Query, roi_sig: str) -> str:
-    return "|".join([
-        q.kind, q.select, expr_signature(q.expr), str(q.op), str(q.threshold),
-        str(q.k), str(q.desc), str(q.agg), str(q.mask_types),
-        str(q.group_by_image), roi_sig,
-    ])
+def result_key(plan_or_query, roi_sig: str) -> str:
+    return _as_plan(plan_or_query).signature() + "|" + roi_sig
 
 
-def bounds_key(q: Query, roi_sig: str) -> str:
-    """Everything that pins the candidate set + bounds — NOT op/threshold/k,
-    so a refined query hits the same entry."""
-    grouped = q.group_by_image or (q.expr is not None and is_group_expr(q.expr))
+def bounds_key(expr: Node, plan_or_query, roi_sig: str) -> str:
+    """One *value expression*'s bounds-cache key: everything that pins the
+    candidate set + its CHI pass — NOT op/threshold/k or the rest of the
+    plan, so refined and restructured queries hit the same entries."""
+    plan = _as_plan(plan_or_query)
     return "|".join([
-        expr_signature(q.expr), str(q.mask_types), str(grouped), roi_sig,
+        expr_signature(expr),
+        str(None if plan.mask_types is None
+            else tuple(sorted(plan.mask_types))),
+        str(plan.grouped), roi_sig,
     ])
 
 
@@ -106,8 +116,25 @@ class LRUCache:
         self.info.size = 0
 
 
+class _PlanBoundsHook:
+    """Adapts the planner's LRU to the engine's per-run bounds hook
+    (``get(expr)`` / ``put(expr, lb, ub)``), closing over the plan context
+    that pins the candidate set."""
+
+    def __init__(self, cache: LRUCache, plan: LogicalPlan, roi_sig: str):
+        self._cache = cache
+        self._plan = plan
+        self._roi_sig = roi_sig
+
+    def get(self, expr: Node):
+        return self._cache.get(bounds_key(expr, self._plan, self._roi_sig))
+
+    def put(self, expr: Node, lb: np.ndarray, ub: np.ndarray) -> None:
+        self._cache.put(bounds_key(expr, self._plan, self._roi_sig), (lb, ub))
+
+
 class Planner:
-    """Canonicalizes parsed plans into cache keys and owns the two caches."""
+    """Canonicalizes plans into cache keys and owns the two caches."""
 
     def __init__(self, *, result_cache_size: int = 128,
                  bounds_cache_size: int = 64):
@@ -115,20 +142,18 @@ class Planner:
         self.bounds_cache = LRUCache(bounds_cache_size)
 
     # -- result tier ------------------------------------------------------
-    def cached_result(self, q: Query, roi_sig: str):
-        return self.result_cache.get(result_key(q, roi_sig))
+    def cached_result(self, plan_or_query, roi_sig: str):
+        return self.result_cache.get(result_key(plan_or_query, roi_sig))
 
-    def store_result(self, q: Query, roi_sig: str, payload) -> None:
-        self.result_cache.put(result_key(q, roi_sig), payload)
+    def store_result(self, plan_or_query, roi_sig: str, payload) -> None:
+        self.result_cache.put(result_key(plan_or_query, roi_sig), payload)
 
     # -- bounds tier ------------------------------------------------------
-    def cached_bounds(self, q: Query, roi_sig: str):
-        """(lb, ub) float64 arrays from a prior bounds pass, or None."""
-        return self.bounds_cache.get(bounds_key(q, roi_sig))
-
-    def store_bounds(self, q: Query, roi_sig: str, lb: np.ndarray,
-                     ub: np.ndarray) -> None:
-        self.bounds_cache.put(bounds_key(q, roi_sig), (lb, ub))
+    def bounds_hook(self, plan_or_query, roi_sig: str) -> _PlanBoundsHook:
+        """The per-expression bounds cache, scoped to one plan's candidate
+        set — hand this to :func:`repro.core.plan.compile_plan`."""
+        return _PlanBoundsHook(self.bounds_cache, _as_plan(plan_or_query),
+                               roi_sig)
 
     def stats(self) -> dict:
         return {"result_cache": self.result_cache.info.as_dict(),

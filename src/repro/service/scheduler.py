@@ -11,9 +11,14 @@ are driven round-robin; each round the scheduler
    bytes, the full paper's workload optimization applied across concurrent
    sessions instead of a pre-declared batch.
 
-Jobs whose expression can't be fused (MASK_AGG group queries) fall back to
+Jobs whose expressions can't be fused (MASK_AGG group queries) fall back to
 their own verification path, still behind the shared cache, so they share
 I/O even when they can't share compute.
+
+The scheduler is operator-agnostic: any run implementing the uniform
+``take_batch / cp_terms / fused_values / apply_exact / finished`` interface
+(filter, top-k, filtered top-k, scalar aggregation — see DESIGN.md §6)
+fuses here without the scheduler knowing which it is driving.
 """
 
 from __future__ import annotations
@@ -24,7 +29,7 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
-from ..core.exprs import CP, MaskEvalContext, eval_with_counts
+from ..core.exprs import CP, MaskEvalContext
 from ..kernels import ops as kops
 
 _F32_MAX = 3.4e38  # finite stand-in for +inf in float32 kernel compares
@@ -45,10 +50,10 @@ class SchedulerStats:
 
 
 def _fusable(job) -> bool:
-    """A job fuses iff it evaluates a pure per-mask CP expression."""
+    """A job fuses iff its verification evaluates pure per-mask CP terms."""
     if not isinstance(job.ctx, MaskEvalContext):
         return False
-    terms = job.expr.cp_terms()
+    terms = job.cp_terms()
     return bool(terms) and all(isinstance(t, CP) for t in terms)
 
 
@@ -105,7 +110,7 @@ class FusedScheduler:
         rows: dict = {}
         specs: list = []
         for job, _ in pairs:
-            for term in set(job.expr.cp_terms()):
+            for term in set(job.cp_terms()):
                 key = (term, id(job.ctx.provided_rois)
                        if term.roi == "provided" else None)
                 if key not in rows:
@@ -128,12 +133,11 @@ class FusedScheduler:
             pos = job.ctx.positions[batch]
             sub = np.searchsorted(all_pos, pos)
             cdict = {}
-            for term in set(job.expr.cp_terms()):
+            for term in set(job.cp_terms()):
                 key = (term, id(job.ctx.provided_rois)
                        if term.roi == "provided" else None)
                 cdict[term] = counts[rows[key]][sub]
-            values = eval_with_counts(job.ctx, job.expr, batch, cdict)
-            job.apply_exact(batch, values)
+            job.apply_exact(batch, job.fused_values(batch, cdict))
 
         # Per-job ExecStats get a fair share of the round's shared load and
         # wall time (proportional to batch size); the exact aggregate lives

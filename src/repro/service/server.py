@@ -4,7 +4,8 @@ Endpoints (all JSON):
 
 * ``POST /query``    — body ``{"sql": "...", "session": bool?,
   "page_size": int?, "rois": [[r0,c0,r1,c1], ...]?}`` → one result, or the
-  first page + ``session`` id.
+  first page + ``session`` id.  WHERE clauses compose with AND/OR/NOT and
+  with ORDER BY … LIMIT (predicate-filtered rankings paginate too).
 * ``POST /workload`` — body ``{"sqls": ["...", ...]}`` → list of results,
   verified in fused cross-query passes.
 * ``GET /session/<id>/page?k=N`` — next page of an open session.

@@ -1,11 +1,15 @@
 """Interactive sessions: incremental top-k result delivery.
 
-A session wraps a resumable :class:`repro.core.engine.TopKRun`.  The GUI's
-"LIMIT 25 → next 25" interaction becomes: raise the run's finality target to
-``served + k`` (re-deriving the pruning frontier from the *cached* bounds —
-no new CHI pass) and run only the extra verification batches the larger
-target needs.  Pagination over n pages therefore returns exactly the
-ids/scores of a one-shot ``LIMIT n·k`` query, at a fraction of fresh cost.
+A session wraps any resumable ranking run presenting the uniform
+``target / result / n`` surface — :class:`repro.core.engine.TopKRun` or
+:class:`repro.core.engine.FilteredTopKRun` (a predicate-filtered ranking
+paginates identically; the predicate residue just rides the same frontier).
+The GUI's "LIMIT 25 → next 25" interaction becomes: raise the run's
+finality target to ``served + k`` (re-deriving the pruning frontier from
+the *cached* bounds — no new CHI pass) and run only the extra verification
+batches the larger target needs.  Pagination over n pages therefore returns
+exactly the ids/scores of a one-shot ``LIMIT n·k`` query, at a fraction of
+fresh cost.
 """
 
 from __future__ import annotations
@@ -16,8 +20,6 @@ import time
 from collections import OrderedDict
 from typing import Optional
 
-from ..core.engine import TopKRun
-
 _session_counter = itertools.count(1)
 
 
@@ -25,16 +27,21 @@ _session_counter = itertools.count(1)
 class Session:
     id: str
     sql: str
-    run: TopKRun
+    run: object                      # TopKRun | FilteredTopKRun
     page_size: int
+    kind: str = "topk"
     served: int = 0
     pages_served: int = 0
+    done: bool = False               # qualifying result set fully delivered
     created_s: float = dataclasses.field(default_factory=time.monotonic)
     last_used_s: float = dataclasses.field(default_factory=time.monotonic)
 
     @property
     def exhausted(self) -> bool:
-        return self.served >= self.run.n
+        # ``done`` covers filtered rankings, whose deliverable count is the
+        # number of predicate-qualifying rows — discovered during paging —
+        # not the candidate count ``run.n``.
+        return self.done or self.served >= self.run.n
 
     def page_bounds(self, k: Optional[int]) -> tuple[int, int]:
         k = self.page_size if k is None else max(int(k), 1)
@@ -50,9 +57,10 @@ class SessionManager:
         self.created = 0
         self.evicted = 0
 
-    def create(self, sql: str, run: TopKRun, page_size: int) -> Session:
+    def create(self, sql: str, run, page_size: int,
+               kind: str = "topk") -> Session:
         sid = f"s{next(_session_counter)}-{id(run) & 0xffff:04x}"
-        sess = Session(id=sid, sql=sql, run=run,
+        sess = Session(id=sid, sql=sql, run=run, kind=kind,
                        page_size=max(int(page_size), 1))
         self._sessions[sid] = sess
         self.created += 1

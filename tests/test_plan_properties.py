@@ -1,0 +1,126 @@
+"""Property tests (hypothesis): three-valued predicate-tree bounds decisions
+agree with the ``use_index=False`` full-scan baseline on random plans.
+
+Soundness being checked, for every randomly generated predicate tree:
+
+  * ``decide`` never contradicts itself (accept ∧ reject = ∅);
+  * accept ⇒ the exact predicate holds, reject ⇒ it cannot hold;
+  * executing the plan through the index (with bounds pruning through the
+    whole boolean tree) returns exactly the baseline's rows, and filtered
+    top-k returns the baseline's ids *and* scores in order.
+
+The numpy-seeded fallback versions of these checks (runnable without
+hypothesis) live in test_plan.py.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed in this environment")
+
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+from repro.core import CHIConfig, MaskStore  # noqa: E402
+from repro.core.exprs import (And, BinOp, Cmp, CP, MaskEvalContext,  # noqa: E402
+                              Not, Or, RoiArea)
+from repro.core.plan import LogicalPlan, run_plan  # noqa: E402
+from repro.core.store import MASK_META_DTYPE  # noqa: E402
+from repro.data.masks import object_boxes, saliency_masks  # noqa: E402
+
+B, H, W = 20, 32, 32
+
+_STORE = {}
+
+
+def _db():
+    """Module-lazy store (hypothesis re-enters the test many times)."""
+    if "store" not in _STORE:
+        rois = object_boxes(B, H, W, seed=5)
+        masks, _ = saliency_masks(B, H, W, seed=4, attacked_fraction=0.25,
+                                  boxes=rois)
+        meta = np.zeros(B, MASK_META_DTYPE)
+        meta["mask_id"] = np.arange(B)
+        meta["image_id"] = np.arange(B) // 2
+        meta["mask_type"] = np.arange(B) % 2 + 1
+        cfg = CHIConfig(grid=4, num_bins=8, height=H, width=W)
+        _STORE["store"] = MaskStore.create_memory(masks, meta, cfg)
+        _STORE["rois"] = rois
+    return _STORE["store"], _STORE["rois"]
+
+
+_ranges = st.sampled_from([(0.0, 0.3), (0.2, 0.6), (0.5, 1.0), (0.8, 1.0)])
+_rois = st.sampled_from([None, "provided", (4, 4, 28, 28)])
+
+
+@st.composite
+def _exprs(draw):
+    lv, uv = draw(_ranges)
+    roi = draw(_rois)
+    base = CP(roi, lv, uv)
+    shape = draw(st.integers(0, 3))
+    if shape == 1:
+        return BinOp("/", base, RoiArea(roi))
+    if shape == 2:
+        lv2, uv2 = draw(_ranges)
+        return BinOp(draw(st.sampled_from("+-*")), base,
+                     CP(draw(_rois), lv2, uv2))
+    return base
+
+
+@st.composite
+def _cmps(draw):
+    return Cmp(draw(_exprs()), draw(st.sampled_from(["<", "<=", ">", ">="])),
+               draw(st.sampled_from([0.0, 0.02, 10.0, 100.0, 400.0])))
+
+
+_preds = st.recursive(
+    _cmps(),
+    lambda children: st.one_of(
+        st.builds(And, children, children),
+        st.builds(Or, children, children),
+        st.builds(Not, children),
+    ),
+    max_leaves=4,
+)
+
+_SETTINGS = settings(max_examples=30, deadline=None,
+                     suppress_health_check=[HealthCheck.too_slow])
+
+
+@_SETTINGS
+@given(pred=_preds)
+def test_three_valued_decisions_sound(pred):
+    store, rois = _db()
+    ctx = MaskEvalContext(store, np.arange(len(store)), rois,
+                          partial_rows=False)
+    accept, reject = pred.decide(ctx.bounds, ctx)
+    assert not np.any(accept & reject)
+    exact = pred.exact(ctx, np.arange(len(store)))
+    assert np.all(exact[accept])
+    assert not np.any(exact[reject])
+
+
+@_SETTINGS
+@given(pred=_preds)
+def test_random_filter_plan_matches_full_scan(pred):
+    store, rois = _db()
+    plan = LogicalPlan(predicate=pred)
+    ids, stats = run_plan(store, plan, provided_rois=rois, verify_batch=5)
+    ids0, _ = run_plan(store, plan, provided_rois=rois, use_index=False)
+    assert sorted(ids) == sorted(ids0)
+    assert stats.n_verified + stats.n_decided_by_bounds == stats.n_candidates
+
+
+@_SETTINGS
+@given(pred=_preds, rank=_exprs(), desc=st.booleans(),
+       k=st.integers(1, B + 2))
+def test_random_filtered_topk_matches_full_scan(pred, rank, desc, k):
+    store, rois = _db()
+    plan = LogicalPlan(predicate=pred, order_by=rank, k=k, desc=desc)
+    (ids, scores), _ = run_plan(store, plan, provided_rois=rois,
+                                verify_batch=3)
+    (ids0, scores0), _ = run_plan(store, plan, provided_rois=rois,
+                                  use_index=False)
+    assert list(ids) == list(ids0)
+    np.testing.assert_allclose(scores, scores0)

@@ -65,11 +65,63 @@ def test_mask_type_in_with_predicate_and_chain(small_store):
     assert np.all(types == 2)
 
 
-def test_multiple_cp_predicates_rejected():
-    with pytest.raises(SyntaxError):
-        queries.parse("SELECT mask_id FROM V WHERE "
+def test_multiple_cp_predicates_combine(small_store):
+    """Formerly a documented hard rejection; now an And tree in the IR."""
+    from repro.core.exprs import And, Cmp
+    q = queries.parse("SELECT mask_id FROM V WHERE "
                       "CP(mask, full_img, (0.0, 0.5)) > 1 AND "
                       "CP(mask, full_img, (0.5, 1.0)) > 1;")
+    assert q.kind == "filter"
+    assert isinstance(q.predicate, And)
+    assert isinstance(q.predicate.left, Cmp)
+    assert isinstance(q.predicate.right, Cmp)
+    ids, stats = q.run(small_store)
+    ids_scan, _ = q.run(small_store, use_index=False)
+    assert set(int(x) for x in ids) == set(int(x) for x in ids_scan)
+
+
+def test_cp_predicate_composes_with_order_by(small_store):
+    """Formerly a documented hard rejection; now a filtered_topk plan."""
+    q = queries.parse(
+        "SELECT mask_id FROM V WHERE CP(mask, full_img, (0.5, 1.0)) > 100 "
+        "ORDER BY CP(mask, full_img, (0.0, 0.5)) DESC LIMIT 5;")
+    assert q.kind == "filtered_topk" and q.k == 5
+    (ids, scores), _ = q.run(small_store)
+    (ids0, scores0), _ = q.run(small_store, use_index=False)
+    assert list(ids) == list(ids0)
+    np.testing.assert_allclose(scores, scores0)
+
+
+def test_or_not_and_parens(small_store):
+    from repro.core.exprs import Cmp, Not, Or
+    q = queries.parse(
+        "SELECT mask_id FROM V WHERE CP(mask, full_img, (0.0, 0.5)) > 1e2 "
+        "OR NOT (CP(mask, full_img, (0.5, 1.0)) >= -5 "
+        "AND mask_type IN (1));")
+    assert q.kind == "filter"
+    assert isinstance(q.predicate, Or)
+    assert isinstance(q.predicate.right, Not)
+    ids, _ = q.run(small_store)
+    ids_scan, _ = q.run(small_store, use_index=False)
+    assert set(int(x) for x in ids) == set(int(x) for x in ids_scan)
+    # parenthesized arithmetic still parses as an expression comparison
+    q2 = queries.parse("SELECT mask_id FROM V WHERE "
+                       "(CP(mask, full_img, (0.0, 0.5)) + 3) > 5;")
+    assert isinstance(q2.predicate, Cmp)
+
+
+def test_unary_minus_and_scientific_notation(small_store):
+    from repro.core.exprs import BinOp, Const
+    q = queries.parse("SELECT mask_id FROM V WHERE "
+                      "-1 * CP(mask, full_img, (0.0, 0.5)) < 1e4;")
+    assert isinstance(q.expr, BinOp) and q.expr.op == "*"
+    assert isinstance(q.expr.left, Const) and q.expr.left.value == -1.0
+    assert q.threshold == 1e4
+    ids, _ = q.run(small_store)
+    assert len(ids) == len(small_store)      # -CP is always < 1e4
+    q2 = queries.parse("SELECT mask_id FROM V WHERE "
+                       "CP(mask, full_img, (0.0, 1.0)) >= -2.5e-1;")
+    assert q2.threshold == -0.25
 
 
 # -- literal ROI rectangles --------------------------------------------------
@@ -124,9 +176,19 @@ def test_scalar_agg_case_insensitive():
     "SELECT mask_id FROM V WHERE mask_type IN 1;",  # IN without parens
     "SELECT mask_id FROM V GROUP BY mask_id;",      # can only group by image
     "SELECT",                                       # truncated
-    # a CP WHERE predicate would be silently dropped by ORDER BY — refused
-    "SELECT mask_id FROM V WHERE CP(mask, full_img, (0.5, 1.0)) > 100 "
-    "ORDER BY CP(mask, full_img, (0.0, 0.5)) DESC LIMIT 5;",
+    # boolean-grammar malformations
+    "SELECT mask_id FROM V WHERE CP(mask, full_img, (0.5, 1.0)) > 100 AND;",
+    "SELECT mask_id FROM V WHERE NOT;",             # NOT without operand
+    "SELECT mask_id FROM V WHERE (CP(mask, full_img, (0.5, 1.0)) > 1;",
+    "SELECT mask_id FROM V WHERE CP(mask, full_img, (0.5, 1.0)) > 1 "
+    "LIMIT 5;",                                     # trailing tokens
+    # negative LIMIT: unary-minus literals must not leak into k
+    "SELECT mask_id FROM V ORDER BY CP(mask, full_img, (0.2, 0.6)) "
+    "DESC LIMIT -5;",
+    # grouped ranking cannot mix in per-mask CP terms
+    "SELECT image_id FROM V WHERE CP(mask, full_img, (0.5, 1.0)) > 10 "
+    "GROUP BY image_id ORDER BY "
+    "CP(union(mask > 0.5), full_img, (0.0, 1.0)) DESC LIMIT 3;",
     "SELECT mask_id FROM V WHERE ",                 # ends where expr expected
     "SELECT mask_id FROM V ORDER BY ",              # ends where expr expected
     "SELECT mask_id FROM V WHERE CP(",              # ends inside CP(

@@ -208,6 +208,129 @@ def test_filter_and_scalar_through_service(db):
     assert warm["cache_hit"] and warm["value"] == got["value"]
 
 
+FILTERED_TOPK_SQL = (
+    "SELECT mask_id FROM MasksDatabaseView WHERE "
+    "CP(mask, full_img, (0.5, 1.0)) > 200 "
+    "ORDER BY CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 5;")
+
+
+def test_filtered_topk_session_pagination(db):
+    """A predicate-filtered ranking paginates exactly like a plain one."""
+    root, _ = db
+    svc = _fresh_service(root, verify_batch=8)
+    first = svc.query(FILTERED_TOPK_SQL, session=True, page_size=5)
+    pages = [first["page"]]
+    for _ in range(2):
+        pages.append(svc.next_page(first["session"])["page"])
+    paged_ids = sum((p["ids"] for p in pages), [])
+    paged_scores = sum((p["scores"] for p in pages), [])
+
+    import dataclasses
+
+    store = MaskStore.open_disk(root)
+    plan = queries.parse(FILTERED_TOPK_SQL).plan
+    from repro.core.plan import run_plan
+    (ids, scores), _ = run_plan(store, dataclasses.replace(plan, k=15))
+    assert paged_ids == [int(x) for x in ids]
+    np.testing.assert_allclose(paged_scores, scores)
+
+
+def test_filtered_topk_fuses_in_batch(db):
+    """Filtered rankings and scalar aggs ride the same fused passes."""
+    root, _ = db
+    svc = _fresh_service(root, verify_batch=8)
+    sqls = [FILTERED_TOPK_SQL,
+            FILTERED_TOPK_SQL.replace("0.2", "0.25"),
+            "SELECT SCALAR_AGG(AVG, CP(mask, full_img, (0.3, 0.7))) "
+            "FROM MasksDatabaseView;"]
+    out = svc.submit_batch(sqls)
+    assert svc.scheduler.stats.fused_passes > 0
+
+    store = MaskStore.open_disk(root)
+    for got, sql in zip(out, sqls):
+        plan = queries.parse(sql)
+        if got["kind"] == "scalar_agg":
+            want, _ = plan.run(store)
+            assert abs(got["value"] - want) < 1e-9
+        else:
+            (ids, scores), _ = plan.run(store)
+            assert got["ids"] == [int(x) for x in ids]
+            np.testing.assert_allclose(got["scores"], scores)
+
+
+def test_service_honors_query_field_mutation(db):
+    """A parsed Query whose flat fields were tweaked after parse() must
+    execute (and cache) the mutated plan, exactly like Query.run."""
+    root, _ = db
+    svc = _fresh_service(root)
+    q = queries.parse("SELECT mask_id FROM MasksDatabaseView WHERE "
+                      "CP(mask, full_img, (0.2, 0.6)) > 500;")
+    q.threshold = 900.0
+    got = svc.query(q)
+    store = MaskStore.open_disk(root)
+    want, _ = engine.filter_query(store, queries.parse(
+        "SELECT mask_id FROM MasksDatabaseView WHERE "
+        "CP(mask, full_img, (0.2, 0.6)) > 900;").predicate)
+    assert sorted(got["ids"]) == sorted(int(x) for x in want)
+
+
+def test_empty_scalar_agg_serves_json_null(db):
+    """NaN (empty candidate set) must reach HTTP clients as null, not the
+    invalid-JSON literal NaN."""
+    import json
+
+    root, _ = db
+    svc = _fresh_service(root)
+    out = svc.query("SELECT SCALAR_AGG(AVG, CP(mask, full_img, (0.2, 0.6))) "
+                    "FROM MasksDatabaseView WHERE mask_type IN (7);")
+    assert out["value"] is None
+    json.loads(json.dumps(out, allow_nan=False))     # strict round-trip
+
+
+def test_filtered_session_exhausts_when_predicate_starves(db):
+    """A filtered ranking whose predicate matches fewer rows than requested
+    must report exhausted instead of serving endless empty pages."""
+    root, _ = db
+    svc = _fresh_service(root, verify_batch=8)
+    sql = ("SELECT mask_id FROM MasksDatabaseView WHERE "
+           "CP(mask, full_img, (0.99, 1.0)) > 100000 "    # impossible: > area
+           "ORDER BY CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 5;")
+    first = svc.query(sql, session=True, page_size=5)
+    assert first["page"]["ids"] == []
+    assert first["exhausted"]
+    again = svc.next_page(first["session"])
+    assert again["page"]["ids"] == [] and again["exhausted"]
+    # and a partially-starved predicate delivers its rows then exhausts
+    store = MaskStore.open_disk(root)
+    probe = queries.parse("SELECT mask_id FROM MasksDatabaseView WHERE "
+                          "CP(mask, full_img, (0.5, 1.0)) > 900;")
+    n_match = len(probe.run(store)[0])
+    assert 0 < n_match < B
+    sql2 = ("SELECT mask_id FROM MasksDatabaseView WHERE "
+            "CP(mask, full_img, (0.5, 1.0)) > 900 "
+            "ORDER BY CP(mask, full_img, (0.2, 0.6)) DESC LIMIT "
+            f"{n_match + 3};")
+    page = svc.query(sql2, session=True, page_size=n_match + 3)
+    assert len(page["page"]["ids"]) == n_match
+    assert page["exhausted"]
+
+
+def test_bounds_cache_shared_across_plan_shapes(db):
+    """A CP expression's bounds entry is shared between the plans that use
+    it — a filter, a refined filter, and a filtered ranking all hit it."""
+    root, _ = db
+    svc = _fresh_service(root)
+    svc.query("SELECT mask_id FROM MasksDatabaseView WHERE "
+              "CP(mask, full_img, (0.2, 0.6)) > 500;")
+    misses0 = svc.planner.bounds_cache.info.misses
+    svc.query("SELECT mask_id FROM MasksDatabaseView WHERE "
+              "CP(mask, full_img, (0.2, 0.6)) > 800 "
+              "AND CP(mask, full_img, (0.5, 1.0)) > 10;")
+    # the (0.2, 0.6) expression came from cache; only (0.5, 1.0) missed
+    assert svc.planner.bounds_cache.info.hits >= 1
+    assert svc.planner.bounds_cache.info.misses == misses0 + 1
+
+
 def test_group_query_through_batch_fallback(db):
     root, _ = db
     svc = _fresh_service(root, verify_batch=8)
