@@ -239,9 +239,13 @@ def main():
                     help="also write a JSON record to this path")
     args = ap.parse_args()
 
+    import jax
+
     print("name,us_per_call,derived")
     tmpdir = tempfile.mkdtemp(prefix="masksearch_serve_")
-    record = {"config": {"n_masks": args.n_masks, "size": args.size}}
+    record = {"config": {"n_masks": args.n_masks, "size": args.size,
+                         "jax_backend": jax.default_backend(),
+                         "device_count": jax.device_count()}}
     try:
         t0 = time.perf_counter()
         root, rois = _setup(args.n_masks, args.size, tmpdir)

@@ -7,9 +7,17 @@ page" resumes the verification frontier instead of re-running), while a
 second analyst's concurrent queries share verification I/O through the
 fused scheduler.
 
+``--backend {host,device,mesh}`` replays the same session transcript on
+any execution backend (core/backend.py): the host path loads mask bytes
+from disk per verification batch; the device path verifies against the
+HBM-resident tier (watch the disk column go to zero); the mesh path runs
+the sharded shard_map steps over every local device.
+
     PYTHONPATH=src python examples/scenario4_interactive_session.py
+    PYTHONPATH=src python examples/scenario4_interactive_session.py --backend device
 """
 
+import argparse
 import os
 import shutil
 import tempfile
@@ -36,10 +44,18 @@ def build_db(root, n=600, size=128):
 
 
 def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--backend", default="host",
+                    choices=("host", "device", "mesh"),
+                    help="execution backend for the whole session")
+    args = ap.parse_args()
+
     tmp = tempfile.mkdtemp(prefix="masksearch_s4_")
     try:
         store, rois = build_db(tmp)
-        svc = MaskSearchService(store, provided_rois=rois)
+        svc = MaskSearchService(store, provided_rois=rois,
+                                backend=args.backend)
+        print(f"== backend: {svc.backend.name} ==\n")
         mb = 1 / 1e6
 
         # -- 1. threshold refine loop (filter) --------------------------------

@@ -6,12 +6,17 @@ Public surface:
   * :mod:`repro.core.store`   — tiered MasksDatabaseView storage.
   * :mod:`repro.core.exprs`   — CP expressions with interval semantics.
   * :mod:`repro.core.engine`  — filter–verification execution framework.
+  * :mod:`repro.core.backend` — pluggable execution backends (host /
+    device / mesh) under one physical protocol.
   * :mod:`repro.core.queries` — SQL-ish front-end (demo "Query Command").
-  * :mod:`repro.core.distributed` — shard_map multi-device query engine.
+  * :mod:`repro.core.distributed` — shard_map multi-device query engine
+    (the mesh backend's step functions).
   * :mod:`repro.core.saliency`/:mod:`repro.core.augment` — the ML-workflow
     integration (mask harvesting + Scenario-1 augmentation).
 """
 
+from .backend import (DeviceBackend, ExecBackend, HostBackend,  # noqa: F401
+                      MeshBackend, get_backend)
 from .chi import CHIConfig, build_chi, build_chi_np, chi_bounds  # noqa: F401
 from .engine import (ExecStats, FilteredTopKRun, FilterRun,  # noqa: F401
                      MinMaxAggRun, ScalarAggRun, TopKRun,

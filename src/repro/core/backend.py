@@ -1,0 +1,451 @@
+"""Pluggable execution backends — one physical filter–verification layer.
+
+The engine's run objects (:mod:`.engine`) are *drivers*: they own the
+frontier bookkeeping (what is decided, what is pending, when a ranking is
+final) but delegate every physical operation to an :class:`ExecBackend`,
+the way SeeSaw routes one interactive query API over interchangeable
+vector backends.  Four primitives cover every plan the IR can express:
+
+* ``bounds(ctx, expr)``            — CHI-derived (lb, ub) for every
+                                     candidate of a value expression (the
+                                     filter phase; no mask bytes touched).
+* ``verify_counts(ctx, batch, terms)`` — exact per-CP-term pixel counts for
+                                     one verification batch (the
+                                     verification phase).
+* ``topk_candidates(lb, ub, k, …)`` — the ranking frontier: which
+                                     candidates can still reach the top-k.
+* ``mask_agg_counts(gctx, node, gidx)`` — fused thresholded
+                                     intersection/union counts for MASK_AGG
+                                     group verification.
+
+plus ``fused_counts`` — the service scheduler's cross-query
+``cp_count_multi`` pass, run on whichever backend owns the store.
+
+Three implementations:
+
+* :class:`HostBackend`   — the NumPy/``MaskEvalContext`` paths extracted
+                           from the engine, behavior-preserving (partial
+                           ROI-row loads, shared-load cache, I/O metering).
+* :class:`DeviceBackend` — the store's mask bytes and CHI table pinned
+                           resident in device memory; bounds *and*
+                           verification are jit-compiled over the Pallas
+                           kernels, so the filter phase leaves the host.
+* :class:`MeshBackend`   — :mod:`.distributed`'s step functions over
+                           ``shard_map``: rows shard over every mesh axis,
+                           the top-k frontier is one ``all_gather``
+                           collective, and verification/MASK_AGG batches
+                           run sharded.
+
+Equivalence contract (property-tested in
+``tests/test_backend_equivalence.py``): all three backends return
+identical ids/scores and identical ``n_verified`` accounting for any plan.
+Bounds interval arithmetic stays on the host in float64 for every backend
+(only the CP leaf differs, and it is integral), and the device/mesh top-k
+collectives return the τ *row id* rather than a float32 τ value, so the
+frontier comparison happens at full host precision everywhere.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..kernels import ops as kops
+from .distributed import (_bounds_from_corners, device_resolve,
+                          make_chi_bounds_step, make_cp_multi_step,
+                          make_mask_agg_step, make_mesh,
+                          make_topk_select_step, make_verify_step, value_ks)
+
+F32_MAX = 3.4e38  # finite stand-in for +inf in float32 kernel compares
+_F32_MAX = F32_MAX
+
+
+def spec_arrays(specs, dtype=np.float32):
+    """Stack fused-pass descriptors ``(rois, lv, uv)`` into kernel inputs,
+    clamping +inf upper values to the float32-safe ceiling — the one
+    canonical layout shared by every backend and the service scheduler."""
+    rois_q = np.stack([s[0] for s in specs]).astype(np.int32)
+    lvs = np.asarray([s[1] for s in specs], dtype)
+    uvs = np.asarray([min(s[2], F32_MAX) for s in specs], dtype)
+    return rois_q, lvs, uvs
+
+
+class ExecBackend:
+    """Protocol for the physical layer under the engine's run drivers."""
+
+    name = "abstract"
+
+    def bounds(self, ctx, expr):
+        """(lb, ub) float64 arrays over ``ctx``'s candidates for ``expr``."""
+        raise NotImplementedError
+
+    def verify_counts(self, ctx, batch: np.ndarray, terms) -> dict:
+        """Exact counts for one verification batch: CP term → float64
+        array aligned with ``batch`` (candidate indices into ``ctx``)."""
+        raise NotImplementedError
+
+    def topk_candidates(self, lb, ub, k: int, desc: bool,
+                        definite: np.ndarray,
+                        possible: np.ndarray) -> np.ndarray:
+        """The static pruning frontier: candidates whose optimistic bound
+        beats the k-th best pessimistic bound among ``definite``
+        (definitely-qualifying) candidates.  Returns an ``alive`` bool
+        array ⊆ ``possible``; when fewer than k are definite nothing can
+        be pruned and ``possible`` is returned unchanged."""
+        raise NotImplementedError
+
+    def mask_agg_counts(self, gctx, node, gidx: np.ndarray) -> np.ndarray:
+        """Exact MASK_AGG counts (thresholded intersect/union inside the
+        ROI) for group indices ``gidx`` of a :class:`GroupEvalContext`."""
+        raise NotImplementedError
+
+    def fused_counts(self, store, positions: np.ndarray,
+                     specs) -> np.ndarray:
+        """The scheduler's fused pass: Q ``(rois, lv, uv)`` descriptors
+        over the masks at ``positions`` → (Q, B) counts from one pass
+        over the bytes."""
+        raise NotImplementedError
+
+
+# ---------------------------------------------------------------------------
+# Host — the extracted NumPy / MaskEvalContext physical layer
+# ---------------------------------------------------------------------------
+
+
+class HostBackend(ExecBackend):
+    """The original physical layer: bounds through the store's CHI gather,
+    verification through metered ``store.load`` (partial ROI-row loads,
+    shared-load cache) + the ``cp_count`` kernel, frontiers in NumPy."""
+
+    name = "host"
+
+    def bounds(self, ctx, expr):
+        return ctx.bounds(expr)
+
+    def verify_counts(self, ctx, batch, terms):
+        # One ctx.exact per *distinct* term: masks_for caches the load, so
+        # a predicate and a ranking sharing an expression share its bytes.
+        return {t: ctx.exact(t, batch) for t in terms}
+
+    def topk_candidates(self, lb, ub, k, desc, definite, possible):
+        if desc:
+            dvals = lb[definite]
+            if len(dvals) >= k:
+                tau = np.partition(dvals, -k)[-k]
+                return possible & (ub >= tau)
+            return possible.copy()
+        dvals = ub[definite]
+        if len(dvals) >= k:
+            tau = np.partition(dvals, k - 1)[k - 1]
+            return possible & (lb <= tau)
+        return possible.copy()
+
+    def mask_agg_counts(self, gctx, node, gidx):
+        gidx = np.asarray(gidx)
+        s = gctx.groups.shape[1]
+        flat_idx = (gidx[:, None] * s + np.arange(s)[None, :]).reshape(-1)
+        masks = gctx._ctx.masks_for(flat_idx)
+        masks = masks.reshape(len(gidx), s, gctx.cfg.height, gctx.cfg.width)
+        rois = gctx.resolve_group_rois(node.roi, gidx)
+        # fused threshold+agg+count → Pallas mask_agg kernel on TPU
+        inter, union = kops.mask_agg_counts(
+            jnp.asarray(masks), jnp.asarray(rois),
+            jnp.asarray(node.thresh, masks.dtype))
+        counts = inter if node.agg == "intersect" else union
+        return np.asarray(counts, np.float64)
+
+    def fused_counts(self, store, positions, specs):
+        masks = store.load(positions)
+        rois_q, lvs, uvs = spec_arrays(specs, masks.dtype)
+        return np.asarray(kops.cp_count_multi(
+            jnp.asarray(masks), jnp.asarray(rois_q),
+            jnp.asarray(lvs), jnp.asarray(uvs)))
+
+
+# ---------------------------------------------------------------------------
+# Device — single device, masks + CHI pinned resident in HBM
+# ---------------------------------------------------------------------------
+
+
+@jax.jit
+def _device_cp_bounds(tables, pos, rois, rb, cb, ks):
+    """CP-leaf bounds with the candidate gather, corner resolution and
+    8-corner lookup all on device (the filter phase leaving the host)."""
+    corners, area = device_resolve(rois, rb, cb)
+    return _bounds_from_corners(tables[pos], corners, area,
+                                ks[0], ks[1], ks[2], ks[3])
+
+
+@jax.jit
+def _device_multi_counts(masks, pos, rois_q, lvs, uvs):
+    """Gather a verification batch from the resident mask array and answer
+    Q CP descriptors in one fused kernel pass."""
+    return kops.cp_count_multi(masks[pos], rois_q, lvs, uvs)
+
+
+@functools.partial(jax.jit, static_argnames=("k",))
+def _device_kth_index(pes, definite, k):
+    masked = jnp.where(definite, pes, -jnp.inf)
+    return jax.lax.top_k(masked, k)[1][k - 1]
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def _device_group_counts(masks, flat_pos, rois, thresh, s):
+    grp = masks[flat_pos]
+    n = flat_pos.shape[0] // s
+    grp = grp.reshape(n, s, masks.shape[1], masks.shape[2])
+    return kops.mask_agg_counts(grp, rois, thresh)
+
+
+class _KthValueMixin:
+    """Shared τ finalization: the device/mesh collectives select over
+    *float32* scores and return the k-th best row's id; τ itself is then
+    re-derived on the host in float64, so the frontier is bit-identical to
+    HostBackend's ``np.partition`` path.
+
+    The float32 cast is order-preserving but not injective: scores closer
+    than one f32 ulp collapse into a tie class, and the collective's pick
+    within that class is arbitrary — reading its float64 value directly
+    could yield a τ *larger* than the true k-th value and over-prune.  So
+    when the selected row's f32 score is shared, the exact τ is resolved
+    from the (tiny) tie class at float64: it is the m-th largest member,
+    where m = k − (#definite scores strictly above the class)."""
+
+    def _alive_from_index(self, lb, ub, k, desc, definite, possible,
+                          pes32, tau_idx):
+        pes64 = lb if desc else -ub
+        if tau_idx >= len(pes64):   # τ fell on a padded −inf row: no pruning
+            return possible.copy()
+        # Read τ's class through the same masked view the collective ranked
+        # (non-definite rows are −inf there), not the raw score array.
+        tau32 = pes32[tau_idx] if definite[tau_idx] else np.float32(-np.inf)
+        tie = definite & (pes32 == tau32)
+        n_tie = int(np.count_nonzero(tie))
+        if n_tie == 0:              # masked −inf pick outside definite
+            return possible.copy()
+        if n_tie == 1:
+            tau = pes64[np.nonzero(tie)[0][0]]
+        else:
+            m = k - int(np.count_nonzero(definite & (pes32 > tau32)))
+            vals = pes64[tie]
+            tau = np.partition(vals, len(vals) - m)[len(vals) - m]
+        if desc:
+            return possible & (ub >= tau)
+        return possible & (lb <= -tau)
+
+
+class DeviceBackend(_KthValueMixin, ExecBackend):
+    """Mask bytes + CHI table pinned in device memory; bounds and
+    verification jit-compiled over the Pallas kernels."""
+
+    name = "device"
+
+    def __init__(self, store):
+        self.store = store
+        self.cfg = store.cfg
+        self._masks = store.device_masks()
+        self._tables = store.chi_table
+        self._rb = jnp.asarray(self.cfg.row_bounds, jnp.int32)
+        self._cb = jnp.asarray(self.cfg.col_bounds, jnp.int32)
+
+    def bounds(self, ctx, expr):
+        return ctx.bounds(expr, cp_leaf=self._cp_bounds)
+
+    def _cp_bounds(self, mctx, node):
+        rois = mctx.resolve_rois(node.roi, mctx.positions)
+        ks = value_ks(self.cfg, node.lv, node.uv)
+        lb, ub = _device_cp_bounds(
+            self._tables, jnp.asarray(mctx.positions),
+            jnp.asarray(rois, jnp.int32), self._rb, self._cb,
+            jnp.asarray(ks))
+        return np.asarray(lb, np.float64), np.asarray(ub, np.float64)
+
+    def verify_counts(self, ctx, batch, terms):
+        terms = list(terms)
+        pos = ctx.positions[batch]
+        rois_q, lvs, uvs = spec_arrays(
+            [(ctx.resolve_rois(t.roi, pos), t.lv, t.uv) for t in terms])
+        counts = np.asarray(_device_multi_counts(
+            self._masks, jnp.asarray(pos), jnp.asarray(rois_q),
+            jnp.asarray(lvs), jnp.asarray(uvs)))
+        return {t: counts[i].astype(np.float64)
+                for i, t in enumerate(terms)}
+
+    def topk_candidates(self, lb, ub, k, desc, definite, possible):
+        if k <= 0 or int(np.count_nonzero(definite)) < k:
+            return possible.copy()
+        pes32 = (lb if desc else -ub).astype(np.float32)
+        tau_idx = int(_device_kth_index(jnp.asarray(pes32),
+                                        jnp.asarray(definite), k))
+        return self._alive_from_index(lb, ub, k, desc, definite, possible,
+                                      pes32, tau_idx)
+
+    def mask_agg_counts(self, gctx, node, gidx):
+        gidx = np.asarray(gidx)
+        s = gctx.groups.shape[1]
+        flat = gctx.groups[gidx].reshape(-1)
+        rois = gctx.resolve_group_rois(node.roi, gidx)
+        inter, union = _device_group_counts(
+            self._masks, jnp.asarray(flat), jnp.asarray(rois, jnp.int32),
+            jnp.asarray(node.thresh, self._masks.dtype), s=int(s))
+        counts = inter if node.agg == "intersect" else union
+        return np.asarray(counts, np.float64)
+
+    def fused_counts(self, store, positions, specs):
+        rois_q, lvs, uvs = spec_arrays(specs)
+        return np.asarray(_device_multi_counts(
+            self._masks, jnp.asarray(np.asarray(positions)),
+            jnp.asarray(rois_q), jnp.asarray(lvs), jnp.asarray(uvs)))
+
+
+# ---------------------------------------------------------------------------
+# Mesh — distributed.py's step functions over shard_map
+# ---------------------------------------------------------------------------
+
+
+class MeshBackend(_KthValueMixin, ExecBackend):
+    """The query engine sharded over a device mesh: every physical
+    primitive is one of :mod:`.distributed`'s step functions, rows sharded
+    over the flattened mesh.  Candidate sets are padded to a device-count
+    multiple (padded rows carry −inf/False sentinels and are sliced off)."""
+
+    name = "mesh"
+
+    def __init__(self, store, mesh=None):
+        self.store = store
+        self.cfg = store.cfg
+        if mesh is None:
+            mesh = make_mesh((len(jax.devices()),), ("data",))
+        self.mesh = mesh
+        self.n_dev = int(mesh.devices.size)
+        self._masks = store.resident_masks()
+        self._tables_np = np.asarray(store.chi_table)
+        self._rb = jnp.asarray(self.cfg.row_bounds, jnp.int32)
+        self._cb = jnp.asarray(self.cfg.col_bounds, jnp.int32)
+        self._bounds_step = make_chi_bounds_step(mesh)
+        self._verify_step = make_verify_step(mesh)
+        self._agg_step = make_mask_agg_step(mesh)
+        self._multi_step = make_cp_multi_step(mesh)
+        self._select_steps: dict = {}
+
+    def _pad(self, arr, fill=0):
+        """Pad the leading dim to a positive device-count multiple."""
+        n = len(arr)
+        r = (-n) % self.n_dev if n else self.n_dev
+        if r == 0:
+            return arr, n
+        pad = np.full((r,) + arr.shape[1:], fill, arr.dtype)
+        return np.concatenate([arr, pad]), n
+
+    def bounds(self, ctx, expr):
+        return ctx.bounds(expr, cp_leaf=self._cp_bounds)
+
+    def _cp_bounds(self, mctx, node):
+        pos = np.asarray(mctx.positions)
+        rois = mctx.resolve_rois(node.roi, pos).astype(np.int32)
+        tab_p, n = self._pad(self._tables_np[pos])
+        rois_p, _ = self._pad(rois)
+        ks = value_ks(self.cfg, node.lv, node.uv)
+        lb, ub = self._bounds_step(tab_p, rois_p, self._rb, self._cb,
+                                   jnp.asarray(ks))
+        return (np.asarray(lb)[:n].astype(np.float64),
+                np.asarray(ub)[:n].astype(np.float64))
+
+    def verify_counts(self, ctx, batch, terms):
+        terms = list(terms)
+        pos = ctx.positions[batch]
+        masks_p, n = self._pad(self._masks[pos])
+        if len(terms) == 1:
+            # single descriptor → the plain sharded verify step
+            t = terms[0]
+            rois_p, _ = self._pad(
+                ctx.resolve_rois(t.roi, pos).astype(np.int32))
+            counts = self._verify_step(masks_p, rois_p,
+                                       jnp.float32(t.lv),
+                                       jnp.float32(min(t.uv, _F32_MAX)))
+            return {t: np.asarray(counts)[:n].astype(np.float64)}
+        # several distinct terms (predicate + ranking) → one fused pass
+        # over the sharded batch, exactly like the scheduler's route
+        rois_q, lvs, uvs = spec_arrays(
+            [(self._pad(ctx.resolve_rois(t.roi, pos).astype(np.int32))[0],
+              t.lv, t.uv) for t in terms])
+        counts = np.asarray(self._multi_step(masks_p, rois_q, lvs, uvs))
+        return {t: counts[i, :n].astype(np.float64)
+                for i, t in enumerate(terms)}
+
+    def topk_candidates(self, lb, ub, k, desc, definite, possible):
+        if k <= 0 or int(np.count_nonzero(definite)) < k:
+            return possible.copy()
+        pes32 = (lb if desc else -ub).astype(np.float32)
+        pes_p, n = self._pad(pes32, fill=np.float32(-np.inf))
+        def_p, _ = self._pad(np.asarray(definite, bool), fill=False)
+        step = self._select_steps.get(k)
+        if step is None:
+            step = self._select_steps[k] = make_topk_select_step(self.mesh, k)
+        ids = np.arange(len(pes_p), dtype=np.int32)
+        tau_idx = int(step(pes_p, def_p, ids))
+        return self._alive_from_index(lb, ub, k, desc, definite, possible,
+                                      pes32, tau_idx)
+
+    def mask_agg_counts(self, gctx, node, gidx):
+        gidx = np.asarray(gidx)
+        s = gctx.groups.shape[1]
+        grp = self._masks[gctx.groups[gidx].reshape(-1)]
+        grp = grp.reshape(len(gidx), s, self.cfg.height, self.cfg.width)
+        rois = gctx.resolve_group_rois(node.roi, gidx).astype(np.int32)
+        grp_p, n = self._pad(grp)
+        rois_p, _ = self._pad(rois)
+        inter, union = self._agg_step(grp_p, rois_p,
+                                      jnp.asarray(node.thresh, grp.dtype))
+        counts = inter if node.agg == "intersect" else union
+        return np.asarray(counts)[:n].astype(np.float64)
+
+    def fused_counts(self, store, positions, specs):
+        masks_p, n = self._pad(self._masks[np.asarray(positions)])
+        rois_q, lvs, uvs = spec_arrays(
+            [(self._pad(np.asarray(sp[0], np.int32))[0], sp[1], sp[2])
+             for sp in specs])
+        counts = self._multi_step(masks_p, rois_q, lvs, uvs)
+        return np.asarray(counts)[:, :n]
+
+
+# ---------------------------------------------------------------------------
+# Resolution
+# ---------------------------------------------------------------------------
+
+_HOST = HostBackend()
+_NAMED = {"device": DeviceBackend, "mesh": MeshBackend}
+
+
+def host_backend() -> HostBackend:
+    """The stateless host backend singleton (the default everywhere)."""
+    return _HOST
+
+
+def get_backend(store, backend=None) -> ExecBackend:
+    """Resolve a backend spec against a store.
+
+    ``backend`` is ``None``/``"host"`` (default), a backend *name*
+    (``"device"``/``"mesh"`` — instances are cached per store, so the
+    resident mask/CHI upload happens once), or an :class:`ExecBackend`
+    instance (e.g. a :class:`MeshBackend` built over an explicit mesh).
+    """
+    if backend is None or backend == "host":
+        return _HOST
+    if isinstance(backend, ExecBackend):
+        return backend
+    cls = _NAMED.get(backend)
+    if cls is None:
+        raise ValueError(f"unknown backend {backend!r}; expected one of "
+                         f"{['host'] + sorted(_NAMED)} or an ExecBackend")
+    cache = store._backend_cache
+    if backend not in cache:
+        cache[backend] = cls(store)
+    return cache[backend]
+
+
+__all__ = ["ExecBackend", "HostBackend", "DeviceBackend", "MeshBackend",
+           "F32_MAX", "get_backend", "host_backend", "spec_arrays"]

@@ -18,6 +18,15 @@ lowers for the "masksearch" cells:
   * ``iou_agg_step``       — fused thresholded intersection/union counts for
     group (MASK_AGG) queries.
 
+Since the backend refactor these step functions are no longer a parallel
+universe: :class:`repro.core.backend.MeshBackend` drives them from the
+public query path (``run_plan(plan, backend="mesh")``) — the bounds step is
+the CP leaf of every mesh bounds pass, ``verify_step`` answers verification
+batches, ``topk_select_step`` is the ranking frontier's collective, and
+``mask_agg_step`` serves MASK_AGG group verification.  The original
+fused-verdict steps (``filter_bounds_step``/``topk_step``/``iou_agg_step``)
+remain for the dry-run's lowered cells and the multi-device tests.
+
 Device placement convention: rows are sharded over the flattened mesh
 (``("pod","data","model")`` or ``("data","model")``); nothing is replicated
 except the query descriptor scalars.
@@ -36,6 +45,25 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..kernels import ops as kops
 from . import chi as chi_lib
 from . import cp as cp_lib
+
+# shard_map moved out of jax.experimental (and check_rep became check_vma)
+# across the jax versions this repo supports; resolve once here.
+if hasattr(jax, "shard_map"):
+    _shard_map = jax.shard_map
+    _SHARD_MAP_KW = {"check_vma": False}
+else:                                      # pragma: no cover - older jax
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _SHARD_MAP_KW = {"check_rep": False}
+
+
+def make_mesh(shape: Sequence[int], axes: Sequence[str]) -> Mesh:
+    """Version-portable ``jax.make_mesh`` (``axis_types`` where supported)."""
+    try:
+        return jax.make_mesh(
+            tuple(shape), tuple(axes),
+            axis_types=(jax.sharding.AxisType.Auto,) * len(axes))
+    except (TypeError, AttributeError):
+        return jax.make_mesh(tuple(shape), tuple(axes))
 
 
 def db_axes(mesh: Mesh) -> tuple[str, ...]:
@@ -185,14 +213,132 @@ def make_topk_step(mesh: Mesh, k: int, desc: bool = True):
         survivors = score_opt >= tau
         return gathered_opt, gathered_ids, tau, survivors
 
-    mapped = jax.shard_map(
+    mapped = _shard_map(
         local, mesh=mesh,
         in_specs=(P(axes, None, None, None), P(axes, None), P(), P(), P(),
                   P(axes)),
         out_specs=(P(), P(), P(), P(axes)),
-        check_vma=False,
+        **_SHARD_MAP_KW,
     )
     return jax.jit(mapped), n_dev * k
+
+
+def value_ks(cfg: chi_lib.CHIConfig, lv: float, uv: float) -> np.ndarray:
+    """Resolve a value range onto CHI bin edges as the 4-vector
+    ``[kl_in, ku_in, kl_out, ku_out]`` (inner/outer threshold-prefix
+    indices) — the host-side half of a device bounds pass.  Matches
+    :func:`repro.core.chi.resolve_query`'s value resolution exactly."""
+    edges = cfg.edges
+    kl_in = np.searchsorted(edges, lv, side="left")
+    ku_in = np.searchsorted(edges, uv, side="right") - 1
+    kl_out = np.searchsorted(edges, lv, side="right") - 1
+    ku_out = np.searchsorted(edges, uv, side="left")
+    return np.clip(np.array([kl_in, ku_in, kl_out, ku_out], dtype=np.int32),
+                   0, cfg.num_bins)
+
+
+def make_chi_bounds_step(mesh: Mesh):
+    """The CP-leaf bounds pass, sharded: CHI tables in, (lb, ub) out.
+
+    Collective-free (each row's 8-corner gather is local); this is what the
+    mesh backend runs once per distinct CP term of a plan — the generic
+    analogue of ``filter_bounds_step``, which additionally folds in one
+    comparison verdict.
+
+    Signature: (chi_tables (N,G+1,G+1,NB+1), rois (N,4), row_bounds,
+                col_bounds, value_ks (4,) int32) → lb (N,), ub (N,) int32.
+    """
+    axes = db_axes(mesh)
+
+    def step(tables, rois, row_bounds, col_bounds, ks):
+        corners, area = device_resolve(rois, row_bounds, col_bounds)
+        return _bounds_from_corners(tables, corners, area,
+                                    ks[0], ks[1], ks[2], ks[3])
+
+    row = NamedSharding(mesh, P(axes))
+    rep = replicated(mesh)
+    return jax.jit(
+        step,
+        in_shardings=(NamedSharding(mesh, P(axes, None, None, None)),
+                      NamedSharding(mesh, P(axes, None)), rep, rep, rep),
+        out_shardings=(row, row),
+    )
+
+
+def make_topk_select_step(mesh: Mesh, k: int):
+    """Distributed selection of the global k-th best pessimistic score.
+
+    The collective at the heart of ``topk_step``, but over *precomputed*
+    bounds scores instead of re-deriving them from CHI tables — so any
+    ranking expression the plan IR can express (ratios, sums of CPs)
+    shards.  Per device: mask non-definite rows to −inf, local top-k, one
+    ``all_gather`` of (value, row-id) pairs, global top-k.  Returns the
+    *row id* of the k-th best so the caller can read the threshold τ back
+    at full host precision rather than float32.
+
+    Signature: (pes (N,) f32, definite (N,) bool, base_ids (N,) int32)
+      → () int32 row id of the global k-th best definite pessimistic score.
+    """
+    axes = db_axes(mesh)
+
+    def local(pes, definite, base_ids):
+        masked = jnp.where(definite, pes, -jnp.inf)
+        kk = min(k, masked.shape[0])
+        vals, idx = jax.lax.top_k(masked, kk)
+        g_vals = jax.lax.all_gather(vals, axes, tiled=True)
+        g_ids = jax.lax.all_gather(base_ids[idx], axes, tiled=True)
+        order = jax.lax.top_k(g_vals, k)[1]
+        return g_ids[order[k - 1]]
+
+    mapped = _shard_map(local, mesh=mesh,
+                        in_specs=(P(axes), P(axes), P(axes)),
+                        out_specs=P(), **_SHARD_MAP_KW)
+    return jax.jit(mapped)
+
+
+def make_mask_agg_step(mesh: Mesh):
+    """Fused thresholded intersection/union *counts* for MASK_AGG group
+    verification, group rows sharded over all devices (the counts-level
+    sibling of ``iou_agg_step``; on TPU dispatches to the Pallas
+    ``mask_agg`` kernel).
+
+    Signature: (group_masks (G,S,H,W), rois (G,4), thresh ())
+      → (inter (G,), union (G,)) int32.
+    """
+    axes = db_axes(mesh)
+
+    def step(group_masks, rois, thresh):
+        return kops.mask_agg_counts(group_masks, rois, thresh)
+
+    row = NamedSharding(mesh, P(axes))
+    return jax.jit(
+        step,
+        in_shardings=(NamedSharding(mesh, P(axes, None, None, None)),
+                      NamedSharding(mesh, P(axes, None)), replicated(mesh)),
+        out_shardings=(row, row),
+    )
+
+
+def make_cp_multi_step(mesh: Mesh):
+    """Fused multi-descriptor CP over one sharded mask batch — the service
+    scheduler's cross-query verification pass on the mesh (Q descriptors
+    answered from one pass over the sharded bytes).
+
+    Signature: (masks (B,H,W), rois (Q,B,4), lvs (Q,), uvs (Q,))
+      → counts (Q,B) int32.
+    """
+    axes = db_axes(mesh)
+
+    def step(masks, rois, lvs, uvs):
+        return kops.cp_count_multi(masks, rois, lvs, uvs)
+
+    return jax.jit(
+        step,
+        in_shardings=(NamedSharding(mesh, P(axes, None, None)),
+                      NamedSharding(mesh, P(None, axes, None)),
+                      replicated(mesh), replicated(mesh)),
+        out_shardings=NamedSharding(mesh, P(None, axes)),
+    )
 
 
 def make_iou_agg_step(mesh: Mesh):
@@ -239,12 +385,7 @@ class DistributedEngine:
         self._topk_steps: dict[tuple, object] = {}
 
     def _value_ks(self, lv: float, uv: float) -> np.ndarray:
-        edges = self.cfg.edges
-        kl_in = np.searchsorted(edges, lv, side="left")
-        ku_in = np.searchsorted(edges, uv, side="right") - 1
-        kl_out = np.searchsorted(edges, lv, side="right") - 1
-        ku_out = np.searchsorted(edges, uv, side="left")
-        return np.array([kl_in, ku_in, kl_out, ku_out], dtype=np.int32)
+        return value_ks(self.cfg, lv, uv)
 
     def filter_bounds(self, tables, rois, lv, uv, op, threshold):
         if op not in self._filter_steps:

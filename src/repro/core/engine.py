@@ -21,7 +21,11 @@ Physical execution is uniform: every run object — :class:`FilterRun`,
 :class:`MinMaxAggRun` — presents ``target / take_batch / apply_exact /
 finished / result`` (DESIGN.md §6), so sessions resume any of them and the
 service scheduler fuses their verification batches without knowing which
-operator it is driving.
+operator it is driving.  The runs themselves are backend-agnostic drivers:
+every physical operation (bounds, exact counts, the ranking frontier,
+MASK_AGG counts) goes through an :class:`repro.core.backend.ExecBackend`
+— host NumPy, single-device resident HBM, or the ``shard_map`` mesh —
+selected per run (DESIGN.md §7).
 
 All runs expose :class:`ExecStats` telling exactly how much I/O the index
 avoided — the quantity behind the paper's 100× claim.
@@ -35,6 +39,7 @@ from typing import Optional
 
 import numpy as np
 
+from .backend import get_backend
 from .exprs import (Cmp, CP, GroupEvalContext, MaskEvalContext, Node, Pred,
                     eval_with_counts, is_group_expr)
 
@@ -45,6 +50,8 @@ class ExecStats:
     n_decided_by_bounds: int = 0      # accepted or pruned without loading
     n_verified: int = 0               # masks actually loaded + scanned
     n_rounds: int = 0                 # top-k verification rounds
+    n_dropped_masks: int = 0          # ragged-group members excluded from
+                                      # GROUP BY (see _make_context)
     bytes_loaded: int = 0
     bound_time_s: float = 0.0
     verify_time_s: float = 0.0
@@ -55,8 +62,15 @@ class ExecStats:
 
 
 def _make_context(store, grouped: bool, positions, mask_types, provided_rois,
-                  partial_rows: bool = True):
-    """Build the evaluation context + the id array that results refer to."""
+                  partial_rows: bool = True, backend=None):
+    """Build the evaluation context + the id array that results refer to.
+
+    Returns ``(ctx, ids, n_dropped)`` — ``n_dropped`` counts masks excluded
+    from ragged image groups (grouped evaluation needs one rectangular
+    ``(n_groups, size)`` block, so images with more masks than the smallest
+    group keep only their first ``size``; the caller surfaces the count in
+    ``ExecStats.n_dropped_masks`` instead of losing it silently).
+    """
     if grouped:
         sel = (store.select(mask_type=mask_types) if mask_types is not None
                else np.arange(len(store)))
@@ -67,22 +81,31 @@ def _make_context(store, grouped: bool, positions, mask_types, provided_rois,
         sel, img = sel[order], img[order]
         uniq, starts, counts = np.unique(img, return_index=True,
                                          return_counts=True)
-        size = counts.min()
-        if counts.max() != size:
-            # ragged groups: keep the first `size` per image (deterministic)
-            keep = np.concatenate(
-                [sel[s:s + size] for s in starts])
-            groups = keep.reshape(-1, size)
+        n_dropped = 0
+        if len(counts):
+            size = counts.min()
+            if counts.max() != size:
+                # ragged groups: keep the first `size` per image
+                # (deterministic); the rest are *dropped from evaluation*
+                # and accounted in ExecStats.n_dropped_masks.
+                n_dropped = int(counts.sum() - size * len(counts))
+                keep = np.concatenate(
+                    [sel[s:s + size] for s in starts])
+                groups = keep.reshape(-1, size)
+            else:
+                groups = sel.reshape(-1, size)
         else:
-            groups = sel.reshape(-1, size)
+            groups = sel.reshape(0, 1)
         ctx = GroupEvalContext(store, groups, uniq, provided_rois)
-        return ctx, uniq
+        ctx.backend = backend
+        return ctx, uniq, n_dropped
     if positions is None:
         positions = (store.select(mask_type=mask_types)
                      if mask_types is not None else np.arange(len(store)))
     ctx = MaskEvalContext(store, positions, provided_rois,
                           partial_rows=partial_rows)
-    return ctx, store.meta["mask_id"][positions]
+    ctx.backend = backend
+    return ctx, store.meta["mask_id"][positions], 0
 
 
 def _grouped_for(exprs, group_by_image: bool) -> bool:
@@ -113,19 +136,22 @@ class _VerifyRun:
                  positions: Optional[np.ndarray] = None, mask_types=None,
                  group_by_image: bool = False,
                  provided_rois: Optional[np.ndarray] = None,
-                 verify_batch: int = 256, bounds_hook=None):
+                 verify_batch: int = 256, bounds_hook=None, backend=None):
         self.store = store
         self.exprs = tuple(exprs)
         self.verify_batch = max(int(verify_batch), 1)
+        self.backend = get_backend(store, backend)
         grouped = _grouped_for(self.exprs, group_by_image)
-        self.ctx, self.ids = _make_context(store, grouped, positions,
-                                           mask_types, provided_rois)
+        self.ctx, self.ids, n_dropped = _make_context(
+            store, grouped, positions, mask_types, provided_rois,
+            backend=self.backend)
         if (isinstance(self.ctx, MaskEvalContext) and
                 len({t for e in self.exprs for t in e.cp_terms()}) > 1):
             # ROI-row partial loads only pay off for a single distinct CP
             # term; a multi-term run shares one full-mask load instead.
             self.ctx.partial_rows = False
-        self.stats = ExecStats(n_candidates=len(self.ids))
+        self.stats = ExecStats(n_candidates=len(self.ids),
+                               n_dropped_masks=n_dropped)
         self._bounds_hook = bounds_hook
         self._bounds_memo: dict = {}
         self.pending = np.empty(0, dtype=np.int64)
@@ -146,7 +172,7 @@ class _VerifyRun:
         if cached is not None:
             lb, ub = cached
         else:
-            lb, ub = self.ctx.bounds(expr)
+            lb, ub = self.backend.bounds(self.ctx, expr)
             lb = np.asarray(lb, np.float64)
             ub = np.asarray(ub, np.float64)
             if self._bounds_hook is not None:
@@ -177,14 +203,15 @@ class _VerifyRun:
 
     def _self_counts(self, batch: np.ndarray):
         """Per-CP-term exact counts for ``batch``, evaluated **once per
-        distinct term** (a predicate and a ranking sharing an expression
-        share its loads/kernel rows even in self-verification), or None when
-        the run isn't a pure per-mask CP evaluation."""
+        distinct term** by the run's backend (a predicate and a ranking
+        sharing an expression share its loads/kernel rows even in
+        self-verification), or None when the run isn't a pure per-mask CP
+        evaluation."""
         if not isinstance(self.ctx, MaskEvalContext):
             return None
         terms = set(self.cp_terms())
         if terms and all(isinstance(t, CP) for t in terms):
-            return {t: self.ctx.exact(t, batch) for t in terms}
+            return self.backend.verify_counts(self.ctx, batch, terms)
         return None
 
     def fused_values(self, batch: np.ndarray, counts: dict):
@@ -246,7 +273,8 @@ class FilterRun(_VerifyRun):
                  positions: Optional[np.ndarray] = None, mask_types=None,
                  group_by_image: bool = False,
                  provided_rois: Optional[np.ndarray] = None,
-                 verify_batch: int = 256, bounds=None, bounds_hook=None):
+                 verify_batch: int = 256, bounds=None, bounds_hook=None,
+                 backend=None):
         self.pred = _as_pred(expr_or_pred, op, threshold)
         # legacy surface for single-comparison plans
         if isinstance(self.pred, Cmp):
@@ -258,7 +286,8 @@ class FilterRun(_VerifyRun):
         super().__init__(store, self.pred.value_exprs(), positions=positions,
                          mask_types=mask_types, group_by_image=group_by_image,
                          provided_rois=provided_rois,
-                         verify_batch=verify_batch, bounds_hook=bounds_hook)
+                         verify_batch=verify_batch, bounds_hook=bounds_hook,
+                         backend=backend)
         if bounds is not None and self.expr is not None:
             self._bounds_memo[self.expr] = tuple(
                 np.asarray(b, np.float64) for b in bounds)
@@ -291,7 +320,7 @@ def filter_query(store, expr_or_pred, op: Optional[str] = None,
                  positions: Optional[np.ndarray] = None,
                  mask_types=None, group_by_image: bool = False,
                  provided_rois: Optional[np.ndarray] = None,
-                 use_index: bool = True, bounds=None):
+                 use_index: bool = True, bounds=None, backend=None):
     """``SELECT {mask_id|image_id} WHERE predicate``.
 
     The predicate is either a :class:`repro.core.exprs.Pred` tree or the
@@ -303,10 +332,11 @@ def filter_query(store, expr_or_pred, op: Optional[str] = None,
     pred = _as_pred(expr_or_pred, op, threshold)
     if not use_index:
         grouped = _grouped_for(pred.value_exprs(), group_by_image)
-        ctx, ids = _make_context(store, grouped, positions, mask_types,
-                                 provided_rois, partial_rows=False)
+        ctx, ids, n_dropped = _make_context(store, grouped, positions,
+                                            mask_types, provided_rois,
+                                            partial_rows=False)
         n = len(ids)
-        stats = ExecStats(n_candidates=n)
+        stats = ExecStats(n_candidates=n, n_dropped_masks=n_dropped)
         io_before = store.io.bytes_read
         t0 = time.perf_counter()
         keep = pred.exact(ctx, np.arange(n))
@@ -318,7 +348,8 @@ def filter_query(store, expr_or_pred, op: Optional[str] = None,
     run = FilterRun(store, pred, positions=positions,
                     mask_types=mask_types, group_by_image=group_by_image,
                     provided_rois=provided_rois,
-                    verify_batch=max(len(store), 1), bounds=bounds)
+                    verify_batch=max(len(store), 1), bounds=bounds,
+                    backend=backend)
     run.ensure()
     return run.result(), run.stats
 
@@ -350,14 +381,15 @@ class TopKRun(_VerifyRun):
                  group_by_image: bool = False,
                  provided_rois: Optional[np.ndarray] = None,
                  verify_batch: int = 256, bounds=None, bounds_hook=None,
-                 _pred_exprs=()):
+                 backend=None, _pred_exprs=()):
         self.desc = desc
         self.expr = expr
         super().__init__(store, list(_pred_exprs) + [expr],
                          positions=positions,
                          mask_types=mask_types, group_by_image=group_by_image,
                          provided_rois=provided_rois,
-                         verify_batch=verify_batch, bounds_hook=bounds_hook)
+                         verify_batch=verify_batch, bounds_hook=bounds_hook,
+                         backend=backend)
         if bounds is not None:
             self._bounds_memo[expr] = tuple(
                 np.asarray(b, np.float64) for b in bounds)
@@ -401,22 +433,12 @@ class TopKRun(_VerifyRun):
         # bound beats the k-th best pessimistic bound among candidates that
         # *definitely* qualify — so no possibly-qualifying candidate is
         # pruned on an assumption about another's unverified predicate.
+        # The frontier selection itself is a backend primitive (host
+        # np.partition; device/mesh lax.top_k + all_gather).
         possible = ~self.p_false
-        if self.desc:
-            definite = self.lb[self.p_true]
-            if len(definite) >= k:
-                tau = np.partition(definite, -k)[-k]
-                self.alive = possible & (self.ub >= tau)
-            else:
-                self.alive = possible
-        else:
-            # pessimistic for ASC is the *upper* bound
-            definite = self.ub[self.p_true]
-            if len(definite) >= k:
-                tau = np.partition(definite, k - 1)[k - 1]
-                self.alive = possible & (self.lb <= tau)
-            else:
-                self.alive = possible
+        self.alive = self.backend.topk_candidates(self.lb, self.ub, k,
+                                                  self.desc, self.p_true,
+                                                  possible)
         self.stats.n_decided_by_bounds = int(
             n - np.count_nonzero(self.alive & ~self._resolved0))
         pending = np.nonzero(self.alive & ~self._resolved())[0]
@@ -445,6 +467,9 @@ class TopKRun(_VerifyRun):
         return self.cursor >= len(self.pending)
 
     def exact_values(self, batch):
+        counts = self._self_counts(batch)
+        if counts is not None:
+            return self.fused_values(batch, counts)
         return self.ctx.exact(self.expr, batch)
 
     def fused_values(self, batch, counts):
@@ -472,15 +497,15 @@ def topk_query(store, expr: Node, k: int, *, desc: bool = True,
                mask_types=None, group_by_image: bool = False,
                provided_rois: Optional[np.ndarray] = None,
                use_index: bool = True, verify_batch: int = 256,
-               bounds=None):
+               bounds=None, backend=None):
     """``SELECT ... ORDER BY expr {DESC|ASC} LIMIT k`` → (ids, scores, stats)."""
     if not use_index:
         grouped = _grouped_for([expr], group_by_image)
-        ctx, ids = _make_context(store, grouped, positions, mask_types,
-                                 provided_rois)
+        ctx, ids, n_dropped = _make_context(store, grouped, positions,
+                                            mask_types, provided_rois)
         n = len(ids)
         k = min(k, n)
-        stats = ExecStats(n_candidates=n)
+        stats = ExecStats(n_candidates=n, n_dropped_masks=n_dropped)
         io_before = store.io.bytes_read
         t0 = time.perf_counter()
         exact = ctx.exact(expr, np.arange(n))
@@ -493,7 +518,7 @@ def topk_query(store, expr: Node, k: int, *, desc: bool = True,
     run = TopKRun(store, expr, desc=desc, positions=positions,
                   mask_types=mask_types, group_by_image=group_by_image,
                   provided_rois=provided_rois, verify_batch=verify_batch,
-                  bounds=bounds)
+                  bounds=bounds, backend=backend)
     run.ensure(k)
     ids, scores = run.result()
     return ids, scores, run.stats
@@ -540,13 +565,13 @@ class FilteredTopKRun(TopKRun):
                  positions: Optional[np.ndarray] = None, mask_types=None,
                  group_by_image: bool = False,
                  provided_rois: Optional[np.ndarray] = None,
-                 verify_batch: int = 256, bounds_hook=None):
+                 verify_batch: int = 256, bounds_hook=None, backend=None):
         self.pred = pred
         super().__init__(store, expr, desc=desc, positions=positions,
                          mask_types=mask_types, group_by_image=group_by_image,
                          provided_rois=provided_rois,
                          verify_batch=verify_batch, bounds_hook=bounds_hook,
-                         _pred_exprs=pred.value_exprs())
+                         backend=backend, _pred_exprs=pred.value_exprs())
 
     def _init_qualification(self) -> None:
         accept, reject = self.pred.decide(self.expr_bounds, self.ctx)
@@ -580,15 +605,17 @@ def filtered_topk_query(store, pred: Pred, expr: Node, k: int, *,
                         positions: Optional[np.ndarray] = None,
                         mask_types=None, group_by_image: bool = False,
                         provided_rois: Optional[np.ndarray] = None,
-                        use_index: bool = True, verify_batch: int = 256):
+                        use_index: bool = True, verify_batch: int = 256,
+                        backend=None):
     """``WHERE predicate ORDER BY expr LIMIT k`` → (ids, scores, stats)."""
     if not use_index:
         grouped = _grouped_for(list(pred.value_exprs()) + [expr],
                                group_by_image)
-        ctx, ids = _make_context(store, grouped, positions, mask_types,
-                                 provided_rois, partial_rows=False)
+        ctx, ids, n_dropped = _make_context(store, grouped, positions,
+                                            mask_types, provided_rois,
+                                            partial_rows=False)
         n = len(ids)
-        stats = ExecStats(n_candidates=n)
+        stats = ExecStats(n_candidates=n, n_dropped_masks=n_dropped)
         io_before = store.io.bytes_read
         t0 = time.perf_counter()
         keep = np.nonzero(pred.exact(ctx, np.arange(n)))[0]
@@ -602,7 +629,7 @@ def filtered_topk_query(store, pred: Pred, expr: Node, k: int, *,
     run = FilteredTopKRun(store, pred, expr, desc=desc, positions=positions,
                           mask_types=mask_types, group_by_image=group_by_image,
                           provided_rois=provided_rois,
-                          verify_batch=verify_batch)
+                          verify_batch=verify_batch, backend=backend)
     run.ensure(k)
     ids, scores = run.result()
     return ids, scores, run.stats
@@ -621,7 +648,7 @@ class ScalarAggRun(_VerifyRun):
                  positions: Optional[np.ndarray] = None, mask_types=None,
                  group_by_image: bool = False,
                  provided_rois: Optional[np.ndarray] = None,
-                 verify_batch: int = 256, bounds_hook=None):
+                 verify_batch: int = 256, bounds_hook=None, backend=None):
         agg = agg.upper()
         if agg not in ("SUM", "AVG"):
             raise ValueError(f"ScalarAggRun handles SUM/AVG, got {agg!r}")
@@ -630,7 +657,8 @@ class ScalarAggRun(_VerifyRun):
         super().__init__(store, [expr], positions=positions,
                          mask_types=mask_types, group_by_image=group_by_image,
                          provided_rois=provided_rois,
-                         verify_batch=verify_batch, bounds_hook=bounds_hook)
+                         verify_batch=verify_batch, bounds_hook=bounds_hook,
+                         backend=backend)
         lb, ub = self.expr_bounds(expr)
         self.values = lb.astype(np.float64)   # astype copies; safe to mutate
         self.pending = np.nonzero(lb != ub)[0]
@@ -640,6 +668,9 @@ class ScalarAggRun(_VerifyRun):
         return self.cursor >= len(self.pending)
 
     def exact_values(self, batch):
+        counts = self._self_counts(batch)
+        if counts is not None:
+            return self.fused_values(batch, counts)
         return self.ctx.exact(self.expr, batch)
 
     def fused_values(self, batch, counts):
@@ -678,7 +709,7 @@ class MinMaxAggRun(TopKRun):
 def scalar_agg(store, expr: Node, agg: str, *,
                positions: Optional[np.ndarray] = None, mask_types=None,
                provided_rois: Optional[np.ndarray] = None,
-               use_index: bool = True):
+               use_index: bool = True, backend=None):
     """``SELECT SCALAR_AGG(expr)`` with agg ∈ {SUM, AVG, MIN, MAX}.
 
     MIN/MAX reuse the top-k pruning machinery (k=1).  SUM/AVG verify only
@@ -697,10 +728,11 @@ def scalar_agg(store, expr: Node, agg: str, *,
             value = float(scores[0]) if len(scores) else float("nan")
             return value, stats
         grouped = _grouped_for([expr], False)
-        ctx, ids = _make_context(store, grouped, positions, mask_types,
-                                 provided_rois, partial_rows=False)
+        ctx, ids, n_dropped = _make_context(store, grouped, positions,
+                                            mask_types, provided_rois,
+                                            partial_rows=False)
         n = len(ids)
-        stats = ExecStats(n_candidates=n)
+        stats = ExecStats(n_candidates=n, n_dropped_masks=n_dropped)
         io_before = store.io.bytes_read
         exact = ctx.exact(expr, np.arange(n)) if n else np.empty(0)
         stats.n_verified = n
@@ -712,9 +744,9 @@ def scalar_agg(store, expr: Node, agg: str, *,
         return value, stats
 
     if agg in ("MIN", "MAX"):
-        run = MinMaxAggRun(store, expr, agg, **common)
+        run = MinMaxAggRun(store, expr, agg, backend=backend, **common)
     else:
-        run = ScalarAggRun(store, expr, agg,
+        run = ScalarAggRun(store, expr, agg, backend=backend,
                            verify_batch=max(len(store), 1), **common)
     run.ensure()
     return run.result(), run.stats

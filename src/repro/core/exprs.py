@@ -389,6 +389,9 @@ class MaskEvalContext:
         self.positions = np.asarray(positions, dtype=np.int64)
         self.provided_rois = provided_rois
         self.partial_rows = partial_rows
+        # Optional ExecBackend (core/backend.py) routing physical leaves;
+        # None → the host paths below (set by engine._make_context).
+        self.backend = None
         self._loaded: Optional[np.ndarray] = None  # aligned with positions
         self._rows: list = []
         self._rows_used = 0
@@ -419,8 +422,13 @@ class MaskEvalContext:
                 len(node.cp_terms()) <= 1)
 
     # bounds -----------------------------------------------------------------
-    def bounds(self, node: Node):
-        """(lb, ub) float64 arrays over all candidate positions."""
+    def bounds(self, node: Node, cp_leaf=None):
+        """(lb, ub) float64 arrays over all candidate positions.
+
+        ``cp_leaf(ctx, cp_node) -> (lb, ub)`` optionally overrides the
+        CP-leaf bounds primitive (an execution backend's device/mesh CHI
+        pass); the interval arithmetic over the tree stays shared, so every
+        backend prunes with identical semantics."""
         n = len(self.positions)
         if isinstance(node, Const):
             v = np.full(n, node.value)
@@ -430,15 +438,21 @@ class MaskEvalContext:
             a = cp_lib.roi_area(rois).astype(np.float64)
             return a.copy(), a.copy()
         if isinstance(node, CP):
-            rois = _as_rois(node.roi, self.positions, self.provided_rois, self.cfg)
-            table = self.store.chi_table[jnp.asarray(self.positions)]
-            lb, ub = chi_lib.chi_bounds(table, self.cfg, rois, node.lv, node.uv)
-            return np.asarray(lb, np.float64), np.asarray(ub, np.float64)
+            if cp_leaf is not None:
+                return cp_leaf(self, node)
+            return self._chi_cp_bounds(node)
         if isinstance(node, BinOp):
-            llb, lub = self.bounds(node.left)
-            rlb, rub = self.bounds(node.right)
+            llb, lub = self.bounds(node.left, cp_leaf)
+            rlb, rub = self.bounds(node.right, cp_leaf)
             return _interval_binop(node.op, llb, lub, rlb, rub)
         raise TypeError(f"node {node} not valid in a per-mask expression")
+
+    def _chi_cp_bounds(self, node: CP):
+        """Host CP-leaf bounds: CHI gather over the store's index."""
+        rois = _as_rois(node.roi, self.positions, self.provided_rois, self.cfg)
+        table = self.store.chi_table[jnp.asarray(self.positions)]
+        lb, ub = chi_lib.chi_bounds(table, self.cfg, rois, node.lv, node.uv)
+        return np.asarray(lb, np.float64), np.asarray(ub, np.float64)
 
     # exact ------------------------------------------------------------------
     def exact(self, node: Node, idx: np.ndarray) -> np.ndarray:
@@ -532,11 +546,19 @@ class GroupEvalContext:
         self.image_ids = np.asarray(image_ids)
         self.provided_rois = provided_rois
         self._ctx = MaskEvalContext(store, self.groups.reshape(-1), provided_rois)
+        # Optional ExecBackend routing MASK_AGG verification (None → host).
+        self.backend = None
 
-    def _member_bounds(self, node: AggCP):
+    def resolve_group_rois(self, roi, gidx: np.ndarray) -> np.ndarray:
+        """Per-group ROI resolution (one ROI per image group — members
+        share it), for backends building fused mask_agg kernel rows."""
+        return _as_rois(roi, self.groups[np.asarray(gidx), 0],
+                        self.provided_rois, self.cfg)
+
+    def _member_bounds(self, node: AggCP, cp_leaf=None):
         """Per-member CP bounds for the thresholded mask (value > thresh)."""
         member = CP(node.roi, node.thresh, float("inf"))
-        lb, ub = self._ctx.bounds(member)
+        lb, ub = self._ctx.bounds(member, cp_leaf)
         g, s = self.groups.shape
         return lb.reshape(g, s), ub.reshape(g, s)
 
@@ -544,12 +566,12 @@ class GroupEvalContext:
         rois = _as_rois(node.roi, self.groups[:, 0], self.provided_rois, self.cfg)
         return cp_lib.roi_area(rois).astype(np.float64)
 
-    def bounds(self, node: Node):
+    def bounds(self, node: Node, cp_leaf=None):
         if isinstance(node, Const):
             v = np.full(len(self.groups), node.value)
             return v.copy(), v.copy()
         if isinstance(node, AggCP):
-            mlb, mub = self._member_bounds(node)
+            mlb, mub = self._member_bounds(node, cp_leaf)
             area = self._areas(node)
             n = self.groups.shape[1]
             if node.agg == "intersect":
@@ -562,8 +584,8 @@ class GroupEvalContext:
                 raise ValueError(f"unknown agg {node.agg}")
             return lb.astype(np.float64), ub.astype(np.float64)
         if isinstance(node, BinOp):
-            llb, lub = self.bounds(node.left)
-            rlb, rub = self.bounds(node.right)
+            llb, lub = self.bounds(node.left, cp_leaf)
+            rlb, rub = self.bounds(node.right, cp_leaf)
             return _interval_binop(node.op, llb, lub, rlb, rub)
         raise TypeError(f"node {node} not valid in a group expression")
 
@@ -571,18 +593,11 @@ class GroupEvalContext:
         if isinstance(node, Const):
             return np.full(len(gidx), node.value)
         if isinstance(node, AggCP):
-            g, s = self.groups.shape
-            flat_idx = (gidx[:, None] * s + np.arange(s)[None, :]).reshape(-1)
-            masks = self._ctx.masks_for(flat_idx)
-            masks = masks.reshape(len(gidx), s, self.cfg.height, self.cfg.width)
-            rois = _as_rois(node.roi, self.groups[gidx, 0], self.provided_rois,
-                            self.cfg)
-            # fused threshold+agg+count → Pallas mask_agg kernel on TPU
-            inter, union = kops.mask_agg_counts(
-                jnp.asarray(masks), jnp.asarray(rois),
-                jnp.asarray(node.thresh, masks.dtype))
-            counts = inter if node.agg == "intersect" else union
-            return np.asarray(counts, np.float64)
+            backend = self.backend
+            if backend is None:
+                from .backend import host_backend
+                backend = host_backend()
+            return backend.mask_agg_counts(self, node, gidx)
         if isinstance(node, BinOp):
             l = self.exact(node.left, gidx)
             r = self.exact(node.right, gidx)

@@ -201,20 +201,24 @@ def simplify_predicate(pred: Optional[Pred]):
 
 def compile_plan(store, plan: LogicalPlan, *, provided_rois=None,
                  verify_batch: int = 256, bounds_hook=None, positions=None,
-                 bounds=None):
+                 bounds=None, backend=None):
     """Lower a logical plan to its resumable physical run.
 
     ``bounds_hook`` (``get(expr)``/``put(expr, lb, ub)``) lets the caller —
     the service planner — cache per-expression CHI bounds across runs.
     ``positions`` restricts the candidate set to explicit store rows;
     ``bounds`` is the legacy precomputed ``(lb, ub)`` pair for a
-    single-expression filter/top-k plan.
+    single-expression filter/top-k plan.  ``backend`` selects the physical
+    execution layer (``None``/``"host"``, ``"device"``, ``"mesh"``, or an
+    :class:`repro.core.backend.ExecBackend` instance); every backend
+    returns identical results.
     """
     plan.validate()
     common = dict(mask_types=plan.mask_types,
                   group_by_image=plan.grouped,
                   provided_rois=provided_rois, verify_batch=verify_batch,
-                  bounds_hook=bounds_hook, positions=positions)
+                  bounds_hook=bounds_hook, positions=positions,
+                  backend=backend)
     kind = plan.kind
     if bounds is not None and not (
             kind == "topk" or
@@ -240,17 +244,22 @@ def compile_plan(store, plan: LogicalPlan, *, provided_rois=None,
 
 def run_plan(store, plan: LogicalPlan, *, provided_rois=None,
              use_index: bool = True, verify_batch: Optional[int] = None,
-             bounds_hook=None, positions=None, bounds=None):
+             bounds_hook=None, positions=None, bounds=None, backend=None):
     """One-shot execution of a logical plan → ``(payload, stats)``.
 
     Payload shapes match the legacy front-end exactly: ``filter`` → ids,
     ``topk``/``filtered_topk`` → ``(ids, scores)``, ``scalar_agg`` → float.
-    ``use_index=False`` is the full-scan baseline for every plan kind.
+    ``use_index=False`` is the full-scan baseline for every plan kind (it
+    always runs on the host — it exists to check the backends against).
 
     ``verify_batch`` defaults per kind: rankings (and MIN/MAX, which share
     their early-termination loop) verify in 256-candidate rounds; filters
     and SUM/AVG have no early exit, so a one-shot run verifies the whole
     residue in a single pass.  Resumable/service callers pick their own.
+
+    ``backend`` selects the physical layer — ``run_plan(plan,
+    backend="mesh")`` executes the same plan over the sharded step
+    functions of :mod:`repro.core.distributed`.
     """
     plan.validate()
     kind = plan.kind
@@ -262,7 +271,7 @@ def run_plan(store, plan: LogicalPlan, *, provided_rois=None,
         verify_batch = 256 if ranked else max(len(store), 1)
     run = compile_plan(store, plan, provided_rois=provided_rois,
                        verify_batch=verify_batch, bounds_hook=bounds_hook,
-                       positions=positions, bounds=bounds)
+                       positions=positions, bounds=bounds, backend=backend)
     run.ensure(plan.k)
     if kind in ("topk", "filtered_topk"):
         ids, scores = run.result()

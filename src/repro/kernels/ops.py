@@ -5,6 +5,11 @@ Dispatch policy: the Pallas path is used on TPU backends (or when
 pure-jnp reference, which is semantically identical.  Shape contracts that
 the kernels can't serve (ragged CHI grids) also fall back.
 
+Setting ``REPRO_FORCE_PALLAS_INTERPRET=1`` in the environment forces every
+wrapper onto the Pallas path in interpret mode — CI uses this to exercise
+the actual kernel bodies on CPU machines instead of only the jnp
+references.
+
 These wrappers are what core/ and the distributed engine call — nothing else
 imports the kernel modules directly.
 """
@@ -12,6 +17,7 @@ imports the kernel modules directly.
 from __future__ import annotations
 
 import functools
+import os
 
 import jax
 import jax.numpy as jnp
@@ -21,16 +27,31 @@ from .chi_build import chi_cell_hist_pallas
 from .cp_count import cp_count_multi_pallas, cp_count_pallas
 from .mask_agg import mask_agg_counts_pallas
 
+_FORCE_INTERPRET = os.environ.get("REPRO_FORCE_PALLAS_INTERPRET", "") == "1"
+
 
 def _on_tpu() -> bool:
     return jax.default_backend() == "tpu"
+
+
+def _dispatch(use_pallas: bool | None, interpret: bool) -> tuple[bool, bool]:
+    """Resolve the (pallas, interpret) pair for one wrapper call.
+
+    The force flag only overrides the *default* dispatch — a caller that
+    explicitly asked for the jnp reference (``use_pallas=False``) keeps it,
+    so reference-vs-Pallas comparison tests stay meaningful under the
+    forced-interpret CI leg."""
+    if _FORCE_INTERPRET and use_pallas is None:
+        return True, True
+    pallas = _on_tpu() if use_pallas is None else use_pallas
+    return pallas, interpret
 
 
 @functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
 def cp_count(masks, rois, lv, uv, *, use_pallas: bool | None = None,
              interpret: bool = False):
     """Batched exact CP — (B,H,W), (B,4) → (B,) int32."""
-    pallas = _on_tpu() if use_pallas is None else use_pallas
+    pallas, interpret = _dispatch(use_pallas, interpret)
     if pallas or interpret:
         return cp_count_pallas(masks, rois, lv, uv,
                                interpret=interpret or not _on_tpu())
@@ -41,7 +62,7 @@ def cp_count(masks, rois, lv, uv, *, use_pallas: bool | None = None,
 def cp_count_multi(masks, rois, lvs, uvs, *, use_pallas: bool | None = None,
                    interpret: bool = False):
     """Multi-query CP — (B,H,W), (Q,B,4), (Q,), (Q,) → (Q,B) int32."""
-    pallas = _on_tpu() if use_pallas is None else use_pallas
+    pallas, interpret = _dispatch(use_pallas, interpret)
     if pallas or interpret:
         return cp_count_multi_pallas(masks, rois, lvs, uvs,
                                      interpret=interpret or not _on_tpu())
@@ -54,7 +75,8 @@ def chi_cell_hist(masks, interior_edges, grid: int, *,
     """CHI ingest histograms — (B,H,W) → (B,G,G,NB) int32."""
     _, h, w = masks.shape
     divisible = (h % grid == 0) and (w % grid == 0)
-    pallas = (_on_tpu() if use_pallas is None else use_pallas) and divisible
+    pallas, interpret = _dispatch(use_pallas, interpret)
+    pallas = pallas and divisible
     if (pallas or interpret) and divisible:
         return chi_cell_hist_pallas(masks, interior_edges, grid,
                                     interpret=interpret or not _on_tpu())
@@ -65,7 +87,7 @@ def chi_cell_hist(masks, interior_edges, grid: int, *,
 def mask_agg_counts(group_masks, rois, thresh, *,
                     use_pallas: bool | None = None, interpret: bool = False):
     """Fused MASK_AGG counts — (N,S,H,W), (N,4) → (inter, union) int32."""
-    pallas = _on_tpu() if use_pallas is None else use_pallas
+    pallas, interpret = _dispatch(use_pallas, interpret)
     if pallas or interpret:
         return mask_agg_counts_pallas(group_masks, rois, thresh,
                                       interpret=interpret or not _on_tpu())

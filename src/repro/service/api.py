@@ -30,6 +30,7 @@ from typing import Optional, Sequence
 
 import numpy as np
 
+from ..core.backend import get_backend
 from ..core.engine import ExecStats
 from ..core.plan import LogicalPlan, compile_plan
 from ..core.queries import Query, parse
@@ -61,8 +62,11 @@ class MaskSearchService:
     def __init__(self, store, *, provided_rois: Optional[np.ndarray] = None,
                  result_cache_size: int = 128, bounds_cache_size: int = 64,
                  verify_batch: int = 256, share_loads: bool = True,
-                 max_sessions: int = 256):
+                 max_sessions: int = 256, backend=None):
         self.store = store
+        # The physical execution layer every plan compiles onto: host
+        # (default), the HBM-resident device tier, or the shard_map mesh.
+        self.backend = get_backend(store, backend)
         self.default_rois = provided_rois
         # Hash the default ROI array once — per-query hashing of a large
         # per-mask box array would serialize O(n) work behind the lock.
@@ -71,7 +75,7 @@ class MaskSearchService:
         self.planner = Planner(result_cache_size=result_cache_size,
                                bounds_cache_size=bounds_cache_size)
         self.sessions = SessionManager(max_sessions=max_sessions)
-        self.scheduler = FusedScheduler(store)
+        self.scheduler = FusedScheduler(store, backend=self.backend)
         self._lock = threading.RLock()
         self._counts = {"total": 0, "filter": 0, "topk": 0,
                         "filtered_topk": 0, "scalar_agg": 0,
@@ -106,12 +110,14 @@ class MaskSearchService:
         return rois, roi_signature(rois)
 
     def _build_run(self, plan: LogicalPlan, rois, roi_sig: str):
-        """Compile the plan to its resumable run, going through the
-        per-expression bounds cache (a hit skips that CHI pass entirely)."""
+        """Compile the plan to its resumable run on the service's backend,
+        going through the per-expression bounds cache (a hit skips that
+        CHI pass entirely)."""
         return compile_plan(self.store, plan, provided_rois=rois,
                             verify_batch=self.verify_batch,
-                            bounds_hook=self.planner.bounds_hook(plan,
-                                                                 roi_sig))
+                            backend=self.backend,
+                            bounds_hook=self.planner.bounds_hook(
+                                plan, roi_sig, self.backend.name))
 
     def _finish_payload(self, plan: LogicalPlan, run, *,
                         cache_hit: bool = False,
@@ -166,14 +172,16 @@ class MaskSearchService:
                     kind=plan.kind)
                 return self._serve_page(sess, size)
 
-            cached = self.planner.cached_result(plan, roi_sig)
+            cached = self.planner.cached_result(plan, roi_sig,
+                                                self.backend.name)
             if cached is not None:
                 return self._cache_hit_payload(cached)
 
             run = self._build_run(plan, rois, roi_sig)
             run.ensure(plan.k)
             payload = self._finish_payload(plan, run)
-            self.planner.store_result(plan, roi_sig, copy.deepcopy(payload))
+            self.planner.store_result(plan, roi_sig, copy.deepcopy(payload),
+                                      self.backend.name)
             return payload
 
     def submit_batch(self, sqls: Sequence, *, rois=None) -> list:
@@ -187,7 +195,8 @@ class MaskSearchService:
                 plan = self._plan(sql)
                 self._counts["total"] += 1
                 self._counts[plan.kind] = self._counts.get(plan.kind, 0) + 1
-                cached = self.planner.cached_result(plan, roi_sig)
+                cached = self.planner.cached_result(plan, roi_sig,
+                                                    self.backend.name)
                 if cached is not None:
                     entries.append((plan, None, self._cache_hit_payload(cached)))
                     continue
@@ -204,7 +213,9 @@ class MaskSearchService:
             for plan, run, payload in entries:
                 if payload is None:
                     payload = self._finish_payload(plan, run)
-                    self.planner.store_result(plan, roi_sig, copy.deepcopy(payload))
+                    self.planner.store_result(plan, roi_sig,
+                                              copy.deepcopy(payload),
+                                              self.backend.name)
                 results.append(payload)
             return results
 
@@ -267,6 +278,7 @@ class MaskSearchService:
             cache = self.store.cache_stats
             return {
                 "uptime_s": time.monotonic() - self._started_s,
+                "backend": self.backend.name,
                 "queries": dict(self._counts),
                 **self.planner.stats(),
                 "sessions": self.sessions.stats(),

@@ -53,20 +53,24 @@ def roi_signature(rois: Optional[np.ndarray]) -> str:
     return hashlib.sha1(arr.tobytes() + str(arr.shape).encode()).hexdigest()[:16]
 
 
-def result_key(plan_or_query, roi_sig: str) -> str:
-    return _as_plan(plan_or_query).signature() + "|" + roi_sig
+def result_key(plan_or_query, roi_sig: str, backend: str = "host") -> str:
+    return "|".join([_as_plan(plan_or_query).signature(), roi_sig, backend])
 
 
-def bounds_key(expr: Node, plan_or_query, roi_sig: str) -> str:
+def bounds_key(expr: Node, plan_or_query, roi_sig: str,
+               backend: str = "host") -> str:
     """One *value expression*'s bounds-cache key: everything that pins the
     candidate set + its CHI pass — NOT op/threshold/k or the rest of the
-    plan, so refined and restructured queries hit the same entries."""
+    plan, so refined and restructured queries hit the same entries.
+    Keys carry the execution backend's name: bounds are numerically
+    identical across backends, but entries stay attributable (and a
+    service switching backends never serves stale placement decisions)."""
     plan = _as_plan(plan_or_query)
     return "|".join([
         expr_signature(expr),
         str(None if plan.mask_types is None
             else tuple(sorted(plan.mask_types))),
-        str(plan.grouped), roi_sig,
+        str(plan.grouped), roi_sig, backend,
     ])
 
 
@@ -121,16 +125,21 @@ class _PlanBoundsHook:
     (``get(expr)`` / ``put(expr, lb, ub)``), closing over the plan context
     that pins the candidate set."""
 
-    def __init__(self, cache: LRUCache, plan: LogicalPlan, roi_sig: str):
+    def __init__(self, cache: LRUCache, plan: LogicalPlan, roi_sig: str,
+                 backend: str = "host"):
         self._cache = cache
         self._plan = plan
         self._roi_sig = roi_sig
+        self._backend = backend
 
     def get(self, expr: Node):
-        return self._cache.get(bounds_key(expr, self._plan, self._roi_sig))
+        return self._cache.get(
+            bounds_key(expr, self._plan, self._roi_sig, self._backend))
 
     def put(self, expr: Node, lb: np.ndarray, ub: np.ndarray) -> None:
-        self._cache.put(bounds_key(expr, self._plan, self._roi_sig), (lb, ub))
+        self._cache.put(
+            bounds_key(expr, self._plan, self._roi_sig, self._backend),
+            (lb, ub))
 
 
 class Planner:
@@ -142,18 +151,23 @@ class Planner:
         self.bounds_cache = LRUCache(bounds_cache_size)
 
     # -- result tier ------------------------------------------------------
-    def cached_result(self, plan_or_query, roi_sig: str):
-        return self.result_cache.get(result_key(plan_or_query, roi_sig))
+    def cached_result(self, plan_or_query, roi_sig: str,
+                      backend: str = "host"):
+        return self.result_cache.get(
+            result_key(plan_or_query, roi_sig, backend))
 
-    def store_result(self, plan_or_query, roi_sig: str, payload) -> None:
-        self.result_cache.put(result_key(plan_or_query, roi_sig), payload)
+    def store_result(self, plan_or_query, roi_sig: str, payload,
+                     backend: str = "host") -> None:
+        self.result_cache.put(result_key(plan_or_query, roi_sig, backend),
+                              payload)
 
     # -- bounds tier ------------------------------------------------------
-    def bounds_hook(self, plan_or_query, roi_sig: str) -> _PlanBoundsHook:
+    def bounds_hook(self, plan_or_query, roi_sig: str,
+                    backend: str = "host") -> _PlanBoundsHook:
         """The per-expression bounds cache, scoped to one plan's candidate
         set — hand this to :func:`repro.core.plan.compile_plan`."""
         return _PlanBoundsHook(self.bounds_cache, _as_plan(plan_or_query),
-                               roi_sig)
+                               roi_sig, backend)
 
     def stats(self) -> dict:
         return {"result_cache": self.result_cache.info.as_dict(),

@@ -18,7 +18,12 @@ I/O even when they can't share compute.
 The scheduler is operator-agnostic: any run implementing the uniform
 ``take_batch / cp_terms / fused_values / apply_exact / finished`` interface
 (filter, top-k, filtered top-k, scalar aggregation — see DESIGN.md §6)
-fuses here without the scheduler knowing which it is driving.
+fuses here without the scheduler knowing which it is driving.  It is also
+backend-agnostic: the fused pass runs on whichever
+:class:`repro.core.backend.ExecBackend` owns the store — the host path
+loads the union through the shared-load cache; the device path gathers it
+from the HBM-resident tier; the mesh path runs the sharded
+``cp_multi_step``.
 """
 
 from __future__ import annotations
@@ -26,13 +31,11 @@ from __future__ import annotations
 import dataclasses
 import time
 
-import jax.numpy as jnp
 import numpy as np
 
+from ..core.backend import F32_MAX as _F32_MAX
+from ..core.backend import get_backend
 from ..core.exprs import CP, MaskEvalContext
-from ..kernels import ops as kops
-
-_F32_MAX = 3.4e38  # finite stand-in for +inf in float32 kernel compares
 
 
 @dataclasses.dataclass
@@ -63,8 +66,9 @@ class FusedScheduler:
     Round size is each run's own ``verify_batch`` — the scheduler only
     sequences and fuses the batches the runs produce."""
 
-    def __init__(self, store):
+    def __init__(self, store, backend=None):
         self.store = store
+        self.backend = get_backend(store, backend)
         self.stats = SchedulerStats()
 
     def drive(self, jobs) -> None:
@@ -101,7 +105,6 @@ class FusedScheduler:
             [j.ctx.positions[b] for j, b in pairs]))
         io0 = store.io.bytes_read
         t0 = time.perf_counter()
-        masks = store.load(all_pos)
 
         # Dedupe CP descriptors across jobs.  CP nodes hash by value, so two
         # sessions ranking by the same term share one kernel row; "provided"
@@ -117,12 +120,7 @@ class FusedScheduler:
                     rois = job.ctx.resolve_rois(term.roi, all_pos)
                     rows[key] = len(specs)
                     specs.append((rois, term.lv, min(term.uv, _F32_MAX)))
-        rois_q = np.stack([s[0] for s in specs]).astype(np.int32)
-        lvs = np.asarray([s[1] for s in specs], masks.dtype)
-        uvs = np.asarray([s[2] for s in specs], masks.dtype)
-        counts = np.asarray(kops.cp_count_multi(
-            jnp.asarray(masks), jnp.asarray(rois_q),
-            jnp.asarray(lvs), jnp.asarray(uvs)))
+        counts = self.backend.fused_counts(store, all_pos, specs)
 
         self.stats.fused_passes += 1
         self.stats.fused_descriptors += len(specs)

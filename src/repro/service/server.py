@@ -159,6 +159,11 @@ def main(argv=None):
     ap.add_argument("--host", default="127.0.0.1")
     ap.add_argument("--port", type=int, default=8765)
     ap.add_argument("--verify-batch", type=int, default=256)
+    ap.add_argument("--backend", default="host",
+                    choices=("host", "device", "mesh"),
+                    help="physical execution layer (core/backend.py): host "
+                         "NumPy, HBM-resident single device, or the "
+                         "shard_map mesh over all local devices")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -168,7 +173,8 @@ def main(argv=None):
     else:
         store, rois = _synthetic_store(args.synthetic, args.size)
     service = MaskSearchService(store, provided_rois=rois,
-                                verify_batch=args.verify_batch)
+                                verify_batch=args.verify_batch,
+                                backend=args.backend)
     httpd = make_server(service, args.host, args.port, verbose=args.verbose)
     host, port = httpd.server_address[:2]
     print(f"masksearch service: {len(store)} masks on http://{host}:{port}",

@@ -1,0 +1,258 @@
+"""Backend-equivalence suite: Host, Device, and Mesh backends must return
+identical ids/scores and identical ``n_verified`` accounting for any plan
+the IR can express (the ExecBackend contract, DESIGN.md §7).
+
+Seeded-numpy randomized plans here; the hypothesis version lives in
+``test_backend_properties.py``.  The mesh backend runs over a 1-device
+local mesh in-process (the 8-device variant is
+``test_distributed.py::test_mesh_backend_multi_device_matches_host``).
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import CHIConfig, MaskStore
+from repro.core.backend import (DeviceBackend, HostBackend, MeshBackend,
+                                get_backend, host_backend)
+from repro.core.exprs import (AggCP, And, BinOp, Cmp, CP, MaskEvalContext,
+                              Not, Or, RoiArea)
+from repro.core.plan import LogicalPlan, run_plan
+from repro.core.store import MASK_META_DTYPE
+from repro.data.masks import object_boxes, saliency_masks
+
+B, H, W = 24, 32, 32
+BACKENDS = ("host", "device", "mesh")
+
+
+@pytest.fixture(scope="module")
+def db():
+    rois = object_boxes(B, H, W, seed=5)
+    masks, _ = saliency_masks(B, H, W, seed=4, attacked_fraction=0.25,
+                              boxes=rois)
+    meta = np.zeros(B, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(B)
+    meta["image_id"] = np.arange(B) // 2
+    meta["mask_type"] = np.arange(B) % 3 + 1
+    cfg = CHIConfig(grid=4, num_bins=8, height=H, width=W)
+    return MaskStore.create_memory(masks, meta, cfg), rois
+
+
+def _run_all(store, plan, rois, verify_batch=5):
+    return {name: run_plan(store, plan, provided_rois=rois,
+                           verify_batch=verify_batch, backend=name)
+            for name in BACKENDS}
+
+
+def _assert_equivalent(outs, label=""):
+    payload0, stats0 = outs["host"]
+    for name in ("device", "mesh"):
+        payload, stats = outs[name]
+        if isinstance(payload0, tuple):                 # (ids, scores)
+            assert list(payload[0]) == list(payload0[0]), (label, name)
+            np.testing.assert_allclose(payload[1], payload0[1],
+                                       err_msg=f"{label}/{name}")
+        elif isinstance(payload0, float):               # scalar agg
+            both_nan = np.isnan(payload) and np.isnan(payload0)
+            assert both_nan or payload == payload0, (label, name)
+        else:                                           # filter ids
+            assert list(payload) == list(payload0), (label, name)
+        assert stats.n_verified == stats0.n_verified, (label, name)
+        assert stats.n_decided_by_bounds == stats0.n_decided_by_bounds, \
+            (label, name)
+        assert stats.n_dropped_masks == stats0.n_dropped_masks, (label, name)
+
+
+# -- randomized plan suite (seeded fallback) ---------------------------------
+
+
+def _random_expr(rng):
+    ranges = [(0.0, 0.3), (0.2, 0.6), (0.5, 1.0), (0.8, 1.0)]
+    rois = [None, "provided", (4, 4, 28, 28)]
+    lv, uv = ranges[rng.integers(len(ranges))]
+    roi = rois[rng.integers(len(rois))]
+    base = CP(roi, lv, uv)
+    if rng.random() < 0.3:
+        return BinOp("/", base, RoiArea(roi))
+    if rng.random() < 0.3:
+        lv2, uv2 = ranges[rng.integers(len(ranges))]
+        op = "+-*"[rng.integers(3)]
+        return BinOp(op, base, CP(rois[rng.integers(len(rois))], lv2, uv2))
+    return base
+
+
+def _random_pred(rng, depth=0):
+    if depth < 2 and rng.random() < 0.5:
+        kind = rng.integers(3)
+        if kind == 0:
+            return And(_random_pred(rng, depth + 1),
+                       _random_pred(rng, depth + 1))
+        if kind == 1:
+            return Or(_random_pred(rng, depth + 1),
+                      _random_pred(rng, depth + 1))
+        return Not(_random_pred(rng, depth + 1))
+    expr = _random_expr(rng)
+    op = ("<", "<=", ">", ">=")[rng.integers(4)]
+    threshold = float(rng.choice([0.0, 0.02, 10.0, 100.0, 400.0]))
+    return Cmp(expr, op, threshold)
+
+
+def test_random_filter_plans_equivalent(db):
+    store, rois = db
+    rng = np.random.default_rng(10)
+    for trial in range(12):
+        plan = LogicalPlan(predicate=_random_pred(rng))
+        _assert_equivalent(_run_all(store, plan, rois), f"filter{trial}")
+
+
+def test_random_ranking_plans_equivalent(db):
+    store, rois = db
+    rng = np.random.default_rng(11)
+    for trial in range(10):
+        plan = LogicalPlan(order_by=_random_expr(rng),
+                           k=int(rng.integers(1, B + 2)),
+                           desc=bool(rng.integers(2)))
+        _assert_equivalent(_run_all(store, plan, rois), f"topk{trial}")
+
+
+def test_random_filtered_topk_plans_equivalent(db):
+    store, rois = db
+    rng = np.random.default_rng(12)
+    for trial in range(10):
+        plan = LogicalPlan(predicate=_random_pred(rng),
+                           order_by=_random_expr(rng),
+                           k=int(rng.integers(1, 9)),
+                           desc=bool(rng.integers(2)))
+        _assert_equivalent(_run_all(store, plan, rois), f"ftopk{trial}")
+
+
+@pytest.mark.parametrize("agg", ["SUM", "AVG", "MIN", "MAX"])
+def test_scalar_agg_plans_equivalent(db, agg):
+    store, rois = db
+    plan = LogicalPlan(agg=agg, agg_expr=BinOp("/", CP("provided", 0.8, 1.0),
+                                               RoiArea("provided")))
+    _assert_equivalent(_run_all(store, plan, rois), agg)
+    empty = LogicalPlan(agg=agg, agg_expr=CP(None, 0.2, 0.6),
+                        mask_types=(99,))
+    _assert_equivalent(_run_all(store, empty, rois), f"{agg}-empty")
+
+
+@pytest.mark.parametrize("agg", ["intersect", "union"])
+def test_group_plans_equivalent(db, agg):
+    store, rois = db
+    plan = LogicalPlan(select="image_id", order_by=AggCP(agg, 0.8, None), k=6)
+    _assert_equivalent(_run_all(store, plan, rois), f"group-{agg}")
+    iou = LogicalPlan(select="image_id",
+                      order_by=BinOp("/", AggCP("intersect", 0.8, None),
+                                     AggCP("union", 0.8, None)),
+                      k=6, desc=False)
+    _assert_equivalent(_run_all(store, iou, rois), "group-iou")
+
+
+# -- the physical primitives in isolation ------------------------------------
+
+
+def test_cp_bounds_bit_identical_across_backends(db):
+    """CP-leaf bounds are *integers* from the same CHI math (host resolve vs
+    device_resolve) — they must agree exactly, not approximately."""
+    store, rois = db
+    rng = np.random.default_rng(13)
+    ctx = MaskEvalContext(store, np.arange(len(store)), rois)
+    backends = [get_backend(store, n) for n in BACKENDS]
+    for trial in range(15):
+        expr = _random_expr(rng)
+        ref_lb, ref_ub = backends[0].bounds(ctx, expr)
+        for be in backends[1:]:
+            lb, ub = be.bounds(ctx, expr)
+            np.testing.assert_array_equal(lb, ref_lb, err_msg=f"{trial}")
+            np.testing.assert_array_equal(ub, ref_ub, err_msg=f"{trial}")
+    # the unbounded-above CP leaf (uv=inf, MASK_AGG member bounds)
+    inf_cp = CP(None, 0.8, float("inf"))
+    ref = backends[0].bounds(ctx, inf_cp)
+    for be in backends[1:]:
+        got = be.bounds(ctx, inf_cp)
+        np.testing.assert_array_equal(got[0], ref[0])
+        np.testing.assert_array_equal(got[1], ref[1])
+
+
+def test_verify_counts_identical_across_backends(db):
+    store, rois = db
+    ctx = MaskEvalContext(store, np.arange(len(store)), rois)
+    terms = {CP(None, 0.2, 0.6), CP("provided", 0.8, 1.0),
+             CP((4, 4, 28, 28), 0.0, 0.3)}
+    batch = np.arange(0, B, 2)
+    ref = host_backend().verify_counts(ctx, batch, terms)
+    for name in ("device", "mesh"):
+        ctx2 = MaskEvalContext(store, np.arange(len(store)), rois)
+        got = get_backend(store, name).verify_counts(ctx2, batch, terms)
+        for t in terms:
+            np.testing.assert_array_equal(got[t], ref[t], err_msg=name)
+
+
+@pytest.mark.parametrize("desc", [True, False])
+def test_topk_frontier_exact_under_f32_collisions(db, desc):
+    """Scores closer than one float32 ulp collapse in the device/mesh
+    collectives; τ must still be resolved at float64 so the frontier is
+    bit-identical to the host's np.partition path (regression: the f32
+    tie-class pick used to over-prune)."""
+    store, _ = db
+    base = np.array([1.0, 1.0 + 1e-10, 1.0 + 2e-10, 0.5, 2.0])
+    lb = base if desc else base - 1e-11
+    ub = base + 1e-11 if desc else base
+    definite = np.ones(len(base), bool)
+    possible = np.ones(len(base), bool)
+    for k in range(1, len(base) + 1):
+        want = host_backend().topk_candidates(lb, ub, k, desc, definite,
+                                              possible)
+        for name in ("device", "mesh"):
+            got = get_backend(store, name).topk_candidates(
+                lb, ub, k, desc, definite, possible)
+            np.testing.assert_array_equal(got, want, err_msg=f"{name} k={k}")
+    # and with a mixed definite/possible pattern inside the tie class
+    definite2 = np.array([True, False, True, True, True])
+    possible2 = np.array([True, True, True, False, True])
+    for k in (1, 2, 3):
+        want = host_backend().topk_candidates(lb, ub, k, desc, definite2,
+                                              possible2)
+        for name in ("device", "mesh"):
+            got = get_backend(store, name).topk_candidates(
+                lb, ub, k, desc, definite2, possible2)
+            np.testing.assert_array_equal(got, want, err_msg=f"{name} k={k}")
+
+
+def test_get_backend_resolution(db):
+    store, _ = db
+    assert isinstance(get_backend(store, None), HostBackend)
+    assert get_backend(store, "host") is get_backend(store)
+    dev = get_backend(store, "device")
+    assert isinstance(dev, DeviceBackend)
+    assert get_backend(store, "device") is dev          # cached per store
+    mesh = get_backend(store, "mesh")
+    assert isinstance(mesh, MeshBackend)
+    assert get_backend(store, mesh) is mesh             # instances pass through
+    with pytest.raises(ValueError):
+        get_backend(store, "gpu-cluster")
+
+
+def test_mesh_reaches_distributed_steps(db):
+    """Acceptance: core/distributed.py's step functions are the mesh
+    backend's physical layer — reachable from run_plan(backend="mesh")."""
+    store, rois = db
+    be = get_backend(store, "mesh")
+    from repro.core import distributed as dist
+    assert be._verify_step is not None
+    calls = []
+    original = be._verify_step
+
+    def spying(*a, **kw):
+        calls.append(1)
+        return original(*a, **kw)
+
+    be._verify_step = spying
+    try:
+        plan = LogicalPlan(order_by=CP(None, 0.2, 0.6), k=5)
+        run_plan(store, plan, provided_rois=rois, verify_batch=4,
+                 backend="mesh")
+    finally:
+        be._verify_step = original
+    assert calls, "mesh execution must verify through distributed steps"
+    assert dist.make_verify_step is not None

@@ -1,0 +1,117 @@
+"""Property tests (hypothesis): the three execution backends agree on
+randomly generated plans — identical ids/scores and identical
+``n_verified`` accounting.  The seeded-numpy fallback of this suite lives
+in ``test_backend_equivalence.py``.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="hypothesis not installed in this environment")
+
+from hypothesis import HealthCheck, given, settings, strategies as st  # noqa: E402
+
+from repro.core import CHIConfig, MaskStore  # noqa: E402
+from repro.core.exprs import (And, BinOp, Cmp, CP, Not, Or,  # noqa: E402
+                              RoiArea)
+from repro.core.plan import LogicalPlan, run_plan  # noqa: E402
+from repro.core.store import MASK_META_DTYPE  # noqa: E402
+from repro.data.masks import object_boxes, saliency_masks  # noqa: E402
+
+B, H, W = 20, 32, 32
+BACKENDS = ("host", "device", "mesh")
+
+_STORE = {}
+
+
+def _db():
+    """Module-lazy store (hypothesis re-enters the test many times); the
+    device/mesh backends stay cached on the store across examples."""
+    if "store" not in _STORE:
+        rois = object_boxes(B, H, W, seed=5)
+        masks, _ = saliency_masks(B, H, W, seed=4, attacked_fraction=0.25,
+                                  boxes=rois)
+        meta = np.zeros(B, MASK_META_DTYPE)
+        meta["mask_id"] = np.arange(B)
+        meta["image_id"] = np.arange(B) // 2
+        meta["mask_type"] = np.arange(B) % 2 + 1
+        cfg = CHIConfig(grid=4, num_bins=8, height=H, width=W)
+        _STORE["store"] = MaskStore.create_memory(masks, meta, cfg)
+        _STORE["rois"] = rois
+    return _STORE["store"], _STORE["rois"]
+
+
+_ranges = st.sampled_from([(0.0, 0.3), (0.2, 0.6), (0.5, 1.0), (0.8, 1.0)])
+_rois = st.sampled_from([None, "provided", (4, 4, 28, 28)])
+
+
+@st.composite
+def _exprs(draw):
+    lv, uv = draw(_ranges)
+    roi = draw(_rois)
+    base = CP(roi, lv, uv)
+    shape = draw(st.integers(0, 3))
+    if shape == 1:
+        return BinOp("/", base, RoiArea(roi))
+    if shape == 2:
+        lv2, uv2 = draw(_ranges)
+        return BinOp(draw(st.sampled_from("+-*")), base,
+                     CP(draw(_rois), lv2, uv2))
+    return base
+
+
+@st.composite
+def _cmps(draw):
+    return Cmp(draw(_exprs()), draw(st.sampled_from(["<", "<=", ">", ">="])),
+               draw(st.sampled_from([0.0, 0.02, 10.0, 100.0, 400.0])))
+
+
+_preds = st.recursive(
+    _cmps(),
+    lambda children: st.one_of(
+        st.builds(And, children, children),
+        st.builds(Or, children, children),
+        st.builds(Not, children),
+    ),
+    max_leaves=4,
+)
+
+_SETTINGS = settings(max_examples=25, deadline=None,
+                     suppress_health_check=[HealthCheck.too_slow])
+
+
+def _assert_backends_agree(plan):
+    store, rois = _db()
+    outs = {name: run_plan(store, plan, provided_rois=rois, verify_batch=4,
+                           backend=name) for name in BACKENDS}
+    payload0, stats0 = outs["host"]
+    for name in ("device", "mesh"):
+        payload, stats = outs[name]
+        if isinstance(payload0, tuple):
+            assert list(payload[0]) == list(payload0[0]), name
+            np.testing.assert_allclose(payload[1], payload0[1])
+        else:
+            assert list(payload) == list(payload0), name
+        assert stats.n_verified == stats0.n_verified, name
+        assert stats.n_decided_by_bounds == stats0.n_decided_by_bounds, name
+
+
+@_SETTINGS
+@given(pred=_preds)
+def test_filter_backends_agree(pred):
+    _assert_backends_agree(LogicalPlan(predicate=pred))
+
+
+@_SETTINGS
+@given(rank=_exprs(), desc=st.booleans(), k=st.integers(1, B + 2))
+def test_ranking_backends_agree(rank, desc, k):
+    _assert_backends_agree(LogicalPlan(order_by=rank, k=k, desc=desc))
+
+
+@_SETTINGS
+@given(pred=_preds, rank=_exprs(), desc=st.booleans(),
+       k=st.integers(1, B + 2))
+def test_filtered_topk_backends_agree(pred, rank, desc, k):
+    _assert_backends_agree(
+        LogicalPlan(predicate=pred, order_by=rank, k=k, desc=desc))

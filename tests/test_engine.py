@@ -127,6 +127,41 @@ def test_sql_parser_errors():
     assert q.op == ">=" and q.threshold == 10
 
 
+def test_ragged_groups_record_dropped_masks():
+    """Grouped evaluation needs rectangular (n_groups, size) blocks, so
+    ragged image groups are truncated to the smallest group size.  That
+    used to be silent data loss; it must now be surfaced in
+    ExecStats.n_dropped_masks (indexed and full-scan paths alike)."""
+    b, h, w = 11, 32, 32
+    masks = saliency_masks(b, h, w, seed=6)[0]
+    meta = np.zeros(b, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(b)
+    # images of 3, 2, 2, and 4 masks → size 2, with 1 + 2 = 3 dropped
+    meta["image_id"] = np.array([0, 0, 0, 1, 1, 2, 2, 3, 3, 3, 3])
+    cfg = CHIConfig(grid=4, num_bins=8, height=h, width=w)
+    store = MaskStore.create_memory(masks, meta, cfg)
+
+    expr = AggCP("union", 0.8, None)
+    _, _, stats = engine.topk_query(store, expr, 3, group_by_image=True)
+    assert stats.n_dropped_masks == 3
+    assert stats.n_candidates == 4                    # 4 image groups
+    _, _, stats_scan = engine.topk_query(store, expr, 3,
+                                         group_by_image=True,
+                                         use_index=False)
+    assert stats_scan.n_dropped_masks == 3
+
+    # even groups drop nothing
+    even = np.zeros(6, MASK_META_DTYPE)
+    even["mask_id"] = np.arange(6)
+    even["image_id"] = np.arange(6) // 2
+    store2 = MaskStore.create_memory(masks[:6], even, cfg)
+    _, _, stats2 = engine.topk_query(store2, expr, 2, group_by_image=True)
+    assert stats2.n_dropped_masks == 0
+    # and per-mask (ungrouped) runs never report drops
+    ids, fstats = engine.filter_query(store, CP(None, 0.0, 1.0), ">", -1.0)
+    assert fstats.n_dropped_masks == 0
+
+
 def test_execution_detail_bounds_histogram(db):
     """The GUI's 'Execution Detail' bound distribution, as library data."""
     from repro.core.exprs import MaskEvalContext

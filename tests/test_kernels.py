@@ -111,11 +111,13 @@ def test_mask_agg_matches_ref(s, shape):
 
 def test_ops_wrappers_fallback_cpu():
     """On CPU the ops layer uses the reference path and still agrees with the
-    forced-interpret Pallas path."""
+    forced-interpret Pallas path.  ``use_pallas=False`` is explicit so the
+    reference side survives REPRO_FORCE_PALLAS_INTERPRET=1 (which only
+    overrides default dispatch) and the comparison stays meaningful."""
     b, h, w = 3, 64, 64
     masks = _random((b, h, w), jnp.float32, seed=12)
     rois = _random_rois(b, h, w, seed=13)
-    a = ops.cp_count(masks, rois, 0.2, 0.9)
+    a = ops.cp_count(masks, rois, 0.2, 0.9, use_pallas=False)
     bb = ops.cp_count(masks, rois, 0.2, 0.9, use_pallas=True, interpret=True)
     np.testing.assert_array_equal(np.asarray(a), np.asarray(bb))
     iou = ops.mask_agg_iou(masks.reshape(1, b, h, w),

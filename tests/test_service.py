@@ -342,6 +342,42 @@ def test_group_query_through_batch_fallback(db):
     assert svc.scheduler.stats.fallback_batches > 0  # MASK_AGG can't fuse
 
 
+@pytest.mark.parametrize("backend", ["device", "mesh"])
+def test_service_on_alternate_backends(db, backend):
+    """One service per backend: identical answers to the host service, for
+    one-shot queries, fused batches, and session pagination — and the
+    device backend's verification loads nothing from the metered store
+    (the bytes live resident in HBM)."""
+    root, rois = db
+    host = _fresh_service(root, rois, verify_batch=8)
+    alt = _fresh_service(root, rois, verify_batch=8, backend=backend)
+    assert alt.stats()["backend"] == backend
+
+    want = host.query(FILTERED_TOPK_SQL)
+    io0 = alt.store.io.bytes_read
+    got = alt.query(FILTERED_TOPK_SQL)
+    assert got["ids"] == want["ids"]
+    np.testing.assert_allclose(got["scores"], want["scores"])
+    assert got["stats"]["n_verified"] == want["stats"]["n_verified"]
+    if backend == "device":
+        # resident-tier verification: zero metered query-path bytes
+        assert alt.store.io.bytes_read == io0
+
+    sqls = [TOPK_SQL, TOPK_SQL.replace("0.2", "0.25")]
+    for w, g in zip(host.submit_batch(sqls), alt.submit_batch(sqls)):
+        assert g["ids"] == w["ids"]
+    assert alt.scheduler.stats.fused_passes > 0
+
+    sess_h = host.query(TOPK_SQL, session=True, page_size=5)
+    sess_a = alt.query(TOPK_SQL, session=True, page_size=5)
+    assert sess_a["page"]["ids"] == sess_h["page"]["ids"]
+    page_h = host.next_page(sess_h["session"])
+    page_a = alt.next_page(sess_a["session"])
+    assert page_a["page"]["ids"] == page_h["page"]["ids"]
+    host.close()
+    alt.close()
+
+
 def test_session_errors(db):
     root, _ = db
     svc = _fresh_service(root)
