@@ -17,7 +17,8 @@ Public surface:
 
 from .backend import (DeviceBackend, ExecBackend, HostBackend,  # noqa: F401
                       MeshBackend, get_backend)
-from .chi import CHIConfig, build_chi, build_chi_np, chi_bounds  # noqa: F401
+from .chi import (CHIConfig, build_chi, build_chi_delta,  # noqa: F401
+                  build_chi_np, chi_bounds)
 from .engine import (ExecStats, FilteredTopKRun, FilterRun,  # noqa: F401
                      MinMaxAggRun, ScalarAggRun, TopKRun,
                      filter_query, filtered_topk_query, scalar_agg,
@@ -27,4 +28,5 @@ from .exprs import (CP, AggCP, And, BinOp, Cmp, Const, Not, Or,  # noqa: F401
                     Pred, RoiArea, TypeIn)
 from .plan import LogicalPlan, compile_plan, run_plan  # noqa: F401
 from .queries import parse, parse_plan, run  # noqa: F401
-from .store import MASK_META_DTYPE, IOStats, MaskStore  # noqa: F401
+from .store import (MASK_META_DTYPE, IOStats, MaskStore,  # noqa: F401
+                    StaleRunError, StoreSnapshot)

@@ -78,6 +78,12 @@ class ExecBackend:
 
     name = "abstract"
 
+    def sync(self) -> None:
+        """Refresh any store-resident state (pinned masks, CHI tables) to
+        the store's current epoch.  Called by :func:`get_backend` on every
+        resolution, so a backend instance cached across mutations never
+        serves pre-epoch residency.  Host is stateless — no-op."""
+
     def bounds(self, ctx, expr):
         """(lb, ub) float64 arrays over ``ctx``'s candidates for ``expr``."""
         raise NotImplementedError
@@ -248,8 +254,20 @@ class DeviceBackend(_KthValueMixin, ExecBackend):
         self.cfg = store.cfg
         self._masks = store.device_masks()
         self._tables = store.chi_table
+        self._epoch = getattr(store, "epoch", 0)
         self._rb = jnp.asarray(self.cfg.row_bounds, jnp.int32)
         self._cb = jnp.asarray(self.cfg.col_bounds, jnp.int32)
+
+    def sync(self):
+        """Re-pin the resident mask/CHI arrays after a store mutation.  The
+        store maintains its device caches incrementally (appends
+        ``device_put`` only the new chunk, updates scatter, deletes
+        gather), so this is a reference refresh, not a re-upload."""
+        if self._epoch == getattr(self.store, "epoch", 0):
+            return
+        self._masks = self.store.device_masks()
+        self._tables = self.store.chi_table
+        self._epoch = self.store.epoch
 
     def bounds(self, ctx, expr):
         return ctx.bounds(expr, cp_leaf=self._cp_bounds)
@@ -322,7 +340,9 @@ class MeshBackend(_KthValueMixin, ExecBackend):
         self.mesh = mesh
         self.n_dev = int(mesh.devices.size)
         self._masks = store.resident_masks()
-        self._tables_np = np.asarray(store.chi_table)
+        self._tables_np = (store.chi_host() if hasattr(store, "chi_host")
+                           else np.asarray(store.chi_table))
+        self._epoch = getattr(store, "epoch", 0)
         self._rb = jnp.asarray(self.cfg.row_bounds, jnp.int32)
         self._cb = jnp.asarray(self.cfg.col_bounds, jnp.int32)
         self._bounds_step = make_chi_bounds_step(mesh)
@@ -330,6 +350,17 @@ class MeshBackend(_KthValueMixin, ExecBackend):
         self._agg_step = make_mask_agg_step(mesh)
         self._multi_step = make_cp_multi_step(mesh)
         self._select_steps: dict = {}
+
+    def sync(self):
+        """Re-pin the host-resident mask/CHI arrays after a store mutation.
+        The store maintains ``resident_masks`` incrementally, so memory-tier
+        refreshes are a view swap; shards are re-padded lazily per step
+        (the mesh has no persistent sharded residency to patch)."""
+        if self._epoch == getattr(self.store, "epoch", 0):
+            return
+        self._masks = self.store.resident_masks()
+        self._tables_np = self.store.chi_host()
+        self._epoch = self.store.epoch
 
     def _pad(self, arr, fill=0):
         """Pad the leading dim to a positive device-count multiple."""
@@ -436,6 +467,7 @@ def get_backend(store, backend=None) -> ExecBackend:
     if backend is None or backend == "host":
         return _HOST
     if isinstance(backend, ExecBackend):
+        backend.sync()
         return backend
     cls = _NAMED.get(backend)
     if cls is None:
@@ -444,6 +476,8 @@ def get_backend(store, backend=None) -> ExecBackend:
     cache = store._backend_cache
     if backend not in cache:
         cache[backend] = cls(store)
+    else:
+        cache[backend].sync()
     return cache[backend]
 
 

@@ -138,6 +138,33 @@ def build_chi(masks: Array, cfg: CHIConfig) -> Array:
     return histograms_to_table(cell_histograms(masks, cfg))
 
 
+def build_chi_delta(masks: np.ndarray, cfg: CHIConfig) -> np.ndarray:
+    """CHI table rows for a *delta* batch — the incremental-ingest primitive
+    behind :meth:`repro.core.store.MaskStore.append`/``update``.
+
+    Cost is O(len(masks)), never O(database): the caller attaches the
+    returned ``(delta, G+1, G+1, NB+1)`` rows as a new chunk (append) or
+    patches them into existing chunks (update).  On accelerator backends
+    (or under the forced-interpret CI leg) the histograms go through the
+    Pallas ``chi_build`` kernel path; on plain CPU the NumPy oracle wins.
+    """
+    masks = np.asarray(masks, np.float32)
+    if masks.ndim == 2:
+        masks = masks[None]
+    if len(masks) == 0:
+        return np.zeros(cfg.table_shape(0), np.int32)
+    from ..kernels import ops as kops
+    # One dispatch policy with the kernel wrappers (ops._dispatch): the
+    # jax path on accelerators or under the forced-interpret CI leg
+    # (ops captures the flag at import), the NumPy oracle on plain CPU.
+    if jax.default_backend() in ("tpu", "gpu") or kops._FORCE_INTERPRET:
+        hist = kops.chi_cell_hist(jnp.asarray(masks),
+                                  jnp.asarray(cfg.interior_edges),
+                                  cfg.grid)
+        return np.asarray(histograms_to_table(hist), np.int32)
+    return build_chi_np(masks, cfg)
+
+
 def build_chi_np(masks: np.ndarray, cfg: CHIConfig) -> np.ndarray:
     """Numpy oracle for :func:`build_chi` (used in tests + host-side ingest)."""
     b, h, w = masks.shape

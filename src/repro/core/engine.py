@@ -42,6 +42,7 @@ import numpy as np
 from .backend import get_backend
 from .exprs import (Cmp, CP, GroupEvalContext, MaskEvalContext, Node, Pred,
                     eval_with_counts, is_group_expr)
+from .store import StaleRunError
 
 
 @dataclasses.dataclass
@@ -141,9 +142,16 @@ class _VerifyRun:
         self.exprs = tuple(exprs)
         self.verify_batch = max(int(verify_batch), 1)
         self.backend = get_backend(store, backend)
+        # Snapshot consistency (DESIGN.md §8): the run pins the epoch it was
+        # planned at and evaluates against an epoch-pinned store view, so a
+        # mutation mid-run either lets the run finish on retained data
+        # (memory tiers; untouched disk ids) or raises a clean
+        # StaleRunError — never a silent mix of old and new bytes.
+        self.epoch = getattr(store, "epoch", 0)
+        snap = store.snapshot() if hasattr(store, "snapshot") else store
         grouped = _grouped_for(self.exprs, group_by_image)
         self.ctx, self.ids, n_dropped = _make_context(
-            store, grouped, positions, mask_types, provided_rois,
+            snap, grouped, positions, mask_types, provided_rois,
             backend=self.backend)
         if (isinstance(self.ctx, MaskEvalContext) and
                 len({t for e in self.exprs for t in e.cp_terms()}) > 1):
@@ -223,14 +231,55 @@ class _VerifyRun:
     def _apply(self, batch: np.ndarray, values) -> None:
         raise NotImplementedError
 
+    def fresh(self) -> bool:
+        """Whether the store is still at the epoch this run was planned at."""
+        return self.epoch == getattr(self.store, "epoch", 0)
+
+    def resumable(self) -> bool:
+        """Whether the run can still be driven to completion: fresh, already
+        finished (no store access needed — results are run-local), or its
+        epoch-pinned snapshot can serve every remaining verification load
+        (host backend only — device/mesh residency tracks the live epoch)."""
+        if self.fresh():
+            return True
+        rest = self.pending[self.cursor:]
+        if not len(rest) or self.finished():
+            return True
+        if self.backend.name != "host":
+            return False
+        snap = self.ctx.store if isinstance(self.ctx, MaskEvalContext) \
+            else self.ctx._ctx.store
+        if not hasattr(snap, "can_serve"):
+            return True
+        if isinstance(self.ctx, MaskEvalContext):
+            positions = self.ctx.positions[rest]
+        else:
+            positions = self.ctx.groups[rest].reshape(-1)
+        return snap.can_serve(positions)
+
     def take_batch(self) -> np.ndarray:
-        """Pop the next pending chunk; caller must ``apply_exact`` it."""
-        batch = self.pending[self.cursor:self.cursor + self.verify_batch]
-        self.cursor += len(batch)
-        return batch
+        """Peek the next pending chunk; caller must ``apply_exact`` it —
+        the cursor advances only when the batch's exact values are applied,
+        so a verification failure (e.g. a :class:`StaleRunError` from the
+        snapshot load) leaves the batch pending instead of silently
+        dropping its candidates from the result.
+
+        A stale run (the store mutated since planning) can only resume on
+        the host backend, whose loads go through the run's epoch-pinned
+        snapshot; device/mesh residency has been refreshed past the pinned
+        epoch, so resuming there would silently mix old bounds with new
+        bytes — raise instead."""
+        if (self.cursor < len(self.pending) and not self.fresh()
+                and self.backend.name != "host"):
+            raise StaleRunError(
+                f"run pinned at epoch {self.epoch} cannot resume on "
+                f"backend {self.backend.name!r}: store moved to epoch "
+                f"{self.store.epoch} and its resident masks were refreshed")
+        return self.pending[self.cursor:self.cursor + self.verify_batch]
 
     def apply_exact(self, batch: np.ndarray, values) -> None:
         self._apply(batch, values)
+        self.cursor += len(batch)
         self.stats.n_verified += len(batch)
         self.stats.n_rounds += 1
 

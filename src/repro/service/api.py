@@ -34,6 +34,7 @@ from ..core.backend import get_backend
 from ..core.engine import ExecStats
 from ..core.plan import LogicalPlan, compile_plan
 from ..core.queries import Query, parse
+from ..core.store import MASK_META_DTYPE
 from .planner import Planner, roi_signature
 from .scheduler import FusedScheduler
 from .session import SessionManager
@@ -112,12 +113,14 @@ class MaskSearchService:
     def _build_run(self, plan: LogicalPlan, rois, roi_sig: str):
         """Compile the plan to its resumable run on the service's backend,
         going through the per-expression bounds cache (a hit skips that
-        CHI pass entirely)."""
+        CHI pass entirely).  Bounds keys carry the store epoch, so a
+        mutation can never feed a dead index's bounds into a new run."""
         return compile_plan(self.store, plan, provided_rois=rois,
                             verify_batch=self.verify_batch,
                             backend=self.backend,
                             bounds_hook=self.planner.bounds_hook(
-                                plan, roi_sig, self.backend.name))
+                                plan, roi_sig, self.backend.name,
+                                self.store.epoch))
 
     def _finish_payload(self, plan: LogicalPlan, run, *,
                         cache_hit: bool = False,
@@ -173,7 +176,8 @@ class MaskSearchService:
                 return self._serve_page(sess, size)
 
             cached = self.planner.cached_result(plan, roi_sig,
-                                                self.backend.name)
+                                                self.backend.name,
+                                                self.store.epoch)
             if cached is not None:
                 return self._cache_hit_payload(cached)
 
@@ -181,7 +185,7 @@ class MaskSearchService:
             run.ensure(plan.k)
             payload = self._finish_payload(plan, run)
             self.planner.store_result(plan, roi_sig, copy.deepcopy(payload),
-                                      self.backend.name)
+                                      self.backend.name, self.store.epoch)
             return payload
 
     def submit_batch(self, sqls: Sequence, *, rois=None) -> list:
@@ -196,7 +200,8 @@ class MaskSearchService:
                 self._counts["total"] += 1
                 self._counts[plan.kind] = self._counts.get(plan.kind, 0) + 1
                 cached = self.planner.cached_result(plan, roi_sig,
-                                                    self.backend.name)
+                                                    self.backend.name,
+                                                    self.store.epoch)
                 if cached is not None:
                     entries.append((plan, None, self._cache_hit_payload(cached)))
                     continue
@@ -215,7 +220,8 @@ class MaskSearchService:
                     payload = self._finish_payload(plan, run)
                     self.planner.store_result(plan, roi_sig,
                                               copy.deepcopy(payload),
-                                              self.backend.name)
+                                              self.backend.name,
+                                              self.store.epoch)
                 results.append(payload)
             return results
 
@@ -253,22 +259,116 @@ class MaskSearchService:
     def next_pages(self, requests: dict) -> dict:
         """Advance several sessions at once: their frontiers are fused into
         shared verification passes.  ``requests`` maps session_id → k
-        (None → session page size)."""
+        (None → session page size).  A session whose run can no longer be
+        served consistently (the store mutated and its snapshot cannot
+        finish) gets a per-session ``stale`` error entry instead of
+        poisoning the whole batch."""
         with self._lock:
             sessions = []
+            stale = {}
             for sid, k in requests.items():
                 sess = self.sessions.get(sid)
                 if not sess.done:
                     _, hi = sess.page_bounds(k)
                     sess.run.target(hi)
                 sessions.append((sess, k))
-            self.scheduler.drive([s.run for s, _ in sessions])
-            return {s.id: self._serve_page(s, k, scheduler_driven=True)
-                    for s, k in sessions}
+            live = []
+            for sess, k in sessions:
+                if sess.done or sess.run.resumable():
+                    live.append((sess, k))
+                else:
+                    stale[sess.id] = {
+                        "session": sess.id, "stale": True,
+                        "error": f"session pinned at epoch "
+                                 f"{sess.run.epoch}; store moved to epoch "
+                                 f"{self.store.epoch}"}
+            self.scheduler.drive([s.run for s, _ in live])
+            out = {s.id: self._serve_page(s, k, scheduler_driven=True)
+                   for s, k in live}
+            out.update(stale)
+            return out
 
     def drop_session(self, session_id: str) -> bool:
         with self._lock:
             return self.sessions.drop(session_id)
+
+    # -- mutation (the epoch-versioned write path) ------------------------
+
+    def ingest(self, masks, *, mask_ids=None, image_ids=None, model_ids=None,
+               mask_types=None, on_conflict: str = "error") -> dict:
+        """Append (or, with ``on_conflict="update"``, upsert) masks.
+
+        The model-iteration workflow: a retrained model's regenerated
+        saliency maps re-ingest under their existing mask_ids (bytes +
+        CHI rows replaced incrementally), new masks append as a new CHI
+        chunk.  Either way the store epoch advances, every cached result
+        and bounds entry from before the ingest becomes unreachable, and
+        in-flight sessions keep their pinned-epoch view (or report
+        staleness on their next page).
+
+        Metadata on the update path: fields the caller supplies
+        (``image_ids``/``model_ids``/``mask_types``) replace the existing
+        rows' values; omitted fields keep their current values.  New rows
+        default to ``image_id=mask_id``, ``model_id=0``, ``mask_type=1``.
+        """
+        if on_conflict not in ("error", "update"):
+            raise ValueError(f"on_conflict must be 'error' or 'update', "
+                             f"got {on_conflict!r}")
+        with self._lock:
+            masks = np.asarray(masks, np.float32)
+            if masks.ndim == 2:
+                masks = masks[None]
+            n = len(masks)
+            existing = self.store.mask_ids
+            if mask_ids is None:
+                base = int(existing.max()) + 1 if len(existing) else 0
+                mask_ids = np.arange(base, base + n, dtype=np.int64)
+            else:
+                mask_ids = np.asarray(mask_ids, np.int64)
+                if len(mask_ids) != n:
+                    raise ValueError("mask_ids length must match masks")
+            meta = np.zeros(n, MASK_META_DTYPE)
+            meta["mask_id"] = mask_ids
+            meta["image_id"] = (mask_ids if image_ids is None
+                                else np.asarray(image_ids, np.int64))
+            meta["model_id"] = (0 if model_ids is None
+                                else np.asarray(model_ids, np.int32))
+            meta["mask_type"] = (1 if mask_types is None
+                                 else np.asarray(mask_types, np.int32))
+            known = np.isin(mask_ids, existing)
+            if np.any(known) and on_conflict == "error":
+                raise ValueError(
+                    f"{int(known.sum())} mask_ids already exist; pass "
+                    f"on_conflict='update' to replace their bytes")
+            n_updated = n_appended = 0
+            if np.any(known):
+                upd_meta = None
+                if any(a is not None
+                       for a in (image_ids, model_ids, mask_types)):
+                    pos = self.store.positions_of(mask_ids[known])
+                    upd_meta = self.store.meta[pos].copy()
+                    for field, arg in (("image_id", image_ids),
+                                       ("model_id", model_ids),
+                                       ("mask_type", mask_types)):
+                        if arg is not None:
+                            upd_meta[field] = meta[field][known]
+                self.store.update(mask_ids[known], masks[known],
+                                  meta=upd_meta)
+                n_updated = int(known.sum())
+            if np.any(~known):
+                self.store.append(masks[~known], meta[~known])
+                n_appended = int((~known).sum())
+            return {"epoch": self.store.epoch, "appended": n_appended,
+                    "updated": n_updated, "n_masks": len(self.store),
+                    "mask_ids": _ids_list(mask_ids)}
+
+    def delete(self, mask_ids) -> dict:
+        """Delete masks by id; positions renumber, epoch advances."""
+        with self._lock:
+            ids = np.unique(np.atleast_1d(np.asarray(mask_ids, np.int64)))
+            self.store.delete(ids)
+            return {"epoch": self.store.epoch, "deleted": int(len(ids)),
+                    "n_masks": len(self.store)}
 
     # -- introspection ----------------------------------------------------
 
@@ -279,6 +379,8 @@ class MaskSearchService:
             return {
                 "uptime_s": time.monotonic() - self._started_s,
                 "backend": self.backend.name,
+                "epoch": self.store.epoch,
+                "n_masks": len(self.store),
                 "queries": dict(self._counts),
                 **self.planner.stats(),
                 "sessions": self.sessions.stats(),
@@ -289,5 +391,7 @@ class MaskSearchService:
                              "modeled_ebs_time_s": io.modeled_ebs_time_s},
                 "shared_cache": {"hits": cache.hits, "misses": cache.misses,
                                  "bytes_saved": cache.bytes_saved,
+                                 "evictions": cache.evictions,
+                                 "invalidations": cache.invalidations,
                                  "hit_rate": cache.hit_rate},
             }

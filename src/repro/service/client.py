@@ -55,6 +55,30 @@ class ServiceClient:
             body["rois"] = [[int(v) for v in row] for row in rois]
         return self._call("POST", "/workload", body)
 
+    def ingest(self, masks, *, mask_ids=None, image_ids=None, model_ids=None,
+               mask_types=None, on_conflict: str = "error") -> dict:
+        """Append/upsert masks (nested lists or arrays) into the database."""
+        body = {"masks": [[[float(v) for v in row] for row in m]
+                          for m in masks],
+                "on_conflict": on_conflict}
+        if mask_ids is not None:
+            body["mask_ids"] = [int(x) for x in mask_ids]
+        if image_ids is not None:
+            body["image_ids"] = [int(x) for x in image_ids]
+        if model_ids is not None:
+            body["model_ids"] = (int(model_ids)
+                                 if not hasattr(model_ids, "__len__")
+                                 else [int(x) for x in model_ids])
+        if mask_types is not None:
+            body["mask_types"] = (int(mask_types)
+                                  if not hasattr(mask_types, "__len__")
+                                  else [int(x) for x in mask_types])
+        return self._call("POST", "/ingest", body)
+
+    def delete_masks(self, mask_ids) -> dict:
+        return self._call("POST", "/delete",
+                          {"mask_ids": [int(x) for x in mask_ids]})
+
     def next_page(self, session_id: str, k: Optional[int] = None) -> dict:
         suffix = f"?k={int(k)}" if k is not None else ""
         return self._call("GET", f"/session/{session_id}/page{suffix}")

@@ -17,12 +17,19 @@ Two cache tiers, matching how a GUI session actually refines queries:
 
 Keys are canonical strings built from the frozen-dataclass expression reprs
 (deterministic) plus a content hash of any caller-provided ROI array.
+
+Both tiers fold the store's **epoch** into every key: the moment the mask
+database mutates (append/update/delete), every pre-epoch result and bounds
+entry becomes unreachable — a refined query after an ingest pays a fresh
+bounds pass instead of pruning against a dead index — and the unreachable
+entries age out of the LRU naturally.
 """
 
 from __future__ import annotations
 
 import dataclasses
 import hashlib
+import threading
 from collections import OrderedDict
 from typing import Optional
 
@@ -53,24 +60,28 @@ def roi_signature(rois: Optional[np.ndarray]) -> str:
     return hashlib.sha1(arr.tobytes() + str(arr.shape).encode()).hexdigest()[:16]
 
 
-def result_key(plan_or_query, roi_sig: str, backend: str = "host") -> str:
-    return "|".join([_as_plan(plan_or_query).signature(), roi_sig, backend])
+def result_key(plan_or_query, roi_sig: str, backend: str = "host",
+               epoch: int = 0) -> str:
+    return "|".join([_as_plan(plan_or_query).signature(), roi_sig, backend,
+                     f"e{int(epoch)}"])
 
 
 def bounds_key(expr: Node, plan_or_query, roi_sig: str,
-               backend: str = "host") -> str:
+               backend: str = "host", epoch: int = 0) -> str:
     """One *value expression*'s bounds-cache key: everything that pins the
     candidate set + its CHI pass — NOT op/threshold/k or the rest of the
     plan, so refined and restructured queries hit the same entries.
     Keys carry the execution backend's name: bounds are numerically
     identical across backends, but entries stay attributable (and a
-    service switching backends never serves stale placement decisions)."""
+    service switching backends never serves stale placement decisions).
+    They also carry the store epoch, so a mutation makes every pre-epoch
+    bounds pass unreachable."""
     plan = _as_plan(plan_or_query)
     return "|".join([
         expr_signature(expr),
         str(None if plan.mask_types is None
             else tuple(sorted(plan.mask_types))),
-        str(plan.grouped), roi_sig, backend,
+        str(plan.grouped), roi_sig, backend, f"e{int(epoch)}",
     ])
 
 
@@ -86,38 +97,47 @@ class CacheInfo:
 
 
 class LRUCache:
-    """Tiny ordered-dict LRU with hit/miss/eviction accounting."""
+    """Tiny ordered-dict LRU with hit/miss/eviction accounting.
+
+    Thread-safe: the service runs under ``ThreadingHTTPServer``, and a bare
+    ``OrderedDict`` corrupts under concurrent ``get``/``put`` (move_to_end
+    during iteration of a resize) — every operation holds a lock."""
 
     def __init__(self, capacity: int):
         self.capacity = max(int(capacity), 0)
         self._data: OrderedDict = OrderedDict()
+        self._lock = threading.Lock()
         self.info = CacheInfo()
 
     def get(self, key):
-        if key in self._data:
-            self._data.move_to_end(key)
-            self.info.hits += 1
-            return self._data[key]
-        self.info.misses += 1
-        return None
+        with self._lock:
+            if key in self._data:
+                self._data.move_to_end(key)
+                self.info.hits += 1
+                return self._data[key]
+            self.info.misses += 1
+            return None
 
     def put(self, key, value) -> None:
-        if self.capacity == 0:
-            return
-        if key in self._data:
-            self._data.move_to_end(key)
-        self._data[key] = value
-        while len(self._data) > self.capacity:
-            self._data.popitem(last=False)
-            self.info.evictions += 1
-        self.info.size = len(self._data)
+        with self._lock:
+            if self.capacity == 0:
+                return
+            if key in self._data:
+                self._data.move_to_end(key)
+            self._data[key] = value
+            while len(self._data) > self.capacity:
+                self._data.popitem(last=False)
+                self.info.evictions += 1
+            self.info.size = len(self._data)
 
     def __len__(self) -> int:
-        return len(self._data)
+        with self._lock:
+            return len(self._data)
 
     def clear(self) -> None:
-        self._data.clear()
-        self.info.size = 0
+        with self._lock:
+            self._data.clear()
+            self.info.size = 0
 
 
 class _PlanBoundsHook:
@@ -126,19 +146,22 @@ class _PlanBoundsHook:
     that pins the candidate set."""
 
     def __init__(self, cache: LRUCache, plan: LogicalPlan, roi_sig: str,
-                 backend: str = "host"):
+                 backend: str = "host", epoch: int = 0):
         self._cache = cache
         self._plan = plan
         self._roi_sig = roi_sig
         self._backend = backend
+        self._epoch = epoch
 
     def get(self, expr: Node):
         return self._cache.get(
-            bounds_key(expr, self._plan, self._roi_sig, self._backend))
+            bounds_key(expr, self._plan, self._roi_sig, self._backend,
+                       self._epoch))
 
     def put(self, expr: Node, lb: np.ndarray, ub: np.ndarray) -> None:
         self._cache.put(
-            bounds_key(expr, self._plan, self._roi_sig, self._backend),
+            bounds_key(expr, self._plan, self._roi_sig, self._backend,
+                       self._epoch),
             (lb, ub))
 
 
@@ -152,22 +175,23 @@ class Planner:
 
     # -- result tier ------------------------------------------------------
     def cached_result(self, plan_or_query, roi_sig: str,
-                      backend: str = "host"):
+                      backend: str = "host", epoch: int = 0):
         return self.result_cache.get(
-            result_key(plan_or_query, roi_sig, backend))
+            result_key(plan_or_query, roi_sig, backend, epoch))
 
     def store_result(self, plan_or_query, roi_sig: str, payload,
-                     backend: str = "host") -> None:
-        self.result_cache.put(result_key(plan_or_query, roi_sig, backend),
-                              payload)
+                     backend: str = "host", epoch: int = 0) -> None:
+        self.result_cache.put(
+            result_key(plan_or_query, roi_sig, backend, epoch), payload)
 
     # -- bounds tier ------------------------------------------------------
     def bounds_hook(self, plan_or_query, roi_sig: str,
-                    backend: str = "host") -> _PlanBoundsHook:
+                    backend: str = "host", epoch: int = 0) -> _PlanBoundsHook:
         """The per-expression bounds cache, scoped to one plan's candidate
-        set — hand this to :func:`repro.core.plan.compile_plan`."""
+        set at one store epoch — hand this to
+        :func:`repro.core.plan.compile_plan`."""
         return _PlanBoundsHook(self.bounds_cache, _as_plan(plan_or_query),
-                               roi_sig, backend)
+                               roi_sig, backend, epoch)
 
     def stats(self) -> dict:
         return {"result_cache": self.result_cache.info.as_dict(),

@@ -53,8 +53,13 @@ class SchedulerStats:
 
 
 def _fusable(job) -> bool:
-    """A job fuses iff its verification evaluates pure per-mask CP terms."""
+    """A job fuses iff its verification evaluates pure per-mask CP terms
+    and it is still fresh — a stale run (store mutated past its pinned
+    epoch) must verify through its own epoch-pinned snapshot, not the
+    store's current bytes."""
     if not isinstance(job.ctx, MaskEvalContext):
+        return False
+    if not job.fresh():
         return False
     terms = job.cp_terms()
     return bool(terms) and all(isinstance(t, CP) for t in terms)

@@ -8,9 +8,15 @@ Endpoints (all JSON):
   with ORDER BY … LIMIT (predicate-filtered rankings paginate too).
 * ``POST /workload`` — body ``{"sqls": ["...", ...]}`` → list of results,
   verified in fused cross-query passes.
-* ``GET /session/<id>/page?k=N`` — next page of an open session.
+* ``POST /ingest``   — body ``{"masks": [[[...]]], "mask_ids": [...]?,
+  "image_ids": [...]?, "model_ids": int|[...]?, "mask_types": int|[...]?,
+  "on_conflict": "error"|"update"}`` → append/upsert masks; CHI rows are
+  maintained incrementally and the store epoch advances.
+* ``POST /delete``   — body ``{"mask_ids": [...]}`` → remove masks.
+* ``GET /session/<id>/page?k=N`` — next page of an open session (409 if
+  the session's pinned epoch can no longer be served after a mutation).
 * ``DELETE /session/<id>``       — drop a session.
-* ``GET /stats``     — cache / I/O / session counters.
+* ``GET /stats``     — cache / I/O / session counters + the store epoch.
 * ``GET /healthz``   — liveness.
 
 Run it::
@@ -29,6 +35,7 @@ from urllib.parse import parse_qs, urlparse
 
 import numpy as np
 
+from ..core.store import StaleRunError
 from .api import MaskSearchService
 
 _SESSION_PAGE_RE = re.compile(r"^/session/([^/]+)/page$")
@@ -67,6 +74,10 @@ class ServiceHandler(BaseHTTPRequestHandler):
             self._error(400, str(e))
         except KeyError as e:
             self._error(404, str(e))
+        except StaleRunError as e:
+            # the session's pinned epoch can no longer be served after a
+            # mutation — a conflict, not a server fault
+            self._error(409, str(e))
         except Exception as e:              # noqa: BLE001 — serving loop
             self._error(500, f"{type(e).__name__}: {e}")
 
@@ -94,6 +105,26 @@ class ServiceHandler(BaseHTTPRequestHandler):
                 self._send(self.service.submit_batch(
                     body["sqls"],
                     rois=np.asarray(rois, np.int64) if rois else None))
+            return self._guard(run)
+        if path == "/ingest":
+            def run():
+                body = self._body()
+                if "masks" not in body:
+                    raise ValueError("body must contain 'masks'")
+                self._send(self.service.ingest(
+                    np.asarray(body["masks"], np.float32),
+                    mask_ids=body.get("mask_ids"),
+                    image_ids=body.get("image_ids"),
+                    model_ids=body.get("model_ids"),
+                    mask_types=body.get("mask_types"),
+                    on_conflict=body.get("on_conflict", "error")))
+            return self._guard(run)
+        if path == "/delete":
+            def run():
+                body = self._body()
+                if "mask_ids" not in body:
+                    raise ValueError("body must contain 'mask_ids'")
+                self._send(self.service.delete(body["mask_ids"]))
             return self._guard(run)
         self._error(404, f"no route {path}")
 

@@ -148,6 +148,68 @@ def test_group_plans_equivalent(db, agg):
     _assert_equivalent(_run_all(store, iou, rois), "group-iou")
 
 
+# -- mutation sequences (epoch-versioned store, DESIGN.md §8) ----------------
+
+
+def test_backends_equivalent_across_mutation_sequence():
+    """After any interleaving of append/update/delete, host/device/mesh
+    must return bit-identical ids/scores and the chunked CHI must equal a
+    from-scratch rebuild — the backends' resident copies refresh per epoch
+    via their sync() hook."""
+    from repro.core.chi import build_chi_np
+
+    n0, extra = 16, 8
+    all_rois = object_boxes(n0 + 2 * extra, H, W, seed=21)
+    all_masks, _ = saliency_masks(n0 + 2 * extra, H, W, seed=20,
+                                  attacked_fraction=0.3, boxes=all_rois)
+    meta = np.zeros(n0 + 2 * extra, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(n0 + 2 * extra)
+    meta["image_id"] = np.arange(n0 + 2 * extra) // 2
+    meta["mask_type"] = np.arange(n0 + 2 * extra) % 3 + 1
+    cfg = CHIConfig(grid=4, num_bins=8, height=H, width=W)
+    store = MaskStore.create_memory(all_masks[:n0], meta[:n0], cfg)
+    # Mirror keyed by mask_id: appends happen in id order and deletes keep
+    # relative order, so store rows == sorted active ids throughout.
+    by_id = np.asarray(all_masks, np.float32).copy()
+    active = np.zeros(n0 + 2 * extra, bool)
+    active[:n0] = True
+
+    rng = np.random.default_rng(33)
+    plans = [
+        LogicalPlan(order_by=CP(None, 0.2, 0.6), k=5),
+        LogicalPlan(predicate=Cmp(CP((4, 4, 28, 28), 0.5, 1.0), ">", 40.0),
+                    order_by=BinOp("/", CP("provided", 0.5, 1.0),
+                                   RoiArea("provided")), k=4),
+    ]
+
+    def check():
+        np.testing.assert_array_equal(store.mask_ids, np.nonzero(active)[0])
+        np.testing.assert_array_equal(store.chi_host(),
+                                      build_chi_np(by_id[active], cfg))
+        for plan in plans:
+            _assert_equivalent(_run_all(store, plan, all_rois[active]),
+                               repr(plan))
+
+    # append the first extra block
+    store.append(all_masks[n0:n0 + extra], meta[n0:n0 + extra])
+    active[n0:n0 + extra] = True
+    check()
+    # update a few rows in place
+    upd = rng.choice(np.nonzero(active)[0], size=3, replace=False)
+    new = np.clip(rng.random((3, H, W)).astype(np.float32), 0, 1)
+    store.update(upd, new)
+    by_id[upd] = new
+    check()
+    # delete a few, then append the second block
+    dele = rng.choice(np.nonzero(active)[0], size=2, replace=False)
+    store.delete(dele)
+    active[dele] = False
+    check()
+    store.append(all_masks[n0 + extra:], meta[n0 + extra:])
+    active[n0 + extra:] = True
+    check()
+
+
 # -- the physical primitives in isolation ------------------------------------
 
 

@@ -115,3 +115,69 @@ def test_ranking_backends_agree(rank, desc, k):
 def test_filtered_topk_backends_agree(pred, rank, desc, k):
     _assert_backends_agree(
         LogicalPlan(predicate=pred, order_by=rank, k=k, desc=desc))
+
+
+# -- mutation sequences (epoch-versioned store) ------------------------------
+
+_ops = st.lists(
+    st.one_of(
+        st.tuples(st.just("append"), st.integers(1, 3), st.integers(0, 9)),
+        st.tuples(st.just("update"), st.integers(1, 3), st.integers(0, 9)),
+        st.tuples(st.just("delete"), st.integers(1, 2), st.integers(0, 9)),
+    ),
+    min_size=1, max_size=5)
+
+
+@settings(max_examples=15, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(ops=_ops)
+def test_mutation_sequences_preserve_index_and_results(ops):
+    """Any interleaving of append/update/delete leaves the chunked CHI
+    equal to a from-scratch ``build_chi_np`` and query results equal to a
+    freshly built store over the same bytes."""
+    from repro.core.chi import build_chi_np
+
+    rng = np.random.default_rng(7)
+    masks0, _ = saliency_masks(12, H, W, seed=2, attacked_fraction=0.3,
+                               boxes=object_boxes(12, H, W, seed=3))
+    meta0 = np.zeros(12, MASK_META_DTYPE)
+    meta0["mask_id"] = np.arange(12)
+    cfg = CHIConfig(grid=4, num_bins=8, height=H, width=W)
+    store = MaskStore.create_memory(masks0, meta0, cfg)
+    current = np.asarray(masks0, np.float32).copy()
+    ids = list(range(12))
+    next_id = 100
+    for kind, n, seed in ops:
+        if kind == "append":
+            add = rng.random((n, H, W)).astype(np.float32)
+            meta = np.zeros(n, MASK_META_DTYPE)
+            meta["mask_id"] = next_id + np.arange(n)
+            next_id += n
+            store.append(add, meta)
+            current = np.concatenate([current, add])
+            ids.extend(meta["mask_id"])
+        elif kind == "update":
+            sel = (np.arange(n) * (seed + 1)) % len(ids)
+            sel = np.unique(sel)
+            new = rng.random((len(sel), H, W)).astype(np.float32)
+            store.update([ids[i] for i in sel], new)
+            current[sel] = new
+        else:
+            if len(ids) <= 3:
+                continue
+            sel = np.unique((np.arange(n) * (seed + 1)) % len(ids))
+            store.delete([ids[i] for i in sel])
+            keep = np.ones(len(ids), bool)
+            keep[sel] = False
+            current = current[keep]
+            ids = [m for i, m in enumerate(ids) if keep[i]]
+    np.testing.assert_array_equal(store.chi_host(),
+                                  build_chi_np(current, cfg))
+    meta = np.zeros(len(ids), MASK_META_DTYPE)
+    meta["mask_id"] = ids
+    fresh = MaskStore.create_memory(current, meta, cfg)
+    plan = LogicalPlan(order_by=CP(None, 0.2, 0.6), k=min(5, len(ids)))
+    (got_ids, got_scores), _ = run_plan(store, plan)
+    (ref_ids, ref_scores), _ = run_plan(fresh, plan)
+    np.testing.assert_array_equal(got_ids, ref_ids)
+    np.testing.assert_array_equal(got_scores, ref_scores)
