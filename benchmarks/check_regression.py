@@ -1,0 +1,86 @@
+"""CI bench-regression gate: compare a tiny-mode bench run against the
+committed ``BENCH_*.json`` baseline.
+
+Committed baselines carry two records: the full-scale measurement (the
+headline numbers) and a ``"tiny"`` section produced with the exact flags
+the CI ``bench-smoke`` job uses — so the gate compares apples to apples.
+The gated metrics are the **pruned-vs-naive bytes ratios**: they are
+seed-deterministic (mask data, bounds and verification order are all
+seeded), so a drop means a real pruning/accounting regression, not CI
+noise.  Latency ratios ride along in the uploaded artifact but are not
+gated (shared CI runners make wall time a coin flip).
+
+A metric fails when it regresses by more than ``--max-regression``:
+``current < baseline / max_regression``.
+
+    python benchmarks/check_regression.py \
+        --baseline BENCH_pair.json --current /tmp/bench_pair.json \
+        --metrics pair_iou_topk.bytes_ratio,pair_filter.bytes_ratio
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def lookup(record: dict, dotted: str):
+    node = record
+    for part in dotted.split("."):
+        if not isinstance(node, dict) or part not in node:
+            return None
+        node = node[part]
+    return node
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", required=True,
+                    help="committed BENCH_*.json (its 'tiny' section is "
+                         "used when present)")
+    ap.add_argument("--current", required=True,
+                    help="JSON produced by the tiny-mode CI run")
+    ap.add_argument("--metrics", required=True,
+                    help="comma-separated dotted paths, e.g. "
+                         "pair_iou_topk.bytes_ratio")
+    ap.add_argument("--max-regression", type=float, default=2.5,
+                    help="fail when current < baseline / this factor")
+    args = ap.parse_args()
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    baseline = baseline.get("tiny", baseline)
+    with open(args.current) as f:
+        current = json.load(f)
+
+    failures = []
+    for metric in args.metrics.split(","):
+        metric = metric.strip()
+        base = lookup(baseline, metric)
+        cur = lookup(current, metric)
+        if base is None:
+            print(f"SKIP {metric}: not in baseline ({args.baseline})")
+            continue
+        if cur is None:
+            failures.append(f"{metric}: missing from current run")
+            continue
+        floor = float(base) / args.max_regression
+        status = "FAIL" if float(cur) < floor else "ok"
+        print(f"{status:4s} {metric}: current={float(cur):.3f} "
+              f"baseline={float(base):.3f} floor={floor:.3f}")
+        if status == "FAIL":
+            failures.append(
+                f"{metric}: {float(cur):.3f} < {floor:.3f} "
+                f"(baseline {float(base):.3f} / {args.max_regression}x)")
+    if failures:
+        print("\nbench regression gate FAILED:", file=sys.stderr)
+        for f in failures:
+            print(f"  {f}", file=sys.stderr)
+        return 1
+    print("bench regression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -20,12 +20,13 @@ from .backend import (DeviceBackend, ExecBackend, HostBackend,  # noqa: F401
 from .chi import (CHIConfig, build_chi, build_chi_delta,  # noqa: F401
                   build_chi_np, chi_bounds)
 from .engine import (ExecStats, FilteredTopKRun, FilterRun,  # noqa: F401
-                     MinMaxAggRun, ScalarAggRun, TopKRun,
+                     MinMaxAggRun, PairFilteredTopKRun, PairFilterRun,
+                     PairTopKRun, ScalarAggRun, TopKRun,
                      filter_query, filtered_topk_query, scalar_agg,
                      topk_query)
 from .cp import cp_exact, cp_exact_np, full_roi  # noqa: F401
 from .exprs import (CP, AggCP, And, BinOp, Cmp, Const, Not, Or,  # noqa: F401
-                    Pred, RoiArea, TypeIn)
+                    PairTerm, Pred, RoiArea, TypeIn, pair_iou)
 from .plan import LogicalPlan, compile_plan, run_plan  # noqa: F401
 from .queries import parse, parse_plan, run  # noqa: F401
 from .store import (MASK_META_DTYPE, IOStats, MaskStore,  # noqa: F401

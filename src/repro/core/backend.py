@@ -19,7 +19,12 @@ vector backends.  Four primitives cover every plan the IR can express:
                                      group verification.
 
 plus ``fused_counts`` — the service scheduler's cross-query
-``cp_count_multi`` pass, run on whichever backend owns the store.
+``cp_count_multi`` pass, run on whichever backend owns the store — and
+the dual-mask pair primitives (DESIGN.md §9): ``fused_pair_counts``
+(Q pair descriptors over a batch of per-image mask pairs → (Q, 3, B)
+inter/union/diff counts) with the shared driver ``pair_verify_counts``
+(pair bounds stay host-side: the cell decomposition needs per-cell CHI
+counts, and sharing that code path keeps pruning bit-identical).
 
 Three implementations:
 
@@ -57,7 +62,8 @@ from ..kernels import ops as kops
 from .distributed import (_bounds_from_corners, device_resolve,
                           make_chi_bounds_step, make_cp_multi_step,
                           make_mask_agg_step, make_mesh,
-                          make_topk_select_step, make_verify_step, value_ks)
+                          make_pair_counts_step, make_topk_select_step,
+                          make_verify_step, value_ks)
 
 F32_MAX = 3.4e38  # finite stand-in for +inf in float32 kernel compares
 _F32_MAX = F32_MAX
@@ -115,6 +121,39 @@ class ExecBackend:
         over the bytes."""
         raise NotImplementedError
 
+    PAIR_STAT_ROW = {"inter": 0, "union": 1, "diff": 2}
+
+    def fused_pair_counts(self, store, pos_a: np.ndarray, pos_b: np.ndarray,
+                          specs) -> np.ndarray:
+        """Dual-mask pass: Q ``(rois, ta, tb)`` descriptors over the
+        per-image mask pairs ``(pos_a[i], pos_b[i])`` → (Q, 3, B) counts —
+        rows indexed by :attr:`PAIR_STAT_ROW` (inter / union / diff=|A∖B|).
+        Each pair's bytes are touched once per descriptor batch; all three
+        stats come from that one pass (DESIGN.md §9)."""
+        raise NotImplementedError
+
+    def pair_verify_counts(self, pctx, batch: np.ndarray, terms) -> dict:
+        """Exact pair-term counts for one verification batch: pair term →
+        float64 array aligned with ``batch`` (candidate indices into
+        ``pctx``).  Terms sharing a (ta, tb, roi) pair spec — e.g. IoU's
+        intersection and union — are answered by a single fused kernel
+        pass.  Shared driver; the physical pass is
+        :meth:`fused_pair_counts`."""
+        terms = list(terms)
+        batch = np.asarray(batch)
+        spec_ix: dict = {}
+        specs: list = []
+        for t in terms:
+            key = (t.ta, t.tb, t.roi)
+            if key not in spec_ix:
+                spec_ix[key] = len(specs)
+                specs.append((pctx.pair_rois(t.roi, batch), t.ta, t.tb))
+        counts = self.fused_pair_counts(pctx.store, pctx.pos_a[batch],
+                                        pctx.pos_b[batch], specs)
+        return {t: np.asarray(counts[spec_ix[(t.ta, t.tb, t.roi)],
+                                     self.PAIR_STAT_ROW[t.stat]], np.float64)
+                for t in terms}
+
 
 # ---------------------------------------------------------------------------
 # Host — the extracted NumPy / MaskEvalContext physical layer
@@ -169,6 +208,23 @@ class HostBackend(ExecBackend):
         return np.asarray(kops.cp_count_multi(
             jnp.asarray(masks), jnp.asarray(rois_q),
             jnp.asarray(lvs), jnp.asarray(uvs)))
+
+    def fused_pair_counts(self, store, pos_a, pos_b, specs):
+        # One metered load of the *union* of both roles' rows — a mask
+        # shared by several pairs (or both roles) pays its bytes once.
+        pos_a, pos_b = np.asarray(pos_a), np.asarray(pos_b)
+        upos = np.unique(np.concatenate([pos_a, pos_b]))
+        loaded = store.load(upos)
+        a = jnp.asarray(loaded[np.searchsorted(upos, pos_a)])
+        b = jnp.asarray(loaded[np.searchsorted(upos, pos_b)])
+        out = np.empty((len(specs), 3, len(pos_a)), np.int64)
+        for qi, (rois, ta, tb) in enumerate(specs):
+            trio = kops.pair_counts(a, b, jnp.asarray(rois, jnp.int32),
+                                    jnp.asarray(ta, a.dtype),
+                                    jnp.asarray(tb, a.dtype))
+            for row, counts in enumerate(trio):
+                out[qi, row] = np.asarray(counts)
+        return out
 
 
 # ---------------------------------------------------------------------------
@@ -318,6 +374,21 @@ class DeviceBackend(_KthValueMixin, ExecBackend):
             self._masks, jnp.asarray(np.asarray(positions)),
             jnp.asarray(rois_q), jnp.asarray(lvs), jnp.asarray(uvs)))
 
+    def fused_pair_counts(self, store, pos_a, pos_b, specs):
+        # Both roles are resident (the store's one HBM mask array); gather
+        # each role ONCE and answer every descriptor against the gathered
+        # batch — zero metered bytes, 2 gathers regardless of Q.
+        a = self._masks[jnp.asarray(np.asarray(pos_a))]
+        b = self._masks[jnp.asarray(np.asarray(pos_b))]
+        out = np.empty((len(specs), 3, len(pos_a)), np.int64)
+        for qi, (rois, ta, tb) in enumerate(specs):
+            trio = kops.pair_counts(
+                a, b, jnp.asarray(np.asarray(rois), jnp.int32),
+                jnp.asarray(ta, a.dtype), jnp.asarray(tb, a.dtype))
+            for row, counts in enumerate(trio):
+                out[qi, row] = np.asarray(counts)
+        return out
+
 
 # ---------------------------------------------------------------------------
 # Mesh — distributed.py's step functions over shard_map
@@ -349,6 +420,7 @@ class MeshBackend(_KthValueMixin, ExecBackend):
         self._verify_step = make_verify_step(mesh)
         self._agg_step = make_mask_agg_step(mesh)
         self._multi_step = make_cp_multi_step(mesh)
+        self._pair_step = make_pair_counts_step(mesh)
         self._select_steps: dict = {}
 
     def sync(self):
@@ -441,6 +513,20 @@ class MeshBackend(_KthValueMixin, ExecBackend):
              for sp in specs])
         counts = self._multi_step(masks_p, rois_q, lvs, uvs)
         return np.asarray(counts)[:, :n]
+
+    def fused_pair_counts(self, store, pos_a, pos_b, specs):
+        # Pair rows shard together: the i-th pair's A and B tiles land on
+        # the same device, so the fused kernel needs no collective.
+        a_p, n = self._pad(self._masks[np.asarray(pos_a)])
+        b_p, _ = self._pad(self._masks[np.asarray(pos_b)])
+        out = np.empty((len(specs), 3, n), np.int64)
+        for qi, (rois, ta, tb) in enumerate(specs):
+            rois_p, _ = self._pad(np.asarray(rois, np.int32))
+            trio = self._pair_step(a_p, b_p, rois_p, jnp.float32(ta),
+                                   jnp.float32(tb))
+            for row, counts in enumerate(trio):
+                out[qi, row] = np.asarray(counts)[:n]
+        return out
 
 
 # ---------------------------------------------------------------------------

@@ -341,6 +341,33 @@ def make_cp_multi_step(mesh: Mesh):
     )
 
 
+def make_pair_counts_step(mesh: Mesh):
+    """Fused dual-mask pair counts, pair rows sharded over all devices —
+    the mesh backend's verification pass for the discrepancy (pair) query
+    class (DESIGN.md §9).  The i-th rows of ``masks_a`` and ``masks_b``
+    are one image's role pair and shard to the same device, so the kernel
+    runs collective-free; on TPU it dispatches to the Pallas
+    ``pair_count`` kernel.
+
+    Signature: (masks_a (B,H,W), masks_b (B,H,W), rois (B,4), ta (), tb ())
+      → (inter (B,), union (B,), diff (B,)) int32.
+    """
+    axes = db_axes(mesh)
+
+    def step(masks_a, masks_b, rois, ta, tb):
+        return kops.pair_counts(masks_a, masks_b, rois, ta, tb)
+
+    row = NamedSharding(mesh, P(axes))
+    rep = replicated(mesh)
+    return jax.jit(
+        step,
+        in_shardings=(NamedSharding(mesh, P(axes, None, None)),
+                      NamedSharding(mesh, P(axes, None, None)),
+                      NamedSharding(mesh, P(axes, None)), rep, rep),
+        out_shardings=(row, row, row),
+    )
+
+
 def make_iou_agg_step(mesh: Mesh):
     """Fused group IoU: masks (Ngroups, n_types, H, W) → IoU scores.
 

@@ -18,7 +18,9 @@ Every query runs in two phases:
 
 Physical execution is uniform: every run object — :class:`FilterRun`,
 :class:`TopKRun`, :class:`FilteredTopKRun`, :class:`ScalarAggRun`,
-:class:`MinMaxAggRun` — presents ``target / take_batch / apply_exact /
+:class:`MinMaxAggRun`, and the dual-mask :class:`PairFilterRun` /
+:class:`PairTopKRun` / :class:`PairFilteredTopKRun` (DESIGN.md §9) —
+presents ``target / take_batch / apply_exact /
 finished / result`` (DESIGN.md §6), so sessions resume any of them and the
 service scheduler fuses their verification batches without knowing which
 operator it is driving.  The runs themselves are backend-agnostic drivers:
@@ -40,8 +42,9 @@ from typing import Optional
 import numpy as np
 
 from .backend import get_backend
-from .exprs import (Cmp, CP, GroupEvalContext, MaskEvalContext, Node, Pred,
-                    eval_with_counts, is_group_expr)
+from .exprs import (Cmp, CP, GroupEvalContext, MaskEvalContext, Node,
+                    PairEvalContext, PairTerm, Pred, eval_with_counts,
+                    is_group_expr, pair_roles_of)
 from .store import StaleRunError
 
 
@@ -62,16 +65,43 @@ class ExecStats:
         return self.n_verified / max(self.n_candidates, 1)
 
 
-def _make_context(store, grouped: bool, positions, mask_types, provided_rois,
-                  partial_rows: bool = True, backend=None):
+def _make_context(store, exprs, group_by_image: bool, positions, mask_types,
+                  provided_rois, partial_rows: bool = True, backend=None):
     """Build the evaluation context + the id array that results refer to.
+
+    The unit of evaluation comes from the expressions: pair terms →
+    :class:`PairEvalContext` over per-image (role_a, role_b) mask rows;
+    MASK_AGG terms (or explicit grouping) → :class:`GroupEvalContext`;
+    otherwise :class:`MaskEvalContext` per mask.
 
     Returns ``(ctx, ids, n_dropped)`` — ``n_dropped`` counts masks excluded
     from ragged image groups (grouped evaluation needs one rectangular
     ``(n_groups, size)`` block, so images with more masks than the smallest
     group keep only their first ``size``; the caller surfaces the count in
-    ``ExecStats.n_dropped_masks`` instead of losing it silently).
+    ``ExecStats.n_dropped_masks`` instead of losing it silently).  For pair
+    contexts it counts role-A/role-B masks excluded from evaluation —
+    duplicates beyond the first per (image, role) plus masks whose image
+    lacks the partner role.
     """
+    exprs = tuple(exprs)
+    roles = pair_roles_of(exprs)
+    if roles is not None:
+        # Engine-level callers bypass LogicalPlan.validate — enforce the
+        # same invariants here so they get clear errors, not silently
+        # dropped restrictions or a TypeError deep in bounds().
+        mixed = [t for e in exprs for t in e.cp_terms()
+                 if not isinstance(t, PairTerm)]
+        if mixed:
+            raise ValueError(
+                "a dual-mask (pair) query cannot mix in per-mask CP or "
+                f"MASK_AGG terms (offending: {mixed[0]!r})")
+        if mask_types is not None:
+            raise ValueError(
+                "pair queries select their masks by role (the two "
+                "mask_types named in the pair terms); drop mask_types")
+        return _make_pair_context(store, roles, positions, provided_rois,
+                                  backend)
+    grouped = _grouped_for(exprs, group_by_image)
     if grouped:
         sel = (store.select(mask_type=mask_types) if mask_types is not None
                else np.arange(len(store)))
@@ -107,6 +137,29 @@ def _make_context(store, grouped: bool, positions, mask_types, provided_rois,
                           partial_rows=partial_rows)
     ctx.backend = backend
     return ctx, store.meta["mask_id"][positions], 0
+
+
+def _make_pair_context(store, roles, positions, provided_rois, backend):
+    """Per-image pairing: for each image present in **both** roles, pair
+    its first role-A mask with its first role-B mask (ascending store
+    position — deterministic across runs and backends)."""
+    sel_a = store.select(mask_type=roles[0])
+    sel_b = store.select(mask_type=roles[1])
+    if positions is not None:
+        positions = np.asarray(positions)
+        sel_a = np.intersect1d(sel_a, positions)
+        sel_b = np.intersect1d(sel_b, positions)
+    uniq_a, first_a = np.unique(store.meta["image_id"][sel_a],
+                                return_index=True)
+    uniq_b, first_b = np.unique(store.meta["image_id"][sel_b],
+                                return_index=True)
+    common, ia, ib = np.intersect1d(uniq_a, uniq_b, return_indices=True)
+    pos_a = sel_a[first_a[ia]]
+    pos_b = sel_b[first_b[ib]]
+    n_dropped = int(len(sel_a) + len(sel_b) - 2 * len(common))
+    ctx = PairEvalContext(store, pos_a, pos_b, common, roles, provided_rois)
+    ctx.backend = backend
+    return ctx, common, n_dropped
 
 
 def _grouped_for(exprs, group_by_image: bool) -> bool:
@@ -149,10 +202,9 @@ class _VerifyRun:
         # StaleRunError — never a silent mix of old and new bytes.
         self.epoch = getattr(store, "epoch", 0)
         snap = store.snapshot() if hasattr(store, "snapshot") else store
-        grouped = _grouped_for(self.exprs, group_by_image)
         self.ctx, self.ids, n_dropped = _make_context(
-            snap, grouped, positions, mask_types, provided_rois,
-            backend=self.backend)
+            snap, self.exprs, group_by_image, positions, mask_types,
+            provided_rois, backend=self.backend)
         if (isinstance(self.ctx, MaskEvalContext) and
                 len({t for e in self.exprs for t in e.cp_terms()}) > 1):
             # ROI-row partial loads only pay off for a single distinct CP
@@ -210,14 +262,18 @@ class _VerifyRun:
         raise NotImplementedError
 
     def _self_counts(self, batch: np.ndarray):
-        """Per-CP-term exact counts for ``batch``, evaluated **once per
+        """Per-term exact counts for ``batch``, evaluated **once per
         distinct term** by the run's backend (a predicate and a ranking
         sharing an expression share its loads/kernel rows even in
         self-verification), or None when the run isn't a pure per-mask CP
-        evaluation."""
+        or pure pair-term evaluation."""
+        terms = set(self.cp_terms())
+        if isinstance(self.ctx, PairEvalContext):
+            if terms and all(isinstance(t, PairTerm) for t in terms):
+                return self.backend.pair_verify_counts(self.ctx, batch, terms)
+            return None
         if not isinstance(self.ctx, MaskEvalContext):
             return None
-        terms = set(self.cp_terms())
         if terms and all(isinstance(t, CP) for t in terms):
             return self.backend.verify_counts(self.ctx, batch, terms)
         return None
@@ -247,12 +303,14 @@ class _VerifyRun:
             return True
         if self.backend.name != "host":
             return False
-        snap = self.ctx.store if isinstance(self.ctx, MaskEvalContext) \
-            else self.ctx._ctx.store
+        snap = self.ctx.store
         if not hasattr(snap, "can_serve"):
             return True
         if isinstance(self.ctx, MaskEvalContext):
             positions = self.ctx.positions[rest]
+        elif isinstance(self.ctx, PairEvalContext):
+            positions = np.concatenate([self.ctx.pos_a[rest],
+                                        self.ctx.pos_b[rest]])
         else:
             positions = self.ctx.groups[rest].reshape(-1)
         return snap.can_serve(positions)
@@ -380,8 +438,8 @@ def filter_query(store, expr_or_pred, op: Optional[str] = None,
     """
     pred = _as_pred(expr_or_pred, op, threshold)
     if not use_index:
-        grouped = _grouped_for(pred.value_exprs(), group_by_image)
-        ctx, ids, n_dropped = _make_context(store, grouped, positions,
+        ctx, ids, n_dropped = _make_context(store, pred.value_exprs(),
+                                            group_by_image, positions,
                                             mask_types, provided_rois,
                                             partial_rows=False)
         n = len(ids)
@@ -549,9 +607,9 @@ def topk_query(store, expr: Node, k: int, *, desc: bool = True,
                bounds=None, backend=None):
     """``SELECT ... ORDER BY expr {DESC|ASC} LIMIT k`` → (ids, scores, stats)."""
     if not use_index:
-        grouped = _grouped_for([expr], group_by_image)
-        ctx, ids, n_dropped = _make_context(store, grouped, positions,
-                                            mask_types, provided_rois)
+        ctx, ids, n_dropped = _make_context(store, [expr], group_by_image,
+                                            positions, mask_types,
+                                            provided_rois)
         n = len(ids)
         k = min(k, n)
         stats = ExecStats(n_candidates=n, n_dropped_masks=n_dropped)
@@ -658,9 +716,9 @@ def filtered_topk_query(store, pred: Pred, expr: Node, k: int, *,
                         backend=None):
     """``WHERE predicate ORDER BY expr LIMIT k`` → (ids, scores, stats)."""
     if not use_index:
-        grouped = _grouped_for(list(pred.value_exprs()) + [expr],
-                               group_by_image)
-        ctx, ids, n_dropped = _make_context(store, grouped, positions,
+        ctx, ids, n_dropped = _make_context(store,
+                                            list(pred.value_exprs()) + [expr],
+                                            group_by_image, positions,
                                             mask_types, provided_rois,
                                             partial_rows=False)
         n = len(ids)
@@ -682,6 +740,66 @@ def filtered_topk_query(store, pred: Pred, expr: Node, k: int, *,
     run.ensure(k)
     ids, scores = run.result()
     return ids, scores, run.stats
+
+
+# ---------------------------------------------------------------------------
+# Dual-mask (pair) runs — the paper's discrepancy queries as plan operators
+# ---------------------------------------------------------------------------
+
+
+class _PairRunMixin:
+    """Shared surface of the dual-mask physical operators (DESIGN.md §9).
+
+    All frontier machinery is inherited unchanged — a pair run is the same
+    filter–verification drive over a :class:`PairEvalContext` whose
+    candidates are per-image (role_a, role_b) mask pairs: bounds combine
+    the two roles' CHI passes (:func:`repro.core.exprs.pair_stat_bounds`),
+    verification answers every pair term of the plan from one fused
+    dual-mask kernel pass per batch (``ExecBackend.pair_verify_counts``),
+    and results refer to **image ids**.  The pruning win is squared
+    relative to single-mask plans: skipping a pair skips the bytes of
+    *two* masks.
+    """
+
+    @property
+    def roles(self) -> tuple:
+        """The (role_a, role_b) mask-type pair this run evaluates."""
+        return self.ctx.roles
+
+    def _check_pair_ctx(self) -> None:
+        if not isinstance(self.ctx, PairEvalContext):
+            raise ValueError(
+                "pair run compiled without pair terms — use the plain "
+                "FilterRun/TopKRun classes (or compile_plan) instead")
+
+
+class PairFilterRun(_PairRunMixin, FilterRun):
+    """``SELECT image_id WHERE <pair predicate>`` — e.g. images whose
+    saliency∖attention difference count exceeds a threshold."""
+
+    def __init__(self, store, expr_or_pred, *args, **kw):
+        super().__init__(store, expr_or_pred, *args, **kw)
+        self._check_pair_ctx()
+
+
+class PairTopKRun(_PairRunMixin, TopKRun):
+    """``SELECT image_id ORDER BY <pair expr> LIMIT k`` — e.g. the paper's
+    saliency-vs-attention discrepancy ranking ``ORDER BY IOU(a, b, t, t)
+    ASC LIMIT 25``."""
+
+    def __init__(self, store, expr, **kw):
+        super().__init__(store, expr, **kw)
+        self._check_pair_ctx()
+
+
+class PairFilteredTopKRun(_PairRunMixin, FilteredTopKRun):
+    """Pair predicate + pair ranking in one run: the predicate truth and
+    the exact score of one image resolve from a single load of its two
+    masks."""
+
+    def __init__(self, store, pred, expr, **kw):
+        super().__init__(store, pred, expr, **kw)
+        self._check_pair_ctx()
 
 
 # ---------------------------------------------------------------------------
@@ -776,8 +894,7 @@ def scalar_agg(store, expr: Node, agg: str, *,
                                           use_index=False, **common)
             value = float(scores[0]) if len(scores) else float("nan")
             return value, stats
-        grouped = _grouped_for([expr], False)
-        ctx, ids, n_dropped = _make_context(store, grouped, positions,
+        ctx, ids, n_dropped = _make_context(store, [expr], False, positions,
                                             mask_types, provided_rois,
                                             partial_rows=False)
         n = len(ids)

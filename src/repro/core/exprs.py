@@ -125,6 +125,150 @@ class AggCP(Node):
 
 
 @dataclasses.dataclass(frozen=True)
+class PairTerm(Node):
+    """A per-image function of **two** mask roles (DESIGN.md §9).
+
+    Roles are mask_types: for each image the plan pairs its first role-A
+    mask with its first role-B mask, thresholds them (``> ta`` / ``> tb``)
+    and counts, inside the pair's ROI, the pixels of
+
+        ``stat="inter"`` — A∩B,   ``stat="union"`` — A∪B,
+        ``stat="diff"``  — A∖B  (|B∖A| is the same term with roles swapped).
+
+    IoU and every other pair statistic are expression trees over these
+    three counts (see :func:`pair_iou`), so interval arithmetic, the
+    guarded division and fused verification all come for free.  Bounds
+    derive from each role's CHI tables alone (no mask bytes) — the sound
+    combination rules over thresholded-count bounds (lo_X, hi_X) of a
+    region of area ``|R|``:
+
+        inter:  max(0, lo_A + lo_B − |R|) ≤ · ≤ min(hi_A, hi_B)
+        union:  max(lo_A, lo_B)           ≤ · ≤ min(|R|, hi_A + hi_B)
+        diff:   max(0, lo_A − hi_B)       ≤ · ≤ min(hi_A, |R| − lo_B)
+
+    (diff = A ∩ Bᶜ with Bᶜ's count in [|R|−hi_B, |R|−lo_B]) — applied
+    **per CHI cell** and summed (:func:`pair_cell_bounds`), which is
+    always at least as tight as applying them to the whole ROI and is
+    what makes spatial-discrepancy pruning work at all.
+    """
+
+    stat: str     # "inter" | "union" | "diff"
+    role_a: int   # mask_type of role A (e.g. 1 = model saliency)
+    role_b: int   # mask_type of role B (e.g. 2 = human attention)
+    ta: float     # threshold for A (binary A = mask_A > ta)
+    tb: float     # threshold for B
+    roi: object = None   # None | (r0,c0,r1,c1) | "provided"
+
+    def __post_init__(self):
+        if self.stat not in ("inter", "union", "diff"):
+            raise ValueError(f"unknown pair stat {self.stat!r}")
+
+    def cp_terms(self):
+        return [self]
+
+
+def pair_iou(role_a: int, role_b: int, ta: float, tb: float,
+             roi=None) -> Node:
+    """``IOU(role_a, role_b, ta, tb)`` as an expression tree: the ratio of
+    the pair's intersection and union counts.  Both terms share one
+    (ta, tb, roi) pair spec, so verification answers them from a single
+    fused kernel pass over the two masks."""
+    return BinOp("/", PairTerm("inter", role_a, role_b, ta, tb, roi),
+                 PairTerm("union", role_a, role_b, ta, tb, roi))
+
+
+def pair_stat_bounds(stat: str, a_lb, a_ub, b_lb, b_ub, area):
+    """Sound (lb, ub) for one pair stat from *aggregate* thresholded-count
+    bounds over one region (see :class:`PairTerm`).  This is the area-level
+    combination rule; execution uses its cell-decomposed refinement
+    (:func:`pair_cell_bounds`), which applies these same formulas per CHI
+    cell and is therefore always at least as tight — kept as the
+    documented algebra and the property-test envelope."""
+    if stat == "inter":
+        return (np.maximum(0.0, a_lb + b_lb - area),
+                np.minimum(a_ub, b_ub))
+    if stat == "union":
+        return (np.maximum(a_lb, b_lb),
+                np.minimum(area, a_ub + b_ub))
+    if stat == "diff":
+        return (np.maximum(0.0, a_lb - b_ub),
+                np.minimum(a_ub, area - b_lb))
+    raise ValueError(f"unknown pair stat {stat!r}")
+
+
+def _threshold_ks(cfg, thresh: float) -> tuple[int, int]:
+    """CHI value-edge indices (inner, outer) for the strict ``> thresh``
+    count.  ``[nextafter32(t), ∞)`` contains exactly the float32 values
+    strictly above ``t``, so the resulting bounds are sound — and tight —
+    for the comparison the pair kernel evaluates (no measure-zero
+    unsoundness when a threshold coincides with a bin edge)."""
+    lv = float(np.nextafter(np.float32(thresh), np.float32(np.inf)))
+    edges = cfg.edges
+    k_in = int(np.clip(np.searchsorted(edges, lv, side="left"),
+                       0, cfg.num_bins))
+    k_out = int(np.clip(np.searchsorted(edges, lv, side="right") - 1,
+                        0, cfg.num_bins))
+    return k_in, k_out
+
+
+def _cell_counts(tables: np.ndarray, k: int) -> np.ndarray:
+    """Per-cell counts of pixels with value ≥ edges[k], from the CHI
+    prefix-sum rows: (n, G+1, G+1, NB+1) → (n, G, G) int64."""
+    p = tables[..., -1].astype(np.int64) - tables[..., k].astype(np.int64)
+    return p[:, 1:, 1:] - p[:, :-1, 1:] - p[:, 1:, :-1] + p[:, :-1, :-1]
+
+
+def pair_cell_bounds(cfg, stat: str, lo_a, hi_a, lo_b, hi_b,
+                     rois: np.ndarray):
+    """Cell-decomposed sound (lb, ub) for one pair stat (DESIGN.md §9).
+
+    ``lo_X``/``hi_X``: (n, G, G) per-cell lower/upper counts of role X's
+    thresholded pixels (from :func:`_cell_counts` at the inner/outer value
+    edge).  The pair stat is summed cell by cell — e.g. for the difference
+    A∖B, a cell where the model is provably hot (``lo_a``) and the human
+    provably cold (``hi_b``) contributes ``lo_a − hi_b`` to the lower
+    bound — which captures the *spatial* disjointness discrepancy queries
+    rank by; the area-level rule (:func:`pair_stat_bounds`) cannot (its
+    lower bounds collapse to 0 for full-image regions).  Each cell's
+    contribution applies the area-level algebra to that cell, restricted
+    to its overlap with the ROI: partial-overlap cells contribute 0 to
+    lower bounds and an overlap-clamped upper, so arbitrary pixel ROIs
+    stay sound.  By convexity the cell sum dominates the area-level rule,
+    so only this path runs in execution.
+    """
+    rb = np.asarray(cfg.row_bounds, np.int64)
+    cb = np.asarray(cfg.col_bounds, np.int64)
+    r0, c0 = rois[:, 0][:, None], rois[:, 1][:, None]
+    r1, c1 = rois[:, 2][:, None], rois[:, 3][:, None]
+    ov_r = np.clip(np.minimum(r1, rb[None, 1:]) -
+                   np.maximum(r0, rb[None, :-1]), 0, None)     # (n, G)
+    ov_c = np.clip(np.minimum(c1, cb[None, 1:]) -
+                   np.maximum(c0, cb[None, :-1]), 0, None)
+    full_r = (rb[None, :-1] >= r0) & (rb[None, 1:] <= r1)
+    full_c = (cb[None, :-1] >= c0) & (cb[None, 1:] <= c1)
+    overlap = ov_r[:, :, None] * ov_c[:, None, :]              # |cell ∩ R|
+    full = full_r[:, :, None] & full_c[:, None, :]             # cell ⊆ R
+    cell_area = ((rb[1:] - rb[:-1])[None, :, None] *
+                 (cb[1:] - cb[:-1])[None, None, :])
+    if stat == "inter":
+        lb = np.where(full, np.maximum(0, lo_a + lo_b - cell_area), 0)
+        ub = np.minimum(np.minimum(hi_a, hi_b), overlap)
+    elif stat == "union":
+        lb = np.where(full, np.maximum(lo_a, lo_b), 0)
+        ub = np.minimum(overlap, hi_a + hi_b)
+    elif stat == "diff":
+        lb = np.where(full, np.maximum(0, lo_a - hi_b), 0)
+        ub = np.where(full,
+                      np.minimum(np.minimum(hi_a, overlap),
+                                 cell_area - lo_b),
+                      np.minimum(hi_a, overlap))
+    else:
+        raise ValueError(f"unknown pair stat {stat!r}")
+    return (lb.sum(axis=(1, 2)).astype(np.float64),
+            ub.sum(axis=(1, 2)).astype(np.float64))
+
+
+@dataclasses.dataclass(frozen=True)
 class BinOp(Node):
     op: str
     left: Node
@@ -367,6 +511,15 @@ def _interval_binop(op, llb, lub, rlb, rub):
     raise ValueError(f"unknown op {op}")
 
 
+def _exact_binop(op: str, l, r):
+    """Exact arithmetic over evaluated subtrees — one implementation of the
+    guarded division (0/0 → 0) for every evaluation context."""
+    if op == "/":
+        with np.errstate(divide="ignore", invalid="ignore"):
+            return np.where(r != 0, l / np.where(r == 0, 1, r), 0.0)
+    return {"+": np.add, "-": np.subtract, "*": np.multiply}[op](l, r)
+
+
 # ---------------------------------------------------------------------------
 # Per-mask evaluation
 # ---------------------------------------------------------------------------
@@ -488,13 +641,9 @@ class MaskEvalContext:
         if isinstance(node, CP):
             return cp_eval(node, idx)
         if isinstance(node, BinOp):
-            l = self._eval_tree(node.left, idx, cp_eval)
-            r = self._eval_tree(node.right, idx, cp_eval)
-            if node.op == "/":
-                with np.errstate(divide="ignore", invalid="ignore"):
-                    out = np.where(r != 0, l / np.where(r == 0, 1, r), 0.0)
-                return out
-            return {"+": np.add, "-": np.subtract, "*": np.multiply}[node.op](l, r)
+            return _exact_binop(node.op,
+                                self._eval_tree(node.left, idx, cp_eval),
+                                self._eval_tree(node.right, idx, cp_eval))
         raise TypeError(f"node {node} not valid in a per-mask expression")
 
     def _cp_exact(self, node: CP, idx: np.ndarray) -> np.ndarray:
@@ -599,14 +748,155 @@ class GroupEvalContext:
                 backend = host_backend()
             return backend.mask_agg_counts(self, node, gidx)
         if isinstance(node, BinOp):
-            l = self.exact(node.left, gidx)
-            r = self.exact(node.right, gidx)
-            if node.op == "/":
-                with np.errstate(divide="ignore", invalid="ignore"):
-                    return np.where(r != 0, l / np.where(r == 0, 1, r), 0.0)
-            return {"+": np.add, "-": np.subtract, "*": np.multiply}[node.op](l, r)
+            return _exact_binop(node.op, self.exact(node.left, gidx),
+                                self.exact(node.right, gidx))
         raise TypeError(f"node {node} not valid in a group expression")
 
 
 def is_group_expr(node: Node) -> bool:
     return any(isinstance(t, AggCP) for t in node.cp_terms())
+
+
+# ---------------------------------------------------------------------------
+# Per-pair (dual-mask) evaluation
+# ---------------------------------------------------------------------------
+
+
+class PairEvalContext:
+    """Binds pair expressions to per-image (role_a, role_b) mask rows.
+
+    ``pos_a``/``pos_b`` are aligned ``(n,)`` store row positions — image i's
+    role-A and role-B masks.  The pair's ROI resolves from the **role-A
+    row** (``"provided"`` per-mask boxes, a constant rectangle, or the full
+    mask) and applies to both roles, so intersection/union/difference are
+    counted over one region per image.
+
+    Pair bounds are computed host-side in float64 for **every** backend —
+    both roles' CHI rows are gathered once and combined cell-by-cell
+    (:func:`pair_cell_bounds`) — so the three backends share one pruning
+    semantics bit for bit; only verification (the dual-mask kernel pass)
+    is backend-physical.
+    """
+
+    def __init__(self, store, pos_a: np.ndarray, pos_b: np.ndarray,
+                 image_ids: np.ndarray, roles: tuple,
+                 provided_rois: Optional[np.ndarray] = None):
+        self.store = store
+        self.cfg = store.cfg
+        self.pos_a = np.asarray(pos_a, dtype=np.int64)
+        self.pos_b = np.asarray(pos_b, dtype=np.int64)
+        self.image_ids = np.asarray(image_ids)
+        self.roles = tuple(roles)
+        self.provided_rois = provided_rois
+        # Optional ExecBackend routing pair verification (None → host).
+        self.backend = None
+        self._cells_memo: dict = {}    # (role, thresh) → (lo, hi) cells
+
+    def resolve_pair_rois(self, roi, pos_a_rows: np.ndarray) -> np.ndarray:
+        """Per-pair ROI resolution at explicit role-A store rows — used by
+        the service scheduler to build fused pair-pass descriptor rows."""
+        return _as_rois(roi, pos_a_rows, self.provided_rois, self.cfg)
+
+    def pair_rois(self, roi, idx: Optional[np.ndarray] = None) -> np.ndarray:
+        pos = self.pos_a if idx is None else self.pos_a[np.asarray(idx)]
+        return _as_rois(roi, pos, self.provided_rois, self.cfg)
+
+    def _role_tables(self, which: str) -> np.ndarray:
+        """One role's CHI rows as host numpy.  Deliberately *not* memoized:
+        sessions hold their run (and thus this context) alive across
+        pages, and only the much smaller per-cell counts are needed after
+        the bounds pass — retaining full (n, G+1, G+1, NB+1) row copies
+        per role would multiply the store's CHI footprint per open
+        session."""
+        pos = self.pos_a if which == "a" else self.pos_b
+        store = self.store
+        if hasattr(store, "chi_host"):
+            return store.chi_host(pos)
+        return np.asarray(store.chi_table)[pos]
+
+    def _role_cells(self, which: str, thresh: float):
+        """(lo, hi) per-cell thresholded counts for one role, memoized per
+        (role, threshold) — IoU's inter and union terms share them."""
+        key = (which, float(thresh))
+        if key not in self._cells_memo:
+            k_in, k_out = _threshold_ks(self.cfg, thresh)
+            tables = self._role_tables(which)
+            self._cells_memo[key] = (_cell_counts(tables, k_in),
+                                     _cell_counts(tables, k_out))
+        return self._cells_memo[key]
+
+    def bounds(self, node: Node, cp_leaf=None):
+        """(lb, ub) float64 over all candidate pairs.  ``cp_leaf`` is part
+        of the shared context signature but unused: pair bounds combine
+        the two roles' CHI rows host-side for every backend (cell
+        decomposition needs the per-cell counts, not one scalar bound per
+        mask), which also guarantees identical pruning everywhere."""
+        n = len(self.pos_a)
+        if isinstance(node, Const):
+            v = np.full(n, node.value)
+            return v.copy(), v.copy()
+        if isinstance(node, RoiArea):
+            a = cp_lib.roi_area(self.pair_rois(node.roi)).astype(np.float64)
+            return a.copy(), a.copy()
+        if isinstance(node, PairTerm):
+            lo_a, hi_a = self._role_cells("a", node.ta)
+            lo_b, hi_b = self._role_cells("b", node.tb)
+            return pair_cell_bounds(self.cfg, node.stat, lo_a, hi_a,
+                                    lo_b, hi_b, self.pair_rois(node.roi))
+        if isinstance(node, BinOp):
+            llb, lub = self.bounds(node.left, cp_leaf)
+            rlb, rub = self.bounds(node.right, cp_leaf)
+            return _interval_binop(node.op, llb, lub, rlb, rub)
+        raise TypeError(f"node {node} not valid in a pair expression")
+
+    def _eval_tree(self, node: Node, idx: np.ndarray, leaf_eval) -> np.ndarray:
+        """Shared exact-evaluation walker (the pair analogue of
+        :meth:`MaskEvalContext._eval_tree`): PairTerm leaves delegate to
+        ``leaf_eval`` — precomputed counts when the scheduler fuses, a
+        backend pair pass in self-verification."""
+        if isinstance(node, Const):
+            return np.full(len(idx), node.value)
+        if isinstance(node, RoiArea):
+            return cp_lib.roi_area(self.pair_rois(node.roi, idx)).astype(
+                np.float64)
+        if isinstance(node, PairTerm):
+            return leaf_eval(node, idx)
+        if isinstance(node, BinOp):
+            return _exact_binop(node.op,
+                                self._eval_tree(node.left, idx, leaf_eval),
+                                self._eval_tree(node.right, idx, leaf_eval))
+        raise TypeError(f"node {node} not valid in a pair expression")
+
+    def exact(self, node: Node, idx: np.ndarray) -> np.ndarray:
+        """Exact value for candidate indices ``idx`` — every distinct pair
+        spec in the node is answered by one fused dual-mask kernel pass."""
+        idx = np.asarray(idx)
+        if len(idx) == 0:
+            return np.empty(0, np.float64)
+        terms = {t for t in node.cp_terms() if isinstance(t, PairTerm)}
+        backend = self.backend
+        if backend is None:
+            from .backend import host_backend
+            backend = host_backend()
+        counts = backend.pair_verify_counts(self, idx, terms)
+        return self._eval_tree(node, idx,
+                               lambda t, i: np.asarray(counts[t], np.float64))
+
+
+def is_pair_expr(node: Node) -> bool:
+    return any(isinstance(t, PairTerm) for t in node.cp_terms())
+
+
+def pair_roles_of(exprs) -> Optional[tuple]:
+    """The single (role_a, role_b) mask-type pair the expressions use, or
+    ``None`` when they contain no pair terms.  One plan evaluates against
+    one role pairing; mixing pairings raises."""
+    roles = {(t.role_a, t.role_b) for e in exprs for t in e.cp_terms()
+             if isinstance(t, PairTerm)}
+    if not roles:
+        return None
+    if len(roles) > 1:
+        raise ValueError("all pair terms in one plan must share a single "
+                         f"(role_a, role_b) mask-type pair, got "
+                         f"{sorted(roles)}")
+    return roles.pop()

@@ -9,7 +9,10 @@ directly; the service canonicalizes it into cache keys.
 :func:`compile_plan` lowers a logical plan to exactly one physical run
 object from :mod:`.engine` — :class:`~.engine.FilterRun`,
 :class:`~.engine.TopKRun`, :class:`~.engine.FilteredTopKRun`,
-:class:`~.engine.ScalarAggRun` or :class:`~.engine.MinMaxAggRun` — all of
+:class:`~.engine.ScalarAggRun`, :class:`~.engine.MinMaxAggRun`, or their
+dual-mask (pair) siblings :class:`~.engine.PairFilterRun` /
+:class:`~.engine.PairTopKRun` / :class:`~.engine.PairFilteredTopKRun`
+when the expressions contain pair terms (DESIGN.md §9) — all of
 which present the uniform ``target / take_batch / apply_exact / finished /
 result`` interface, so sessions, the fused scheduler, and any future
 operator (pagination over filters, joins, distributed sharding) drive them
@@ -27,8 +30,9 @@ from typing import Optional
 import numpy as np
 
 from . import engine
-from .exprs import (And, BinOp, Cmp, CP, Node, Not, Or, Pred, RoiArea,
-                    TypeIn, is_group_expr)
+from .exprs import (And, BinOp, Cmp, CP, Node, Not, Or, PairTerm, Pred,
+                    RoiArea, TypeIn, is_group_expr, is_pair_expr,
+                    pair_roles_of)
 
 _KINDS = ("filter", "topk", "filtered_topk", "scalar_agg")
 
@@ -64,6 +68,11 @@ class LogicalPlan:
         if self.order_by is None:
             object.__setattr__(self, "k", None)
             object.__setattr__(self, "desc", True)
+        # Pair (dual-mask) plans evaluate per image and return image ids;
+        # normalize the default select so programmatic plans behave like
+        # parsed ones.
+        if self.select == "mask_id" and self.paired:
+            object.__setattr__(self, "select", "image_id")
 
     @property
     def kind(self) -> str:
@@ -84,10 +93,20 @@ class LogicalPlan:
         return out
 
     @property
+    def paired(self) -> bool:
+        """Whether this is a dual-mask (pair) plan: any expression contains
+        a :class:`~repro.core.exprs.PairTerm`.  Pair plans evaluate per
+        image over (role_a, role_b) mask pairs."""
+        return any(is_pair_expr(e) for e in self.exprs())
+
+    @property
     def grouped(self) -> bool:
         """Whether execution evaluates per image group rather than per mask.
         ``select="image_id"`` implies grouping (as in the SQL front-end),
-        so programmatically built plans behave like parsed ones."""
+        so programmatically built plans behave like parsed ones.  Pair
+        plans are their own unit (per-image *role pairs*, not groups)."""
+        if self.paired:
+            return False
         return (self.group_by_image or self.select == "image_id" or
                 any(is_group_expr(e) for e in self.exprs()))
 
@@ -101,6 +120,27 @@ class LogicalPlan:
             if self.k < 1:
                 raise ValueError(f"LIMIT must be a positive integer, "
                                  f"got {self.k}")
+        if self.paired:
+            pair_roles_of(self.exprs())   # raises on mixed role pairings
+            mixed = [t for e in self.exprs() for t in e.cp_terms()
+                     if not isinstance(t, PairTerm)]
+            if mixed:
+                # AREA(roi) stays legal (normalized discrepancies); any
+                # other counted term is a unit mismatch.
+                raise ValueError(
+                    "a dual-mask (pair) plan cannot mix in per-mask CP or "
+                    "MASK_AGG terms; every count must be a pair stat "
+                    f"(offending: {mixed[0]!r})")
+            if self.mask_types is not None or (
+                    self.predicate is not None and
+                    _has_type_leaf(self.predicate)):
+                raise ValueError(
+                    "pair plans select their masks by role (the two "
+                    "mask_types named in the pair terms); drop the "
+                    "mask_type IN (...) restriction")
+            if self.select != "image_id":
+                raise ValueError("pair plans evaluate per image; "
+                                 "SELECT image_id")
         if any(is_group_expr(e) for e in self.exprs()):
             bad = [e for e in self.exprs() if _has_per_mask_leaf(e)]
             if bad:
@@ -227,15 +267,18 @@ def compile_plan(store, plan: LogicalPlan, *, provided_rois=None,
             "bounds= applies only to single-expression filter/top-k plans; "
             "use bounds_hook to cache per-expression bounds for "
             f"{kind!r} plans")
+    paired = plan.paired
     if kind == "filter":
-        return engine.FilterRun(store, plan.predicate, bounds=bounds,
-                                **common)
+        cls = engine.PairFilterRun if paired else engine.FilterRun
+        return cls(store, plan.predicate, bounds=bounds, **common)
     if kind == "topk":
-        return engine.TopKRun(store, plan.order_by, desc=plan.desc,
-                              bounds=bounds, **common)
+        cls = engine.PairTopKRun if paired else engine.TopKRun
+        return cls(store, plan.order_by, desc=plan.desc, bounds=bounds,
+                   **common)
     if kind == "filtered_topk":
-        return engine.FilteredTopKRun(store, plan.predicate, plan.order_by,
-                                      desc=plan.desc, **common)
+        cls = engine.PairFilteredTopKRun if paired else engine.FilteredTopKRun
+        return cls(store, plan.predicate, plan.order_by, desc=plan.desc,
+                   **common)
     agg = plan.agg.upper()
     if agg in ("MIN", "MAX"):
         return engine.MinMaxAggRun(store, plan.agg_expr, agg, **common)

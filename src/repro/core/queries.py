@@ -27,6 +27,16 @@ refinement shapes the demo GUI stacks up, e.g.::
       AND NOT CP(mask, full_img, (0.2, 0.6)) < 100
     ORDER BY CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 25;
 
+plus **dual-mask (pair) queries** — the paper's saliency-vs-attention
+discrepancy scenarios as first-class terms over per-image mask pairs::
+
+    SELECT image_id FROM MasksDatabaseView
+    ORDER BY IOU(saliency, attention, 0.6, 0.6) ASC LIMIT 25;
+
+    SELECT image_id FROM MasksDatabaseView
+    WHERE PAIR_DIFF(saliency, attention, 0.6, 0.6) > 1000
+    ORDER BY PAIR_INTER(saliency, attention, 0.6, 0.6, roi) ASC LIMIT 25;
+
 ``roi`` refers to caller-provided per-mask rectangles (e.g. YOLO boxes);
 ``full_img`` is the whole mask; a literal ``(r0, c0, r1, c1)`` rectangle is
 also accepted.  The parser builds expression trees from ``core.exprs`` and a
@@ -41,9 +51,17 @@ import re
 from typing import Optional
 
 from . import plan as plan_lib
-from .exprs import (AggCP, And, BinOp, Cmp, Const, CP, Node, Not, Or, Pred,
-                    RoiArea, TypeIn)
+from .exprs import (AggCP, And, BinOp, Cmp, Const, CP, Node, Not, Or,
+                    PairTerm, Pred, RoiArea, TypeIn, pair_iou)
 from .plan import LogicalPlan
+
+# Demo role-name convention (scenario 3/6 and the synthetic generators):
+# mask_type 1 = model saliency, mask_type 2 = human attention.  The pair
+# grammar accepts these names or integer mask_types directly.
+PAIR_ROLES = {"saliency": 1, "attention": 2}
+
+_PAIR_FNS = {"PAIR_INTER": "inter", "PAIR_UNION": "union",
+             "PAIR_DIFF": "diff"}
 
 _TOKEN_RE = re.compile(r"""
       (?P<num>(?:\d+\.\d*|\.\d+|\d+)(?:[eE][+-]?\d+)?|inf)
@@ -385,6 +403,8 @@ class _Parser:
             return node
         if tok.upper() == "CP":
             return self._cp()
+        if tok.upper() == "IOU" or tok.upper() in _PAIR_FNS:
+            return self._pair(tok.upper())
         if tok.upper() == "AREA":
             self.next()
             self.expect("(")
@@ -422,6 +442,46 @@ class _Parser:
         lv, uv = self._range()
         self.expect(")")
         return CP(roi, lv, uv)
+
+    def _role(self) -> int:
+        """A pair role: a mask_type integer or a well-known role name."""
+        tok = self.next()
+        if tok.lower() in PAIR_ROLES:
+            return PAIR_ROLES[tok.lower()]
+        try:
+            return int(tok)
+        except ValueError as e:
+            raise SyntaxError(
+                f"bad mask role {tok!r}; expected a mask_type integer or "
+                f"one of {sorted(PAIR_ROLES)}") from e
+
+    def _pair(self, fn: str) -> Node:
+        """Dual-mask terms (DESIGN.md §9)::
+
+            IOU(role_a, role_b, ta, tb [, roi])
+            PAIR_INTER | PAIR_UNION | PAIR_DIFF (role_a, role_b, ta, tb [, roi])
+
+        Roles are mask_types (or the demo names saliency/attention); per
+        image, role X's first mask is thresholded at ``> tX``.  ``roi``
+        defaults to the full image; ``PAIR_DIFF(a, b, …)`` counts A∖B —
+        swap the roles for B∖A.
+        """
+        self.next()
+        self.expect("(")
+        role_a = self._role()
+        self.expect(",")
+        role_b = self._role()
+        self.expect(",")
+        ta = self.number()
+        self.expect(",")
+        tb = self.number()
+        roi = None
+        if self.accept(","):
+            roi = self._roi()
+        self.expect(")")
+        if fn == "IOU":
+            return pair_iou(role_a, role_b, ta, tb, roi)
+        return PairTerm(_PAIR_FNS[fn], role_a, role_b, ta, tb, roi)
 
     def _roi(self):
         tok = self.next()
@@ -474,3 +534,6 @@ SCENARIO3_IOU = (
     "/ CP(union(mask > 0.8), full_img, (0.5, 2.0)) AS iou "
     "FROM MasksDatabaseView WHERE mask_type IN (1, 2) "
     "GROUP BY image_id ORDER BY iou ASC LIMIT 25;")
+SCENARIO6_DISCREPANCY = (
+    "SELECT image_id FROM MasksDatabaseView "
+    "ORDER BY IOU(saliency, attention, 0.6, 0.6) ASC LIMIT 25;")

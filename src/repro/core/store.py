@@ -895,6 +895,15 @@ class StoreSnapshot:
                 f"recomputed: store moved to epoch {self._store.epoch}")
         return self._store.chi_table
 
+    def chi_host(self, positions: np.ndarray | None = None) -> np.ndarray:
+        """Host CHI rows at the pinned epoch — same freshness contract as
+        :attr:`chi_table` (bounds passes run at pin time)."""
+        if not self.fresh:
+            raise StaleRunError(
+                f"CHI bounds pinned at epoch {self.epoch} cannot be "
+                f"recomputed: store moved to epoch {self._store.epoch}")
+        return self._store.chi_host(positions)
+
     def snapshot(self) -> "StoreSnapshot":
         return self
 

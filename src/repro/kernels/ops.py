@@ -26,6 +26,7 @@ from . import ref
 from .chi_build import chi_cell_hist_pallas
 from .cp_count import cp_count_multi_pallas, cp_count_pallas
 from .mask_agg import mask_agg_counts_pallas
+from .pair_count import pair_counts_pallas
 
 _FORCE_INTERPRET = os.environ.get("REPRO_FORCE_PALLAS_INTERPRET", "") == "1"
 
@@ -92,6 +93,18 @@ def mask_agg_counts(group_masks, rois, thresh, *,
         return mask_agg_counts_pallas(group_masks, rois, thresh,
                                       interpret=interpret or not _on_tpu())
     return ref.mask_agg_counts_ref(group_masks, rois, thresh)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def pair_counts(masks_a, masks_b, rois, ta, tb, *,
+                use_pallas: bool | None = None, interpret: bool = False):
+    """Fused dual-mask counts — (B,H,W)×2, (B,4) → (inter, union, diff),
+    each (B,) int32, in one pass over both masks (DESIGN.md §9)."""
+    pallas, interpret = _dispatch(use_pallas, interpret)
+    if pallas or interpret:
+        return pair_counts_pallas(masks_a, masks_b, rois, ta, tb,
+                                  interpret=interpret or not _on_tpu())
+    return ref.pair_counts_ref(masks_a, masks_b, rois, ta, tb)
 
 
 def mask_agg_iou(group_masks, rois, thresh, **kw):

@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: fused dual-mask pair counts.
+
+The dual-mask query class (saliency-vs-attention discrepancy, DESIGN.md §9)
+verifies per-image *pairs*: threshold mask A at ``ta``, mask B at ``tb``,
+and count, inside the pair's ROI, the pixels of the intersection (A∩B), the
+union (A∪B) and the difference (A∖B).  IoU and every other pair statistic
+the plan IR can express derive from these three counts, so the kernel
+computes all of them in **one pass over both masks** — each byte of either
+mask is streamed HBM→VMEM exactly once per verification batch, the same
+budget a single-mask CP pays.
+
+Tiling mirrors ``cp_count``: grid ``(B, H/bh)``; each step loads one
+``(1, bh, W)`` tile of each mask (lane dimension = W kept whole), builds
+the ROI predicate from ``broadcasted_iota``, and accumulates the three
+counts into (1,)-blocked outputs across the sequential row-tile axis.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .cp_count import _pick_bh
+
+
+def _pair_kernel(roi_ref, a_ref, b_ref, ta_ref, tb_ref,
+                 inter_ref, union_ref, diff_ref, *, bh: int, w: int):
+    row_tile = pl.program_id(1)
+
+    @pl.when(row_tile == 0)
+    def _init():
+        inter_ref[0] = 0
+        union_ref[0] = 0
+        diff_ref[0] = 0
+
+    a = a_ref[0]                                      # (bh, W)
+    b = b_ref[0]
+    ba = a > ta_ref[0]
+    bb = b > tb_ref[0]
+    r0, c0, r1, c1 = roi_ref[0, 0], roi_ref[0, 1], roi_ref[0, 2], roi_ref[0, 3]
+    rr = jax.lax.broadcasted_iota(jnp.int32, (bh, w), 0) + row_tile * bh
+    cc = jax.lax.broadcasted_iota(jnp.int32, (bh, w), 1)
+    inside = (rr >= r0) & (rr < r1) & (cc >= c0) & (cc < c1)
+    inter_ref[0] += jnp.sum((inside & ba & bb).astype(jnp.int32))
+    union_ref[0] += jnp.sum((inside & (ba | bb)).astype(jnp.int32))
+    diff_ref[0] += jnp.sum((inside & ba & ~bb).astype(jnp.int32))
+
+
+def pair_counts_pallas(masks_a: jax.Array, masks_b: jax.Array,
+                       rois: jax.Array, ta, tb, *,
+                       interpret: bool = False):
+    """(B,H,W)×2, (B,4) → (inter, union, diff) each (B,) int32.
+
+    ``diff`` is |A∖B| inside the ROI; |B∖A| is the same call with the roles
+    swapped (the expression layer normalizes that at parse time).
+    """
+    b, h, w = masks_a.shape
+    bh = _pick_bh(h, w)
+    grid = (b, h // bh)
+    ta = jnp.asarray(ta, masks_a.dtype).reshape(1)
+    tb = jnp.asarray(tb, masks_b.dtype).reshape(1)
+    kernel = functools.partial(_pair_kernel, bh=bh, w=w)
+    out = pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 4), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bh, w), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bh, w), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+            pl.BlockSpec((1,), lambda i, j: (0,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+            pl.BlockSpec((1,), lambda i, j: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+            jax.ShapeDtypeStruct((b,), jnp.int32),
+        ],
+        interpret=interpret,
+    )(rois.astype(jnp.int32), masks_a, masks_b, ta, tb)
+    return tuple(out)

@@ -56,6 +56,23 @@ def mask_agg_counts_ref(group_masks: Array, rois: Array, thresh) -> tuple[Array,
     return inter_ct, union_ct
 
 
+def pair_counts_ref(masks_a: Array, masks_b: Array, rois: Array,
+                    ta, tb) -> tuple[Array, Array, Array]:
+    """(B,H,W)×2, (B,4), scalars → (inter, union, diff) each (B,) int32.
+
+    Counts of the thresholded intersection (A∩B), union (A∪B) and
+    difference (A∖B) inside each pair's ROI — the dual-mask verification
+    primitive behind IoU/discrepancy queries (one pass over both masks)."""
+    _, h, w = masks_a.shape
+    ba = masks_a > ta
+    bb = masks_b > tb
+    inside = _roi_mask(rois, h, w)
+    inter = jnp.sum(inside & ba & bb, axis=(1, 2)).astype(jnp.int32)
+    union = jnp.sum(inside & (ba | bb), axis=(1, 2)).astype(jnp.int32)
+    diff = jnp.sum(inside & ba & ~bb, axis=(1, 2)).astype(jnp.int32)
+    return inter, union, diff
+
+
 def cp_count_multi_ref(masks: Array, rois: Array, lvs: Array, uvs: Array) -> Array:
     """(B,H,W), (Q,B,4), (Q,), (Q,) → (Q,B) int32 — the multi-query CP pass
     (one read of the mask bytes answers Q descriptors)."""

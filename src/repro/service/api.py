@@ -358,8 +358,12 @@ class MaskSearchService:
             if np.any(~known):
                 self.store.append(masks[~known], meta[~known])
                 n_appended = int((~known).sum())
+            # The mutation retired every pre-epoch cache generation; sweep
+            # it out instead of letting dead entries squat in the LRUs.
+            evicted = self.planner.evict_dead_epochs(self.store.epoch)
             return {"epoch": self.store.epoch, "appended": n_appended,
                     "updated": n_updated, "n_masks": len(self.store),
+                    "evicted_cache_entries": evicted,
                     "mask_ids": _ids_list(mask_ids)}
 
     def delete(self, mask_ids) -> dict:
@@ -367,7 +371,9 @@ class MaskSearchService:
         with self._lock:
             ids = np.unique(np.atleast_1d(np.asarray(mask_ids, np.int64)))
             self.store.delete(ids)
+            evicted = self.planner.evict_dead_epochs(self.store.epoch)
             return {"epoch": self.store.epoch, "deleted": int(len(ids)),
+                    "evicted_cache_entries": evicted,
                     "n_masks": len(self.store)}
 
     # -- introspection ----------------------------------------------------

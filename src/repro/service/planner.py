@@ -21,8 +21,9 @@ Keys are canonical strings built from the frozen-dataclass expression reprs
 Both tiers fold the store's **epoch** into every key: the moment the mask
 database mutates (append/update/delete), every pre-epoch result and bounds
 entry becomes unreachable — a refined query after an ingest pays a fresh
-bounds pass instead of pruning against a dead index — and the unreachable
-entries age out of the LRU naturally.
+bounds pass instead of pruning against a dead index.  The service also
+sweeps the dead generation out eagerly (:meth:`Planner.evict_dead_epochs`)
+so stale entries never squat in the LRU displacing live ones.
 """
 
 from __future__ import annotations
@@ -89,7 +90,8 @@ def bounds_key(expr: Node, plan_or_query, roi_sig: str,
 class CacheInfo:
     hits: int = 0
     misses: int = 0
-    evictions: int = 0
+    evictions: int = 0           # displaced by the capacity bound
+    invalidations: int = 0       # dropped because their epoch died
     size: int = 0
 
     def as_dict(self) -> dict:
@@ -133,6 +135,17 @@ class LRUCache:
     def __len__(self) -> int:
         with self._lock:
             return len(self._data)
+
+    def evict_where(self, pred) -> int:
+        """Drop every entry whose key satisfies ``pred`` (accounted as
+        invalidations, not capacity evictions).  Returns the count."""
+        with self._lock:
+            dead = [k for k in self._data if pred(k)]
+            for k in dead:
+                del self._data[k]
+            self.info.invalidations += len(dead)
+            self.info.size = len(self._data)
+            return len(dead)
 
     def clear(self) -> None:
         with self._lock:
@@ -192,6 +205,21 @@ class Planner:
         :func:`repro.core.plan.compile_plan`."""
         return _PlanBoundsHook(self.bounds_cache, _as_plan(plan_or_query),
                                roi_sig, backend, epoch)
+
+    def evict_dead_epochs(self, epoch: int) -> int:
+        """Drop every result/bounds entry keyed to an epoch other than
+        ``epoch``.  Both key builders end with an ``e<epoch>`` component,
+        so a mutation makes pre-epoch entries *unreachable* — but without
+        this sweep they would still squat in the LRU, displacing live
+        entries until enough new traffic ages them out.  Called by the
+        service on every ingest/delete; returns the number dropped."""
+        tag = f"e{int(epoch)}"
+
+        def dead(key: str) -> bool:
+            return key.rsplit("|", 1)[-1] != tag
+
+        return (self.result_cache.evict_where(dead) +
+                self.bounds_cache.evict_where(dead))
 
     def stats(self) -> dict:
         return {"result_cache": self.result_cache.info.as_dict(),

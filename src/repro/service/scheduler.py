@@ -11,9 +11,13 @@ are driven round-robin; each round the scheduler
    bytes, the full paper's workload optimization applied across concurrent
    sessions instead of a pre-declared batch.
 
-Jobs whose expressions can't be fused (MASK_AGG group queries) fall back to
-their own verification path, still behind the shared cache, so they share
-I/O even when they can't share compute.
+Dual-mask (pair) jobs fuse with each other the same way: the union of
+their per-image (role_a, role_b) row pairs is loaded once and every
+distinct (rois, ta, tb) pair descriptor is answered across all jobs in one
+dual-mask kernel pass per descriptor (``_fused_pair_pass``).  Jobs whose
+expressions can't be fused either way (MASK_AGG group queries) fall back
+to their own verification path, still behind the shared cache, so they
+share I/O even when they can't share compute.
 
 The scheduler is operator-agnostic: any run implementing the uniform
 ``take_batch / cp_terms / fused_values / apply_exact / finished`` interface
@@ -35,7 +39,7 @@ import numpy as np
 
 from ..core.backend import F32_MAX as _F32_MAX
 from ..core.backend import get_backend
-from ..core.exprs import CP, MaskEvalContext
+from ..core.exprs import CP, MaskEvalContext, PairEvalContext, PairTerm
 
 
 @dataclasses.dataclass
@@ -46,6 +50,9 @@ class SchedulerStats:
     fused_masks: int = 0         # union masks per fused pass, summed
     fused_bytes_loaded: int = 0  # exact shared-load bytes across passes
     fused_time_s: float = 0.0
+    pair_passes: int = 0         # fused dual-mask passes
+    pair_descriptors: int = 0    # (rois, ta, tb) pair specs answered
+    pair_pairs: int = 0          # union mask pairs per pair pass, summed
     fallback_batches: int = 0
 
     def as_dict(self) -> dict:
@@ -63,6 +70,30 @@ def _fusable(job) -> bool:
         return False
     terms = job.cp_terms()
     return bool(terms) and all(isinstance(t, CP) for t in terms)
+
+
+def _spec_key(job, term) -> tuple:
+    """Cross-job dedup key for one term's kernel descriptor: the term's
+    value fields plus the identity of the ROI source when the term uses
+    caller-provided boxes (those resolve against each job's own array, so
+    they share a row only within one ROI source).  Single definition for
+    both the CP and the pair pass — the key must never diverge between
+    the build and slice loops."""
+    roi_src = id(job.ctx.provided_rois) if term.roi == "provided" else None
+    if isinstance(term, PairTerm):
+        return (term.ta, term.tb, term.roi, roi_src)
+    return (term, roi_src)
+
+
+def _pair_fusable(job) -> bool:
+    """Dual-mask jobs fuse with each other: same freshness contract, pure
+    pair-term verification over a :class:`PairEvalContext`."""
+    if not isinstance(job.ctx, PairEvalContext):
+        return False
+    if not job.fresh():
+        return False
+    terms = job.cp_terms()
+    return bool(terms) and all(isinstance(t, PairTerm) for t in terms)
 
 
 class FusedScheduler:
@@ -93,9 +124,13 @@ class FusedScheduler:
                     break
                 self.stats.rounds += 1
                 fused = [(j, b) for j, b in takes if _fusable(j)]
-                direct = [(j, b) for j, b in takes if not _fusable(j)]
+                pair_fused = [(j, b) for j, b in takes if _pair_fusable(j)]
+                direct = [(j, b) for j, b in takes
+                          if not (_fusable(j) or _pair_fusable(j))]
                 if fused:
                     self._fused_pass(fused)
+                if pair_fused:
+                    self._fused_pair_pass(pair_fused)
                 for job, batch in direct:
                     self.stats.fallback_batches += 1
                     job.self_verify(batch)
@@ -112,15 +147,13 @@ class FusedScheduler:
         t0 = time.perf_counter()
 
         # Dedupe CP descriptors across jobs.  CP nodes hash by value, so two
-        # sessions ranking by the same term share one kernel row; "provided"
-        # ROIs resolve against each job's own ROI array, so those dedupe only
-        # within one ROI source.
+        # sessions ranking by the same term share one kernel row (see
+        # _spec_key for the "provided"-ROI caveat).
         rows: dict = {}
         specs: list = []
         for job, _ in pairs:
             for term in set(job.cp_terms()):
-                key = (term, id(job.ctx.provided_rois)
-                       if term.roi == "provided" else None)
+                key = _spec_key(job, term)
                 if key not in rows:
                     rois = job.ctx.resolve_rois(term.roi, all_pos)
                     rows[key] = len(specs)
@@ -130,22 +163,22 @@ class FusedScheduler:
         self.stats.fused_passes += 1
         self.stats.fused_descriptors += len(specs)
         self.stats.fused_masks += len(all_pos)
-        bytes_delta = store.io.bytes_read - io0
 
         for job, batch in pairs:
             pos = job.ctx.positions[batch]
             sub = np.searchsorted(all_pos, pos)
             cdict = {}
             for term in set(job.cp_terms()):
-                key = (term, id(job.ctx.provided_rois)
-                       if term.roi == "provided" else None)
-                cdict[term] = counts[rows[key]][sub]
+                cdict[term] = counts[rows[_spec_key(job, term)]][sub]
             job.apply_exact(batch, job.fused_values(batch, cdict))
 
         # Per-job ExecStats get a fair share of the round's shared load and
         # wall time (proportional to batch size); the exact aggregate lives
         # in SchedulerStats.fused_bytes_loaded / fused_time_s.
-        elapsed = time.perf_counter() - t0
+        self._account(pairs, store.io.bytes_read - io0,
+                      time.perf_counter() - t0)
+
+    def _account(self, pairs, bytes_delta: int, elapsed: float) -> None:
         self.stats.fused_bytes_loaded += bytes_delta
         self.stats.fused_time_s += elapsed
         total = sum(len(b) for _, b in pairs)
@@ -153,3 +186,52 @@ class FusedScheduler:
             share = len(batch) / max(total, 1)
             job.stats.bytes_loaded += int(bytes_delta * share)
             job.stats.verify_time_s += elapsed * share
+
+    # -- the fused dual-mask pass ----------------------------------------
+    def _fused_pair_pass(self, pairs) -> None:
+        """One fused pass over the union of the jobs' pair batches: load
+        the union of (pos_a, pos_b) rows once (shared-load cache), answer
+        every distinct (rois, ta, tb) pair descriptor across all jobs, and
+        hand each job its slice — the cross-query analogue of the single
+        job's ``pair_verify_counts`` route."""
+        store = self.store
+
+        def keys_of(job, batch):
+            ctx = job.ctx
+            return (ctx.pos_a[batch].astype(np.int64) << 32) | \
+                ctx.pos_b[batch].astype(np.int64)
+
+        all_keys = np.unique(np.concatenate(
+            [keys_of(j, b) for j, b in pairs]))
+        u_pa = (all_keys >> 32).astype(np.int64)
+        u_pb = (all_keys & 0xffffffff).astype(np.int64)
+        io0 = store.io.bytes_read
+        t0 = time.perf_counter()
+
+        rows: dict = {}
+        specs: list = []
+        for job, _ in pairs:
+            for term in set(job.cp_terms()):
+                key = _spec_key(job, term)
+                if key not in rows:
+                    rows[key] = len(specs)
+                    specs.append((job.ctx.resolve_pair_rois(term.roi, u_pa),
+                                  term.ta, term.tb))
+        counts = self.backend.fused_pair_counts(store, u_pa, u_pb, specs)
+
+        self.stats.pair_passes += 1
+        self.stats.pair_descriptors += len(specs)
+        self.stats.pair_pairs += len(all_keys)
+
+        stat_row = self.backend.PAIR_STAT_ROW
+        for job, batch in pairs:
+            sub = np.searchsorted(all_keys, keys_of(job, batch))
+            cdict = {}
+            for term in set(job.cp_terms()):
+                cdict[term] = np.asarray(
+                    counts[rows[_spec_key(job, term)],
+                           stat_row[term.stat]], np.float64)[sub]
+            job.apply_exact(batch, job.fused_values(batch, cdict))
+
+        self._account(pairs, store.io.bytes_read - io0,
+                      time.perf_counter() - t0)

@@ -1,0 +1,407 @@
+"""Dual-mask (pair) operator tests — DESIGN.md §9's acceptance contract.
+
+Seeded tests run everywhere; the hypothesis-decorated variants (guarded, so
+this file still runs where hypothesis is absent) sweep random thresholds,
+ROIs and plan shapes.  Key invariants:
+
+  * the pair kernel (Pallas interpret) ≡ the jnp reference ≡ a numpy oracle;
+  * cell-decomposed pair bounds always contain the exact pairwise count and
+    never exceed the area-level combination-rule envelope;
+  * host / device / mesh return bit-identical pair top-k ids AND scores,
+    with identical verification accounting;
+  * every indexed pair plan ≡ the decode-all-pairs naive scan;
+  * pair queries flow through the SQL grammar, the service (sessions,
+    result cache, fused batches) and the mutation/epoch machinery.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import CHIConfig, MaskStore, queries
+from repro.core.engine import _make_context
+from repro.core.exprs import (Cmp, CP, PairTerm, pair_iou, pair_stat_bounds)
+from repro.core.plan import LogicalPlan, run_plan
+from repro.core.store import MASK_META_DTYPE
+from repro.data.masks import object_boxes, saliency_masks
+from repro.kernels import ops as kops
+from repro.kernels import ref as kref
+
+try:
+    from hypothesis import HealthCheck, given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+N_IMG, H, W = 30, 32, 32
+BACKENDS = ("host", "device", "mesh")
+
+_STORE = {}
+
+
+def _db():
+    """Module-lazy store: per image a (saliency, attention) pair, with a
+    planted misaligned minority (off-object attention)."""
+    if "store" not in _STORE:
+        rng = np.random.default_rng(8)
+        boxes = object_boxes(N_IMG, H, W, seed=4)
+        model, _ = saliency_masks(N_IMG, H, W, seed=5, boxes=boxes,
+                                  in_box_fraction=1.0)
+        off, _ = saliency_masks(N_IMG, H, W, seed=7, boxes=None)
+        mis = rng.random(N_IMG) < 0.3
+        human = np.where(mis[:, None, None], off,
+                         np.clip(0.9 * model, 0.0, 1.0 - 1e-6))
+        masks = np.stack([model, human], axis=1).reshape(-1, H, W)
+        n = len(masks)
+        meta = np.zeros(n, MASK_META_DTYPE)
+        meta["mask_id"] = np.arange(n)
+        meta["image_id"] = np.arange(n) // 2
+        meta["mask_type"] = np.arange(n) % 2 + 1
+        cfg = CHIConfig(grid=4, num_bins=8, height=H, width=W)
+        _STORE["store"] = MaskStore.create_memory(masks, meta, cfg)
+        _STORE["rois"] = np.repeat(boxes, 2, axis=0)
+    return _STORE["store"], _STORE["rois"]
+
+
+# ---------------------------------------------------------------------------
+# Kernel
+# ---------------------------------------------------------------------------
+
+
+def test_pair_kernel_matches_reference_and_oracle():
+    rng = np.random.default_rng(0)
+    a = rng.random((7, H, W)).astype(np.float32)
+    b = rng.random((7, H, W)).astype(np.float32)
+    rois = np.array([[0, 0, H, W], [4, 4, 28, 28], [0, 0, 16, W],
+                     [8, 0, H, 16], [2, 3, 5, 7], [0, 0, 0, 0],
+                     [30, 30, H, W]], np.int32)
+    ta, tb = np.float32(0.55), np.float32(0.3)
+    ref = [np.asarray(x) for x in kref.pair_counts_ref(a, b, rois, ta, tb)]
+    pal = [np.asarray(x) for x in kops.pair_counts(
+        a, b, rois, ta, tb, use_pallas=True, interpret=True)]
+    jnp_path = [np.asarray(x) for x in kops.pair_counts(
+        a, b, rois, ta, tb, use_pallas=False)]
+    ba, bb = a > ta, b > tb
+    for i, (r0, c0, r1, c1) in enumerate(rois):
+        wa, wb = ba[i, r0:r1, c0:c1], bb[i, r0:r1, c0:c1]
+        assert ref[0][i] == np.sum(wa & wb)
+        assert ref[1][i] == np.sum(wa | wb)
+        assert ref[2][i] == np.sum(wa & ~wb)
+    for r, p, j in zip(ref, pal, jnp_path):
+        np.testing.assert_array_equal(r, p)
+        np.testing.assert_array_equal(r, j)
+
+
+# ---------------------------------------------------------------------------
+# Bounds soundness
+# ---------------------------------------------------------------------------
+
+
+def _check_bounds_sound(term, rois):
+    store, _ = _db()
+    ctx, ids, _ = _make_context(store, [term], False, None, None, rois)
+    lb, ub = ctx.bounds(term)
+    exact = ctx.exact(term, np.arange(len(ids)))
+    assert np.all(lb <= exact), (term, (lb - exact).max())
+    assert np.all(exact <= ub), (term, (exact - ub).max())
+    # the cell decomposition must stay inside the area-level envelope
+    area = np.asarray(
+        ctx.pair_rois(term.roi), np.int64)
+    area = np.maximum(area[:, 2] - area[:, 0], 0) * \
+        np.maximum(area[:, 3] - area[:, 1], 0)
+    glb, gub = pair_stat_bounds(term.stat, np.zeros(len(ids)), area,
+                                np.zeros(len(ids)), area,
+                                area.astype(np.float64))
+    assert np.all(lb >= glb) and np.all(ub <= gub)
+
+
+@pytest.mark.parametrize("stat", ["inter", "union", "diff"])
+@pytest.mark.parametrize("roi", [None, "provided", (5, 3, 29, 27)])
+@pytest.mark.parametrize("ta,tb", [(0.3, 0.6), (0.5, 0.5), (0.8, 0.2)])
+def test_pair_bounds_contain_exact(stat, roi, ta, tb):
+    _, rois = _db()
+    _check_bounds_sound(PairTerm(stat, 1, 2, ta, tb, roi), rois)
+
+
+def test_pair_bounds_sound_at_bin_edges():
+    """Thresholds exactly on CHI bin edges and mask values exactly at the
+    threshold — the measure-zero case the nextafter resolution covers."""
+    edge = 0.5   # an interior edge of the 8-bin config
+    rng = np.random.default_rng(1)
+    masks = rng.choice(np.float32([0.25, edge, 0.75]),
+                       size=(8, H, W)).astype(np.float32)
+    meta = np.zeros(8, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(8)
+    meta["image_id"] = np.arange(8) // 2
+    meta["mask_type"] = np.arange(8) % 2 + 1
+    cfg = CHIConfig(grid=4, num_bins=8, height=H, width=W)
+    store = MaskStore.create_memory(masks, meta, cfg)
+    for stat in ("inter", "union", "diff"):
+        term = PairTerm(stat, 1, 2, edge, edge, None)
+        ctx, ids, _ = _make_context(store, [term], False, None, None, None)
+        lb, ub = ctx.bounds(term)
+        exact = ctx.exact(term, np.arange(len(ids)))
+        assert np.all(lb <= exact) and np.all(exact <= ub), stat
+
+
+# ---------------------------------------------------------------------------
+# Backend equivalence + naive-scan equivalence
+# ---------------------------------------------------------------------------
+
+
+def _assert_backends_and_naive_agree(plan, rois=None):
+    store, _ = _db()
+    outs = {name: run_plan(store, plan, provided_rois=rois, verify_batch=4,
+                           backend=name) for name in BACKENDS}
+    payload0, stats0 = outs["host"]
+    for name in ("device", "mesh"):
+        payload, stats = outs[name]
+        if isinstance(payload0, tuple):
+            assert list(payload[0]) == list(payload0[0]), name
+            np.testing.assert_array_equal(payload[1], payload0[1])
+        elif isinstance(payload0, float):
+            np.testing.assert_allclose(payload, payload0)
+        else:
+            assert list(payload) == list(payload0), name
+        assert stats.n_verified == stats0.n_verified, name
+        assert stats.n_decided_by_bounds == stats0.n_decided_by_bounds, name
+    naive, _ = run_plan(store, plan, provided_rois=rois, use_index=False)
+    if isinstance(payload0, tuple):
+        assert list(naive[0]) == list(payload0[0])
+        np.testing.assert_allclose(naive[1], payload0[1])
+    elif isinstance(payload0, float):
+        np.testing.assert_allclose(naive, payload0)
+    else:
+        assert list(naive) == list(payload0)
+
+
+def test_pair_iou_topk_bit_identical_across_backends():
+    _assert_backends_and_naive_agree(
+        LogicalPlan(order_by=pair_iou(1, 2, 0.6, 0.6), k=5, desc=False))
+
+
+def test_pair_filtered_topk_across_backends():
+    _, rois = _db()
+    plan = LogicalPlan(
+        predicate=Cmp(PairTerm("diff", 1, 2, 0.5, 0.5, None), ">", 30.0),
+        order_by=PairTerm("inter", 1, 2, 0.5, 0.5, "provided"),
+        k=6, desc=True)
+    _assert_backends_and_naive_agree(plan, rois=rois)
+
+
+def test_pair_filter_and_scalar_agg_across_backends():
+    _assert_backends_and_naive_agree(
+        LogicalPlan(predicate=Cmp(PairTerm("union", 1, 2, 0.4, 0.4, None),
+                                  "<", 400.0)))
+    _assert_backends_and_naive_agree(
+        LogicalPlan(agg="AVG", agg_expr=pair_iou(1, 2, 0.6, 0.6)))
+
+
+def test_pair_candidates_are_role_matched_images():
+    """Images missing one role never become candidates; extra masks per
+    (image, role) are excluded deterministically and accounted."""
+    store, _ = _db()
+    rng = np.random.default_rng(2)
+    extra = rng.random((3, H, W)).astype(np.float32)
+    meta = np.zeros(3, MASK_META_DTYPE)
+    meta["mask_id"] = 900 + np.arange(3)
+    # image 500 exists only in role 1; image 0 gets a duplicate role-1 mask
+    meta["image_id"] = [500, 500, 0]
+    meta["mask_type"] = [1, 1, 1]
+    masks = np.concatenate([np.asarray(store._masks), extra])
+    allmeta = np.concatenate([store.meta, meta])
+    cfg = store.cfg
+    s2 = MaskStore.create_memory(masks, allmeta, cfg)
+    term = PairTerm("inter", 1, 2, 0.5, 0.5, None)
+    ctx, ids, n_dropped = _make_context(s2, [term], False, None, None, None)
+    assert 500 not in ids
+    assert len(ids) == N_IMG
+    assert n_dropped == 3            # 2 partner-less + 1 duplicate
+    # the duplicate (higher position) must not displace image 0's original
+    assert ctx.pos_a[list(ids).index(0)] == 0
+
+
+# ---------------------------------------------------------------------------
+# Plan validation + SQL grammar
+# ---------------------------------------------------------------------------
+
+
+def test_pair_plan_validation():
+    iou = pair_iou(1, 2, 0.5, 0.5)
+    with pytest.raises(ValueError, match="single"):
+        LogicalPlan(order_by=iou / PairTerm("inter", 1, 3, 0.5, 0.5, None),
+                    k=5).validate()
+    with pytest.raises(ValueError, match="cannot mix"):
+        LogicalPlan(order_by=iou / CP(None, 0.2, 0.6), k=5).validate()
+    with pytest.raises(ValueError, match="role"):
+        LogicalPlan(order_by=iou, k=5, mask_types=(1, 2)).validate()
+    from repro.core.exprs import TypeIn
+    with pytest.raises(ValueError, match="role"):
+        LogicalPlan(order_by=iou, k=5,
+                    predicate=TypeIn((1,))).validate()
+    # select normalizes for pure pair plans
+    assert LogicalPlan(order_by=iou, k=5).select == "image_id"
+    with pytest.raises(ValueError):
+        PairTerm("bogus", 1, 2, 0.5, 0.5, None)
+
+
+def test_engine_level_pair_calls_validate_like_plans():
+    """Engine one-shots bypass LogicalPlan.validate; they must still raise
+    the same clear errors instead of silently dropping restrictions."""
+    from repro.core import engine
+    store, _ = _db()
+    term = PairTerm("inter", 1, 2, 0.5, 0.5, None)
+    with pytest.raises(ValueError, match="role"):
+        engine.filter_query(store, Cmp(term, ">", 10.0), mask_types=(1,))
+    with pytest.raises(ValueError, match="cannot mix"):
+        engine.topk_query(store, term + CP(None, 0.2, 0.6), 3)
+
+
+def test_pair_sql_grammar_roundtrip():
+    q = queries.parse(queries.SCENARIO6_DISCREPANCY)
+    assert q.plan.paired and q.plan.kind == "topk" and not q.plan.desc
+    assert q.plan.select == "image_id"
+    roles = {t.role_a for t in q.plan.order_by.cp_terms()} | \
+        {t.role_b for t in q.plan.order_by.cp_terms()}
+    assert roles == {1, 2}
+
+    q2 = queries.parse(
+        "SELECT image_id FROM MasksDatabaseView "
+        "WHERE PAIR_DIFF(1, 2, 0.6, 0.6) > 100 "
+        "ORDER BY PAIR_INTER(saliency, attention, 0.6, 0.6, roi) ASC "
+        "LIMIT 7;")
+    assert q2.plan.kind == "filtered_topk" and q2.plan.paired
+    term = q2.plan.order_by
+    assert term.stat == "inter" and term.roi == "provided"
+
+    with pytest.raises(SyntaxError):
+        queries.parse("SELECT image_id FROM V ORDER BY "
+                      "IOU(nonsense_role, attention, 0.5, 0.5) ASC LIMIT 5;")
+
+
+def test_pair_sql_executes_like_programmatic_plan():
+    store, rois = _db()
+    (ids_sql, scores_sql), _ = queries.run(
+        queries.SCENARIO6_DISCREPANCY.replace("LIMIT 25", "LIMIT 5"),
+        store)
+    plan = LogicalPlan(order_by=pair_iou(1, 2, 0.6, 0.6), k=5, desc=False)
+    (ids_pl, scores_pl), _ = run_plan(store, plan)
+    assert list(ids_sql) == list(ids_pl)
+    np.testing.assert_array_equal(scores_sql, scores_pl)
+
+
+# ---------------------------------------------------------------------------
+# Service integration: sessions, fused batches, epochs
+# ---------------------------------------------------------------------------
+
+
+def _fresh_service(**kw):
+    from repro.service import MaskSearchService
+    store, rois = _db()
+    # fresh memory store per service so epochs/caches don't leak across tests
+    s = MaskStore.create_memory(np.asarray(store._masks).copy(),
+                                store.meta.copy(), store.cfg)
+    return MaskSearchService(s, provided_rois=rois, **kw)
+
+
+PAIR_SQL = ("SELECT image_id FROM MasksDatabaseView "
+            "ORDER BY IOU(saliency, attention, 0.6, 0.6) ASC LIMIT 6;")
+
+
+def test_pair_session_pagination_matches_oneshot():
+    svc = _fresh_service(verify_batch=4)
+    one = svc.query(PAIR_SQL)
+    page = svc.query(PAIR_SQL, session=True, page_size=3)
+    paged = list(page["page"]["ids"])
+    paged += list(svc.next_page(page["session"])["page"]["ids"])
+    assert paged == one["ids"]
+    svc.close()
+
+
+def test_pair_queries_fuse_in_batches():
+    svc = _fresh_service(verify_batch=4)
+    sqls = [PAIR_SQL,
+            "SELECT image_id FROM MasksDatabaseView "
+            "WHERE PAIR_DIFF(saliency, attention, 0.5, 0.5) > 20 "
+            "ORDER BY PAIR_DIFF(saliency, attention, 0.5, 0.5) DESC "
+            "LIMIT 6;"]
+    fused = svc.submit_batch(sqls)
+    assert svc.scheduler.stats.pair_passes > 0
+    solo = _fresh_service(verify_batch=4)
+    for sql, payload in zip(sqls, fused):
+        expect = solo.query(sql)
+        assert payload["ids"] == expect["ids"]
+        np.testing.assert_allclose(payload["scores"], expect["scores"])
+    svc.close()
+    solo.close()
+
+
+def test_pair_results_epoch_keyed_and_planner_evicts():
+    svc = _fresh_service()
+    out = svc.query(PAIR_SQL)
+    assert svc.query(PAIR_SQL)["cache_hit"]
+    n_cached = len(svc.planner.result_cache)
+    assert n_cached > 0
+    rng = np.random.default_rng(0)
+    r = svc.ingest(rng.random((2, H, W)).astype(np.float32),
+                   mask_ids=[5000, 5001], image_ids=[2500, 2500],
+                   mask_types=[1, 2])
+    # the mutation swept the dead generation out of both LRUs
+    assert r["evicted_cache_entries"] > 0
+    assert len(svc.planner.result_cache) == 0
+    assert svc.planner.result_cache.info.invalidations > 0
+    out2 = svc.query(PAIR_SQL)
+    assert not out2["cache_hit"]
+    assert out2["stats"]["n_candidates"] == out["stats"]["n_candidates"] + 1
+    svc.close()
+
+
+# ---------------------------------------------------------------------------
+# Hypothesis sweeps (skipped cleanly where hypothesis is not installed)
+# ---------------------------------------------------------------------------
+
+if HAVE_HYPOTHESIS:
+    _SETTINGS = settings(max_examples=25, deadline=None,
+                         suppress_health_check=[HealthCheck.too_slow])
+    _stats = st.sampled_from(["inter", "union", "diff"])
+    _threshs = st.floats(0.05, 0.95)
+    _rois = st.sampled_from([None, "provided", (4, 4, 28, 28),
+                             (0, 0, 16, 32), (7, 3, 9, 30)])
+
+    @st.composite
+    def _terms(draw):
+        return PairTerm(draw(_stats), 1, 2, draw(_threshs), draw(_threshs),
+                        draw(_rois))
+
+    @_SETTINGS
+    @given(term=_terms())
+    def test_pair_bounds_always_contain_exact(term):
+        _, rois = _db()
+        _check_bounds_sound(term, rois)
+
+    @st.composite
+    def _pair_exprs(draw):
+        base = draw(_terms())
+        shape = draw(st.integers(0, 2))
+        if shape == 1:
+            t2 = PairTerm("union" if base.stat != "union" else "inter",
+                          1, 2, base.ta, base.tb, base.roi)
+            return base / t2
+        if shape == 2:
+            return base - draw(_terms())
+        return base
+
+    @_SETTINGS
+    @given(rank=_pair_exprs(), desc=st.booleans(),
+           k=st.integers(1, N_IMG + 2))
+    def test_pair_rankings_backends_agree(rank, desc, k):
+        _, rois = _db()
+        _assert_backends_and_naive_agree(
+            LogicalPlan(order_by=rank, k=k, desc=desc), rois=rois)
+
+    @_SETTINGS
+    @given(term=_terms(), op=st.sampled_from(["<", "<=", ">", ">="]),
+           thr=st.sampled_from([0.0, 10.0, 60.0, 300.0, 900.0]))
+    def test_pair_filters_backends_agree(term, op, thr):
+        _, rois = _db()
+        _assert_backends_and_naive_agree(
+            LogicalPlan(predicate=Cmp(term, op, thr)), rois=rois)
