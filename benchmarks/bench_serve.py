@@ -65,12 +65,19 @@ TOPK = ("SELECT mask_id FROM MasksDatabaseView ORDER BY "
         "CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 25;")
 
 
+def _phase_seconds(svc):
+    """Per-phase wall-time totals from the service's phase histogram."""
+    return {phase: summ["sum_s"]
+            for phase, summ in svc.stats()["phases"].items()}
+
+
 def bench_cold_warm(root, record):
     svc = _fresh_service(root)
     t0 = time.perf_counter()
     svc.query(TOPK)
     t_cold = time.perf_counter() - t0
     cold_bytes = svc.store.io.bytes_read
+    cold_phases = _phase_seconds(svc)
 
     warm_times = []
     for _ in range(5):
@@ -83,9 +90,13 @@ def bench_cold_warm(root, record):
     _row("serve_cold", t_cold, f"bytes={cold_bytes}")
     _row("serve_warm", t_warm, f"bytes={warm_bytes};"
          f"speedup={t_cold / max(t_warm, 1e-9):.0f}x")
-    record["cold"] = {"latency_s": t_cold, "bytes_loaded": cold_bytes}
+    record["cold"] = {"latency_s": t_cold, "bytes_loaded": cold_bytes,
+                      "phase_s": cold_phases}
     record["warm"] = {"latency_s": t_warm, "bytes_loaded": warm_bytes,
                       "speedup_vs_cold": t_cold / max(t_warm, 1e-9)}
+    phases = ";".join(f"{k}={v * 1e3:.1f}ms"
+                      for k, v in sorted(cold_phases.items()))
+    _row("serve_cold_phases", sum(cold_phases.values()), phases)
     svc.close()
 
 
@@ -126,6 +137,7 @@ def bench_pagination(root, record):
     t_sess = time.perf_counter() - t0
     sess_bytes = svc.store.io.bytes_read
     sess_verified = page["stats"]["n_verified"]
+    sess_phases = _phase_seconds(svc)
     svc.close()
 
     store = MaskStore.open_disk(root)
@@ -142,7 +154,7 @@ def bench_pagination(root, record):
          f"{rerun_bytes / max(sess_bytes, 1):.2f}x_bytes")
     record["pagination"] = {
         "session": {"latency_s": t_sess, "bytes_loaded": sess_bytes,
-                    "n_verified": sess_verified},
+                    "n_verified": sess_verified, "phase_s": sess_phases},
         "rerun": {"latency_s": t_rerun, "bytes_loaded": rerun_bytes},
     }
 

@@ -21,6 +21,7 @@ import argparse
 import os
 import shutil
 import tempfile
+import time
 
 import numpy as np
 
@@ -48,6 +49,9 @@ def main():
     ap.add_argument("--backend", default="host",
                     choices=("host", "device", "mesh"),
                     help="execution backend for the whole session")
+    ap.add_argument("--explain", action="store_true",
+                    help="print the EXPLAIN ANALYZE operator tree for the "
+                         "ranking and a per-page phase-latency line")
     args = ap.parse_args()
 
     tmp = tempfile.mkdtemp(prefix="masksearch_s4_")
@@ -80,17 +84,36 @@ def main():
         print("== session: dispersion ranking, 25 rows per page ==")
         topk = ("SELECT mask_id FROM MasksDatabaseView ORDER BY "
                 "CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 25;")
+        if args.explain:
+            rep = svc.query("EXPLAIN ANALYZE " + topk)
+            print("-- EXPLAIN ANALYZE (first page's worth of work) --")
+            for line in rep["text"].splitlines():
+                print(f"  {line}")
+            print()
         page = svc.query(topk, session=True, page_size=25)
         sid = page["session"]
+        prev_bound = prev_verify = 0.0
         for i in range(4):
+            t0 = time.perf_counter()
             if i:
                 page = svc.next_page(sid)
+            wall = time.perf_counter() - t0
             st = page["stats"]
             ids = page["page"]["ids"]
             print(f"  page {i + 1}: rows {page['page']['offset']:>3}-"
                   f"{page['served'] - 1:>3} (first id {ids[0]:>4}) | "
                   f"cumulative verified {st['n_verified']:>3} | "
                   f"loaded {st['bytes_loaded'] * mb:6.2f} MB")
+            if args.explain:
+                # run stats are cumulative: the delta is this page's work
+                db_, dv = (st["bound_time_s"] - prev_bound,
+                           st["verify_time_s"] - prev_verify)
+                prev_bound, prev_verify = (st["bound_time_s"],
+                                           st["verify_time_s"])
+                other = max(wall - db_ - dv, 0.0)
+                print(f"          phases: bounds {db_ * 1e3:6.1f} ms | "
+                      f"verify {dv * 1e3:6.1f} ms | "
+                      f"serve+other {other * 1e3:6.1f} ms")
         print("  (each page resumed the frontier — no re-runs)\n")
 
         # -- 4. a second analyst: fused concurrent queries --------------------

@@ -59,6 +59,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..kernels import ops as kops
+from ..obs.metrics import REGISTRY as _REG
 from .distributed import (_bounds_from_corners, device_resolve,
                           make_chi_bounds_step, make_cp_multi_step,
                           make_mask_agg_step, make_mesh,
@@ -67,6 +68,18 @@ from .distributed import (_bounds_from_corners, device_resolve,
 
 F32_MAX = 3.4e38  # finite stand-in for +inf in float32 kernel compares
 _F32_MAX = F32_MAX
+
+_BACKEND_RESOLUTIONS = _REG.counter(
+    "masksearch_backend_resolutions_total",
+    "get_backend() resolutions by resolved backend", ("backend",))
+_BACKEND_BUILDS = _REG.counter(
+    "masksearch_backend_constructions_total",
+    "Named backend instances constructed (the resident mask/CHI upload "
+    "happens here)", ("backend",))
+_BACKEND_SYNCS = _REG.counter(
+    "masksearch_backend_syncs_total",
+    "Epoch re-pins of resident backend state after store mutations",
+    ("backend",))
 
 
 def spec_arrays(specs, dtype=np.float32):
@@ -324,6 +337,7 @@ class DeviceBackend(_KthValueMixin, ExecBackend):
         self._masks = self.store.device_masks()
         self._tables = self.store.chi_table
         self._epoch = self.store.epoch
+        _BACKEND_SYNCS.labels(backend=self.name).inc()
 
     def bounds(self, ctx, expr):
         return ctx.bounds(expr, cp_leaf=self._cp_bounds)
@@ -433,6 +447,7 @@ class MeshBackend(_KthValueMixin, ExecBackend):
         self._masks = self.store.resident_masks()
         self._tables_np = self.store.chi_host()
         self._epoch = self.store.epoch
+        _BACKEND_SYNCS.labels(backend=self.name).inc()
 
     def _pad(self, arr, fill=0):
         """Pad the leading dim to a positive device-count multiple."""
@@ -551,9 +566,11 @@ def get_backend(store, backend=None) -> ExecBackend:
     instance (e.g. a :class:`MeshBackend` built over an explicit mesh).
     """
     if backend is None or backend == "host":
+        _BACKEND_RESOLUTIONS.labels(backend="host").inc()
         return _HOST
     if isinstance(backend, ExecBackend):
         backend.sync()
+        _BACKEND_RESOLUTIONS.labels(backend=backend.name).inc()
         return backend
     cls = _NAMED.get(backend)
     if cls is None:
@@ -562,8 +579,10 @@ def get_backend(store, backend=None) -> ExecBackend:
     cache = store._backend_cache
     if backend not in cache:
         cache[backend] = cls(store)
+        _BACKEND_BUILDS.labels(backend=backend).inc()
     else:
         cache[backend].sync()
+    _BACKEND_RESOLUTIONS.labels(backend=backend).inc()
     return cache[backend]
 
 

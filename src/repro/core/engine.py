@@ -41,6 +41,7 @@ from typing import Optional
 
 import numpy as np
 
+from ..obs import trace as _trace
 from .backend import get_backend
 from .exprs import (Cmp, CP, GroupEvalContext, MaskEvalContext, Node,
                     PairEvalContext, PairTerm, Pred, eval_with_counts,
@@ -56,13 +57,35 @@ class ExecStats:
     n_rounds: int = 0                 # top-k verification rounds
     n_dropped_masks: int = 0          # ragged-group members excluded from
                                       # GROUP BY (see _make_context)
-    bytes_loaded: int = 0
+    bytes_loaded: int = 0             # store bytes metered for this run
+    bytes_saved: int = 0              # served from the shared-load cache
     bound_time_s: float = 0.0
     verify_time_s: float = 0.0
 
     @property
     def load_fraction(self) -> float:
         return self.n_verified / max(self.n_candidates, 1)
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["load_fraction"] = self.load_fraction
+        return d
+
+    def reset(self) -> None:
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, f.default)
+
+
+def _chi_row_nbytes(ctx) -> int:
+    """Bytes of CHI table one candidate's bounds pass touches (pair
+    candidates touch both roles' rows).  Best-effort: 0 when the store
+    doesn't expose its chunked CHI layout."""
+    chunks = getattr(ctx.store, "chi_chunks", None)
+    if not chunks:
+        return 0
+    row = chunks[0]
+    per = int(np.prod(row.shape[1:])) * row.dtype.itemsize
+    return per * (2 if isinstance(ctx, PairEvalContext) else 1)
 
 
 def _make_context(store, exprs, group_by_image: bool, positions, mask_types,
@@ -228,15 +251,20 @@ class _VerifyRun:
         if expr in self._bounds_memo:
             return self._bounds_memo[expr]
         t0 = time.perf_counter()
-        cached = self._bounds_hook.get(expr) if self._bounds_hook else None
-        if cached is not None:
-            lb, ub = cached
-        else:
-            lb, ub = self.backend.bounds(self.ctx, expr)
-            lb = np.asarray(lb, np.float64)
-            ub = np.asarray(ub, np.float64)
-            if self._bounds_hook is not None:
-                self._bounds_hook.put(expr, lb, ub)
+        with _trace.span("bounds") as sp:
+            cached = self._bounds_hook.get(expr) if self._bounds_hook else None
+            if cached is not None:
+                lb, ub = cached
+            else:
+                lb, ub = self.backend.bounds(self.ctx, expr)
+                lb = np.asarray(lb, np.float64)
+                ub = np.asarray(ub, np.float64)
+                if self._bounds_hook is not None:
+                    self._bounds_hook.put(expr, lb, ub)
+            sp.set(expr=repr(expr), candidates=self.n,
+                   cached=cached is not None,
+                   chi_bytes=0 if cached is not None
+                   else self.n * _chi_row_nbytes(self.ctx))
         self.stats.bound_time_s += time.perf_counter() - t0
         self._bounds_memo[expr] = (lb, ub)
         return lb, ub
@@ -342,11 +370,19 @@ class _VerifyRun:
         self.stats.n_rounds += 1
 
     def self_verify(self, batch: np.ndarray) -> None:
+        cache = self.store.cache_stats
         io0 = self.store.io.bytes_read
+        saved0, hits0 = cache.bytes_saved, cache.hits
         t0 = time.perf_counter()
-        self.apply_exact(batch, self.exact_values(batch))
+        with _trace.span("verify.round") as sp:
+            self.apply_exact(batch, self.exact_values(batch))
+            sp.set(batch=len(batch),
+                   bytes_loaded=self.store.io.bytes_read - io0,
+                   bytes_saved=cache.bytes_saved - saved0,
+                   cache_hits=cache.hits - hits0)
         self.stats.verify_time_s += time.perf_counter() - t0
         self.stats.bytes_loaded += self.store.io.bytes_read - io0
+        self.stats.bytes_saved += cache.bytes_saved - saved0
 
     def _drain(self) -> None:
         while not self.finished():

@@ -29,6 +29,7 @@ from typing import Optional
 
 import numpy as np
 
+from ..obs import trace as _trace
 from . import engine
 from .exprs import (And, BinOp, Cmp, CP, Node, Not, Or, PairTerm, Pred,
                     RoiArea, TypeIn, is_group_expr, is_pair_expr,
@@ -268,6 +269,15 @@ def compile_plan(store, plan: LogicalPlan, *, provided_rois=None,
             "use bounds_hook to cache per-expression bounds for "
             f"{kind!r} plans")
     paired = plan.paired
+    # Run construction is the plan/compile phase: context build + the full
+    # CHI bounds pass (per-expression ``bounds`` spans nest inside).
+    with _trace.span("plan.compile") as sp:
+        run = _lower(store, plan, kind, paired, bounds, common)
+        sp.set(kind=kind, candidates=run.n)
+    return run
+
+
+def _lower(store, plan, kind, paired, bounds, common):
     if kind == "filter":
         cls = engine.PairFilterRun if paired else engine.FilterRun
         return cls(store, plan.predicate, bounds=bounds, **common)

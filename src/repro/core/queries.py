@@ -50,6 +50,7 @@ import dataclasses
 import re
 from typing import Optional
 
+from ..obs import trace as _trace
 from . import plan as plan_lib
 from .exprs import (AggCP, And, BinOp, Cmp, Const, CP, Node, Not, Or,
                     PairTerm, Pred, RoiArea, TypeIn, pair_iou)
@@ -115,6 +116,10 @@ class Query:
     group_by_image: bool = False
     predicate: Optional[Pred] = None
     plan: Optional[LogicalPlan] = dataclasses.field(default=None, repr=False)
+    # "plan" | "analyze" when the SQL carried an EXPLAIN [ANALYZE] prefix.
+    # Deliberately outside _snapshot(): toggling it never invalidates the
+    # compiled plan.
+    explain: Optional[str] = None
 
     def __post_init__(self):
         if self.plan is None:
@@ -162,7 +167,18 @@ class Query:
             **kw):
         """Execute against a MaskStore.  Result shapes are unchanged from
         the flat front-end: filter → ``(ids, stats)``, rankings →
-        ``((ids, scores), stats)``, scalar agg → ``(value, stats)``."""
+        ``((ids, scores), stats)``, scalar agg → ``(value, stats)``.
+
+        A query parsed from ``EXPLAIN <sql>`` returns the logical operator
+        tree (not executed); ``EXPLAIN ANALYZE <sql>`` executes under a
+        forced-on tracer and returns the annotated report dict (see
+        :mod:`repro.obs.explain`)."""
+        if self.explain is not None:
+            from ..obs import explain as explain_mod
+            if self.explain == "plan":
+                return explain_mod.explain_plan(self.sync_plan())
+            return explain_mod.explain_analyze(
+                store, self.sync_plan(), provided_rois=provided_rois, **kw)
         return plan_lib.run_plan(store, self.sync_plan(),
                                  provided_rois=provided_rois,
                                  use_index=use_index, **kw)
@@ -508,8 +524,24 @@ class _Parser:
 
 
 def parse(sql: str) -> Query:
-    """Parse a MaskSearch query string into an executable (compat) plan."""
-    return _Parser(_tokenize(sql)).parse()
+    """Parse a MaskSearch query string into an executable (compat) plan.
+
+    A leading ``EXPLAIN [ANALYZE]`` is accepted in front of any query and
+    recorded on :attr:`Query.explain` ("plan" / "analyze"); the rest of
+    the statement parses exactly as it would alone."""
+    with _trace.span("parse") as sp:
+        tokens = _tokenize(sql)
+        explain = None
+        if tokens and tokens[0].upper() == "EXPLAIN":
+            explain = "plan"
+            tokens = tokens[1:]
+            if tokens and tokens[0].upper() == "ANALYZE":
+                explain = "analyze"
+                tokens = tokens[1:]
+        q = _Parser(tokens).parse()
+        q.explain = explain
+        sp.set(kind=q.kind, explain=explain or "")
+    return q
 
 
 def parse_plan(sql: str) -> LogicalPlan:

@@ -87,15 +87,22 @@ class IOStats:
         ios = self.files_read + self.bytes_read // EBS_IO_CHUNK
         return self.bytes_read / EBS_THROUGHPUT_BYTES_S + ios / EBS_IOPS
 
+    # Reflection, not field lists: a counter added to the dataclass can
+    # never silently drift out of merge/reset (tests/test_stats_consistency
+    # asserts this for every stats dataclass).
     def merge(self, other: "IOStats") -> None:
-        self.files_read += other.files_read
-        self.bytes_read += other.bytes_read
-        self.wall_time_s += other.wall_time_s
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other,
+                                                                  f.name))
+
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["modeled_ebs_time_s"] = self.modeled_ebs_time_s
+        return d
 
     def reset(self) -> None:
-        self.files_read = 0
-        self.bytes_read = 0
-        self.wall_time_s = 0.0
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, f.default)
 
 
 @dataclasses.dataclass
@@ -119,12 +126,14 @@ class CacheStats:
         total = self.hits + self.misses
         return self.hits / total if total else 0.0
 
+    def as_dict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["hit_rate"] = self.hit_rate
+        return d
+
     def reset(self) -> None:
-        self.hits = 0
-        self.misses = 0
-        self.bytes_saved = 0
-        self.evictions = 0
-        self.invalidations = 0
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, f.default)
 
 
 MASK_META_DTYPE = np.dtype([
@@ -894,6 +903,13 @@ class StoreSnapshot:
                 f"CHI bounds pinned at epoch {self.epoch} cannot be "
                 f"recomputed: store moved to epoch {self._store.epoch}")
         return self._store.chi_table
+
+    @property
+    def chi_chunks(self) -> list | None:
+        """Chunked CHI layout for observability byte accounting — None (not
+        an error) once the store moves on; row *sizes* don't change across
+        epochs but the freshness contract stays uniform with chi_table."""
+        return self._store.chi_chunks if self.fresh else None
 
     def chi_host(self, positions: np.ndarray | None = None) -> np.ndarray:
         """Host CHI rows at the pinned epoch — same freshness contract as

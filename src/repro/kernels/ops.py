@@ -18,10 +18,12 @@ from __future__ import annotations
 
 import functools
 import os
+import time
 
 import jax
 import jax.numpy as jnp
 
+from ..obs.metrics import REGISTRY as _REG
 from . import ref
 from .chi_build import chi_cell_hist_pallas
 from .cp_count import cp_count_multi_pallas, cp_count_pallas
@@ -29,6 +31,49 @@ from .mask_agg import mask_agg_counts_pallas
 from .pair_count import pair_counts_pallas
 
 _FORCE_INTERPRET = os.environ.get("REPRO_FORCE_PALLAS_INTERPRET", "") == "1"
+
+_KERNEL_LAUNCHES = _REG.counter(
+    "masksearch_kernel_launches_total",
+    "Dispatches through each public kernel wrapper", ("kernel",))
+_KERNEL_SECONDS = _REG.histogram(
+    "masksearch_kernel_dispatch_seconds",
+    "Wall time per kernel wrapper dispatch (first call includes trace+jit "
+    "compile; steady-state is the launch itself)", ("kernel",))
+_JIT_COMPILES = _REG.counter(
+    "masksearch_jit_compiles_total",
+    "jit cache-entry growth observed per wrapper — a steadily rising count "
+    "means shape/static-arg churn is defeating the jit cache", ("kernel",))
+
+
+def _instrument(name: str, fn):
+    """Wrap a jitted kernel entry point with launch counting, dispatch
+    timing, and recompile detection (via the jit cache-size delta, absent
+    on older jax — then the compile counter just stays 0)."""
+    launches = _KERNEL_LAUNCHES.labels(kernel=name)
+    seconds = _KERNEL_SECONDS.labels(kernel=name)
+    compiles = _JIT_COMPILES.labels(kernel=name)
+
+    def _cache_size() -> int:
+        sz = getattr(fn, "_cache_size", None)
+        try:
+            return int(sz()) if callable(sz) else -1
+        except Exception:
+            return -1
+
+    @functools.wraps(fn)
+    def wrapper(*args, **kw):
+        before = _cache_size()
+        t0 = time.perf_counter()
+        try:
+            return fn(*args, **kw)
+        finally:
+            seconds.observe(time.perf_counter() - t0)
+            launches.inc()
+            after = _cache_size()
+            if 0 <= before < after:
+                compiles.inc(after - before)
+
+    return wrapper
 
 
 def _on_tpu() -> bool:
@@ -105,6 +150,13 @@ def pair_counts(masks_a, masks_b, rois, ta, tb, *,
         return pair_counts_pallas(masks_a, masks_b, rois, ta, tb,
                                   interpret=interpret or not _on_tpu())
     return ref.pair_counts_ref(masks_a, masks_b, rois, ta, tb)
+
+
+cp_count = _instrument("cp_count", cp_count)
+cp_count_multi = _instrument("cp_count_multi", cp_count_multi)
+chi_cell_hist = _instrument("chi_cell_hist", chi_cell_hist)
+mask_agg_counts = _instrument("mask_agg_counts", mask_agg_counts)
+pair_counts = _instrument("pair_counts", pair_counts)
 
 
 def mask_agg_iou(group_masks, rois, thresh, **kw):

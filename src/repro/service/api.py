@@ -22,6 +22,7 @@ HTTP layer in :mod:`.server` is a thin translation.
 
 from __future__ import annotations
 
+import contextlib
 import copy
 import dataclasses
 import threading
@@ -35,6 +36,10 @@ from ..core.engine import ExecStats
 from ..core.plan import LogicalPlan, compile_plan
 from ..core.queries import Query, parse
 from ..core.store import MASK_META_DTYPE
+from ..obs import trace as trace_mod
+from ..obs.explain import explain_analyze, explain_plan
+from ..obs.metrics import REGISTRY as GLOBAL_REGISTRY
+from ..obs.metrics import MetricsRegistry, dataclass_sampler
 from .planner import Planner, roi_signature
 from .scheduler import FusedScheduler
 from .session import SessionManager
@@ -63,7 +68,7 @@ class MaskSearchService:
     def __init__(self, store, *, provided_rois: Optional[np.ndarray] = None,
                  result_cache_size: int = 128, bounds_cache_size: int = 64,
                  verify_batch: int = 256, share_loads: bool = True,
-                 max_sessions: int = 256, backend=None):
+                 max_sessions: int = 256, backend=None, trace: bool = False):
         self.store = store
         # The physical execution layer every plan compiles onto: host
         # (default), the HBM-resident device tier, or the shard_map mesh.
@@ -82,6 +87,21 @@ class MaskSearchService:
                         "filtered_topk": 0, "scalar_agg": 0,
                         "result_cache_hits": 0}
         self._started_s = time.monotonic()
+        # Observability: a per-service tracer (its ring buffer backs
+        # ``GET /trace/<query_id>``; ``trace=True`` traces every query, and
+        # EXPLAIN ANALYZE forces it on per query regardless) and a
+        # per-service metrics registry (the process-global registry carries
+        # kernel/jit/backend counters and is appended at scrape time).
+        self.tracer = trace_mod.Tracer(enabled=trace)
+        self.metrics = MetricsRegistry()
+        self._phase_hist = self.metrics.histogram(
+            "masksearch_query_phase_seconds",
+            "Per-query phase latency: parse, plan, bounds, verify",
+            ("phase",))
+        self._query_seconds = self.metrics.histogram(
+            "masksearch_query_seconds",
+            "End-to-end service query latency by plan kind", ("kind",))
+        self._register_metrics()
         # Long-lived cross-session shared-load cache: every verification load
         # any query pays for is reusable by every later query.
         self._owns_cache = store.enable_cache() if share_loads else False
@@ -94,14 +114,118 @@ class MaskSearchService:
 
     # -- internals --------------------------------------------------------
 
+    def _register_metrics(self) -> None:
+        """Wire every live stats object into the pull-based registry — the
+        collectors sample at scrape time, so the query path never pushes."""
+        reg = self.metrics
+        reg.register_collector(dataclass_sampler(
+            "masksearch_store_io", "counter",
+            "Store I/O meters (monotonic)", lambda: self.store.io))
+        reg.register_collector(dataclass_sampler(
+            "masksearch_shared_cache", "counter",
+            "Cross-query shared-load cache", lambda: self.store.cache_stats))
+        reg.register_collector(dataclass_sampler(
+            "masksearch_scheduler", "counter",
+            "Fused cross-query verification scheduler",
+            lambda: self.scheduler.stats))
+        self.planner.register_metrics(reg)
+
+        def _query_counts() -> list:
+            counts = dict(self._counts)
+            return [("masksearch_queries_total", "counter",
+                     "Queries served by kind",
+                     [({"kind": k}, float(v)) for k, v in counts.items()])]
+
+        def _gauges() -> list:
+            n_sess = len(self.sessions)
+            return [
+                ("masksearch_sessions_active", "gauge",
+                 "Live interactive sessions", [({}, float(n_sess))]),
+                ("masksearch_sessions_created_total", "counter",
+                 "Sessions ever created",
+                 [({}, float(self.sessions.created))]),
+                ("masksearch_sessions_evicted_total", "counter",
+                 "Sessions LRU-evicted",
+                 [({}, float(self.sessions.evicted))]),
+                ("masksearch_store_epoch", "gauge",
+                 "Mask-store epoch (mutation counter)",
+                 [({}, float(self.store.epoch))]),
+                ("masksearch_store_masks", "gauge",
+                 "Masks resident in the store",
+                 [({}, float(len(self.store)))]),
+                ("masksearch_uptime_seconds", "gauge", "Service uptime",
+                 [({}, time.monotonic() - self._started_s)]),
+            ]
+
+        reg.register_collector(_query_counts)
+        reg.register_collector(_gauges)
+
+    @contextlib.contextmanager
+    def _traced(self, label: str, kind: str):
+        """Root query span on the service tracer when tracing is on; yields
+        the root span (or None) so callers can stamp ``query_id`` into
+        their payloads."""
+        tr = self.tracer
+        if not tr.enabled:
+            yield None
+            return
+        with tr.activate():
+            with tr.query_span(label=label) as root:
+                root.set(kind=kind)
+                yield root
+
+    def _observe_phases(self, parse_s: float, build_s: float, run,
+                        kind: str, total_s: float) -> None:
+        ph = self._phase_hist
+        ph.labels(phase="parse").observe(parse_s)
+        if run is None:                      # result-cache hit: no run
+            ph.labels(phase="plan").observe(build_s)
+        else:
+            s = run.stats
+            # build_s wraps compile+ensure; carve out the metered bounds
+            # and verify time so "plan" is the pure lowering cost.
+            ph.labels(phase="plan").observe(
+                max(build_s - s.bound_time_s - s.verify_time_s, 0.0))
+            ph.labels(phase="bounds").observe(s.bound_time_s)
+            ph.labels(phase="verify").observe(s.verify_time_s)
+        self._query_seconds.labels(kind=kind).observe(total_s)
+
     def _plan(self, sql) -> LogicalPlan:
         """Normalize any front-end shape (SQL text, compat Query, or a
         LogicalPlan built directly) to the IR."""
+        plan, _ = self._plan_explain(sql)
+        return plan
+
+    def _plan_explain(self, sql) -> tuple:
+        """→ (LogicalPlan, explain mode) — mode is "plan"/"analyze" when the
+        SQL carried an EXPLAIN [ANALYZE] prefix, else None."""
         if isinstance(sql, str):
-            return parse(sql).plan
+            q = parse(sql)
+            return q.plan, q.explain
         if isinstance(sql, Query):
-            return sql.sync_plan()   # honor post-parse field mutations
-        return sql
+            return sql.sync_plan(), sql.explain  # honor post-parse mutations
+        return sql, None
+
+    def _explain_payload(self, plan: LogicalPlan, mode: str, rois,
+                         roi_sig: str, sql) -> dict:
+        """Serve EXPLAIN / EXPLAIN ANALYZE.  ANALYZE always executes —
+        never the result cache (the point is the fresh per-operator
+        stats) — but goes through the bounds cache like a real query, so
+        the report shows genuine cache interplay.  The trace lands in the
+        service tracer's ring buffer (``GET /trace/<query_id>``)."""
+        self._counts["explain"] = self._counts.get("explain", 0) + 1
+        if mode == "plan":
+            report = explain_plan(plan)
+        else:
+            report = explain_analyze(
+                self.store, plan, provided_rois=rois,
+                backend=self.backend, verify_batch=self.verify_batch,
+                bounds_hook=self.planner.bounds_hook(
+                    plan, roi_sig, self.backend.name, self.store.epoch),
+                tracer=self.tracer,
+                label=sql if isinstance(sql, str) else plan.signature())
+        report["explain"] = mode
+        return report
 
     def _rois(self, rois):
         """→ (resolved roi array, content signature)."""
@@ -157,35 +281,61 @@ class MaskSearchService:
               page_size: Optional[int] = None) -> dict:
         """Execute one query.  ``session=True`` (rankings only — plain or
         predicate-filtered top-k) opens an incremental session and returns
-        its first page."""
+        its first page.  SQL carrying an ``EXPLAIN [ANALYZE]`` prefix is
+        routed to the annotated-operator-tree report instead."""
+        t_start = time.perf_counter()
         with self._lock:
-            plan = self._plan(sql)
+            t0 = time.perf_counter()
+            plan, explain = self._plan_explain(sql)
+            parse_s = time.perf_counter() - t0
             rois, roi_sig = self._rois(rois)
+            if explain is not None:
+                return self._explain_payload(plan, explain, rois, roi_sig,
+                                             sql)
             self._counts["total"] += 1
             self._counts[plan.kind] = self._counts.get(plan.kind, 0) + 1
+            label = sql if isinstance(sql, str) else plan.signature()
 
             if session:
                 if plan.kind not in ("topk", "filtered_topk"):
                     raise ValueError("sessions require a ranking (ORDER BY … "
                                      f"LIMIT) query, got {plan.kind!r}")
-                run = self._build_run(plan, rois, roi_sig)
                 size = page_size or plan.k or DEFAULT_PAGE
-                sess = self.sessions.create(
-                    sql if isinstance(sql, str) else repr(plan), run, size,
-                    kind=plan.kind)
-                return self._serve_page(sess, size)
+                with self._traced(label, plan.kind) as root:
+                    t1 = time.perf_counter()
+                    run = self._build_run(plan, rois, roi_sig)
+                    build_s = time.perf_counter() - t1
+                    sess = self.sessions.create(
+                        sql if isinstance(sql, str) else repr(plan), run,
+                        size, kind=plan.kind)
+                    payload = self._serve_page(sess, size)
+                if root is not None:
+                    payload["query_id"] = root.attrs.get("query_id")
+                self._observe_phases(parse_s, build_s, run, plan.kind,
+                                     time.perf_counter() - t_start)
+                return payload
 
             cached = self.planner.cached_result(plan, roi_sig,
                                                 self.backend.name,
                                                 self.store.epoch)
             if cached is not None:
-                return self._cache_hit_payload(cached)
+                payload = self._cache_hit_payload(cached)
+                self._observe_phases(parse_s, 0.0, None, plan.kind,
+                                     time.perf_counter() - t_start)
+                return payload
 
-            run = self._build_run(plan, rois, roi_sig)
-            run.ensure(plan.k)
+            with self._traced(label, plan.kind) as root:
+                t1 = time.perf_counter()
+                run = self._build_run(plan, rois, roi_sig)
+                run.ensure(plan.k)
+                build_s = time.perf_counter() - t1
             payload = self._finish_payload(plan, run)
+            if root is not None:
+                payload["query_id"] = root.attrs.get("query_id")
             self.planner.store_result(plan, roi_sig, copy.deepcopy(payload),
                                       self.backend.name, self.store.epoch)
+            self._observe_phases(parse_s, build_s, run, plan.kind,
+                                 time.perf_counter() - t_start)
             return payload
 
     def submit_batch(self, sqls: Sequence, *, rois=None) -> list:
@@ -196,7 +346,11 @@ class MaskSearchService:
             entries = []
             jobs = []
             for sql in sqls:
-                plan = self._plan(sql)
+                plan, explain = self._plan_explain(sql)
+                if explain is not None:
+                    entries.append((plan, None, self._explain_payload(
+                        plan, explain, rois, roi_sig, sql)))
+                    continue
                 self._counts["total"] += 1
                 self._counts[plan.kind] = self._counts.get(plan.kind, 0) + 1
                 cached = self.planner.cached_result(plan, roi_sig,
@@ -213,7 +367,8 @@ class MaskSearchService:
                 jobs.append(run)
                 entries.append((plan, run, None))
             if jobs:
-                self.scheduler.drive(jobs)
+                with self._traced(f"batch[{len(jobs)}]", "batch"):
+                    self.scheduler.drive(jobs)
             results = []
             for plan, run, payload in entries:
                 if payload is None:
@@ -252,9 +407,19 @@ class MaskSearchService:
 
     def next_page(self, session_id: str, k: Optional[int] = None) -> dict:
         """Resume a session's verification frontier for the next page."""
+        t_start = time.perf_counter()
         with self._lock:
             sess = self.sessions.get(session_id)
-            return self._serve_page(sess, k)
+            v0 = sess.run.stats.verify_time_s
+            with self._traced(f"session:{session_id}", sess.kind) as root:
+                payload = self._serve_page(sess, k)
+            if root is not None:
+                payload["query_id"] = root.attrs.get("query_id")
+            self._phase_hist.labels(phase="verify").observe(
+                sess.run.stats.verify_time_s - v0)
+            self._query_seconds.labels(kind="page").observe(
+                time.perf_counter() - t_start)
+            return payload
 
     def next_pages(self, requests: dict) -> dict:
         """Advance several sessions at once: their frontiers are fused into
@@ -282,9 +447,10 @@ class MaskSearchService:
                         "error": f"session pinned at epoch "
                                  f"{sess.run.epoch}; store moved to epoch "
                                  f"{self.store.epoch}"}
-            self.scheduler.drive([s.run for s, _ in live])
-            out = {s.id: self._serve_page(s, k, scheduler_driven=True)
-                   for s, k in live}
+            with self._traced(f"pages[{len(live)}]", "page_batch"):
+                self.scheduler.drive([s.run for s, _ in live])
+                out = {s.id: self._serve_page(s, k, scheduler_driven=True)
+                       for s, k in live}
             out.update(stale)
             return out
 
@@ -382,6 +548,8 @@ class MaskSearchService:
         with self._lock:
             io = self.store.io
             cache = self.store.cache_stats
+            phases = {labels.get("phase", "_"): child.summary()
+                      for labels, child in self._phase_hist.samples()}
             return {
                 "uptime_s": time.monotonic() - self._started_s,
                 "backend": self.backend.name,
@@ -391,13 +559,34 @@ class MaskSearchService:
                 **self.planner.stats(),
                 "sessions": self.sessions.stats(),
                 "scheduler": self.scheduler.stats.as_dict(),
-                "store_io": {"files_read": io.files_read,
-                             "bytes_read": io.bytes_read,
-                             "wall_time_s": io.wall_time_s,
+                "phases": phases,
+                "trace": {"enabled": self.tracer.enabled,
+                          "retained": self.tracer.trace_ids()},
+                # Reflected, not hand-listed: a field added to IOStats or
+                # CacheStats shows up here (and in /metrics) automatically.
+                "store_io": {**dataclasses.asdict(io),
                              "modeled_ebs_time_s": io.modeled_ebs_time_s},
-                "shared_cache": {"hits": cache.hits, "misses": cache.misses,
-                                 "bytes_saved": cache.bytes_saved,
-                                 "evictions": cache.evictions,
-                                 "invalidations": cache.invalidations,
+                "shared_cache": {**dataclasses.asdict(cache),
                                  "hit_rate": cache.hit_rate},
             }
+
+    def metrics_text(self) -> str:
+        """The Prometheus text exposition ``GET /metrics`` serves: this
+        service's registry (queries, phases, store I/O, caches, sessions)
+        followed by the process-global registry (kernel launches, jit
+        compiles, backend resolutions)."""
+        return (self.metrics.prometheus_text() +
+                GLOBAL_REGISTRY.prometheus_text())
+
+    def trace(self, query_id: str = "last", *, fmt: str = "json") -> dict:
+        """A retained trace by query id (``"last"`` → most recent), as
+        nested JSON or, with ``fmt="chrome"``, the Chrome trace-event
+        format (load in Perfetto / chrome://tracing)."""
+        root = (self.tracer.last_trace() if query_id in ("", "last")
+                else self.tracer.get_trace(query_id))
+        if root is None:
+            raise KeyError(f"no retained trace for {query_id!r}; "
+                           f"retained: {self.tracer.trace_ids()}")
+        if fmt == "chrome":
+            return trace_mod.chrome_trace(root)
+        return root.to_dict()

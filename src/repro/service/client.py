@@ -24,14 +24,16 @@ class ServiceClient:
         self.timeout = timeout
 
     # -- plumbing ---------------------------------------------------------
-    def _call(self, method: str, path: str, body: Optional[dict] = None):
+    def _call(self, method: str, path: str, body: Optional[dict] = None,
+              *, raw: bool = False):
         data = json.dumps(body).encode() if body is not None else None
         req = _request.Request(
             self.base_url + path, data=data, method=method,
             headers={"Content-Type": "application/json"} if data else {})
         try:
             with _request.urlopen(req, timeout=self.timeout) as resp:
-                return json.loads(resp.read())
+                payload = resp.read()
+                return payload.decode() if raw else json.loads(payload)
         except HTTPError as e:
             try:
                 message = json.loads(e.read()).get("error", str(e))
@@ -91,3 +93,20 @@ class ServiceClient:
 
     def healthz(self) -> dict:
         return self._call("GET", "/healthz")
+
+    # -- observability ----------------------------------------------------
+    def explain(self, sql: str, *, analyze: bool = True, rois=None) -> dict:
+        """``EXPLAIN [ANALYZE] <sql>`` → the (annotated) operator tree.
+        Idempotent if ``sql`` already carries an EXPLAIN prefix."""
+        if not sql.lstrip().upper().startswith("EXPLAIN"):
+            sql = ("EXPLAIN ANALYZE " if analyze else "EXPLAIN ") + sql
+        return self.query(sql, rois=rois)
+
+    def metrics(self) -> str:
+        """The Prometheus text exposition from ``GET /metrics``."""
+        return self._call("GET", "/metrics", raw=True)
+
+    def trace(self, query_id: str = "last", *, fmt: str = "json") -> dict:
+        """A retained span tree (``fmt="chrome"`` → trace-event JSON)."""
+        suffix = f"?format={fmt}" if fmt != "json" else ""
+        return self._call("GET", f"/trace/{query_id}{suffix}")

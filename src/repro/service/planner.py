@@ -224,3 +224,17 @@ class Planner:
     def stats(self) -> dict:
         return {"result_cache": self.result_cache.info.as_dict(),
                 "bounds_cache": self.bounds_cache.info.as_dict()}
+
+    def register_metrics(self, registry) -> None:
+        """Expose both cache tiers on a :class:`~repro.obs.metrics.
+        MetricsRegistry` — pull-based, so every scrape reflects the live
+        :class:`CacheInfo` without touching the query path."""
+        from ..obs.metrics import dataclass_sampler
+        registry.register_collector(dataclass_sampler(
+            "masksearch_result_cache", "gauge",
+            "Planner result-cache (whole-plan LRU) state",
+            lambda: self.result_cache.info))
+        registry.register_collector(dataclass_sampler(
+            "masksearch_bounds_cache", "gauge",
+            "Planner bounds-cache (per-expression LRU) state",
+            lambda: self.bounds_cache.info))

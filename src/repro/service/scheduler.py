@@ -40,6 +40,7 @@ import numpy as np
 from ..core.backend import F32_MAX as _F32_MAX
 from ..core.backend import get_backend
 from ..core.exprs import CP, MaskEvalContext, PairEvalContext, PairTerm
+from ..obs import trace as _trace
 
 
 @dataclasses.dataclass
@@ -83,6 +84,24 @@ def _spec_key(job, term) -> tuple:
     if isinstance(term, PairTerm):
         return (term.ta, term.tb, term.roi, roi_src)
     return (term, roi_src)
+
+
+def _apportion(total: int, weights) -> list:
+    """Split integer ``total`` proportionally to ``weights`` so the shares
+    sum to exactly ``total`` (largest-remainder method, deterministic
+    tie-break by position)."""
+    total = int(total)
+    wsum = sum(weights)
+    if wsum <= 0 or total <= 0:
+        return [0] * len(weights)
+    raw = [total * w / wsum for w in weights]
+    shares = [int(r) for r in raw]
+    rest = total - sum(shares)
+    order = sorted(range(len(weights)), key=lambda i: raw[i] - shares[i],
+                   reverse=True)
+    for i in order[:rest]:
+        shares[i] += 1
+    return shares
 
 
 def _pair_fusable(job) -> bool:
@@ -144,48 +163,66 @@ class FusedScheduler:
         all_pos = np.unique(np.concatenate(
             [j.ctx.positions[b] for j, b in pairs]))
         io0 = store.io.bytes_read
+        saved0 = store.cache_stats.bytes_saved
         t0 = time.perf_counter()
 
-        # Dedupe CP descriptors across jobs.  CP nodes hash by value, so two
-        # sessions ranking by the same term share one kernel row (see
-        # _spec_key for the "provided"-ROI caveat).
-        rows: dict = {}
-        specs: list = []
-        for job, _ in pairs:
-            for term in set(job.cp_terms()):
-                key = _spec_key(job, term)
-                if key not in rows:
-                    rois = job.ctx.resolve_rois(term.roi, all_pos)
-                    rows[key] = len(specs)
-                    specs.append((rois, term.lv, min(term.uv, _F32_MAX)))
-        counts = self.backend.fused_counts(store, all_pos, specs)
+        with _trace.span("scheduler.fused_pass") as sp:
+            # Dedupe CP descriptors across jobs.  CP nodes hash by value, so
+            # two sessions ranking by the same term share one kernel row
+            # (see _spec_key for the "provided"-ROI caveat).
+            rows: dict = {}
+            specs: list = []
+            for job, _ in pairs:
+                for term in set(job.cp_terms()):
+                    key = _spec_key(job, term)
+                    if key not in rows:
+                        rois = job.ctx.resolve_rois(term.roi, all_pos)
+                        rows[key] = len(specs)
+                        specs.append((rois, term.lv, min(term.uv, _F32_MAX)))
+            counts = self.backend.fused_counts(store, all_pos, specs)
 
-        self.stats.fused_passes += 1
-        self.stats.fused_descriptors += len(specs)
-        self.stats.fused_masks += len(all_pos)
+            self.stats.fused_passes += 1
+            self.stats.fused_descriptors += len(specs)
+            self.stats.fused_masks += len(all_pos)
 
-        for job, batch in pairs:
-            pos = job.ctx.positions[batch]
-            sub = np.searchsorted(all_pos, pos)
-            cdict = {}
-            for term in set(job.cp_terms()):
-                cdict[term] = counts[rows[_spec_key(job, term)]][sub]
-            job.apply_exact(batch, job.fused_values(batch, cdict))
+            for job, batch in pairs:
+                pos = job.ctx.positions[batch]
+                sub = np.searchsorted(all_pos, pos)
+                cdict = {}
+                for term in set(job.cp_terms()):
+                    cdict[term] = counts[rows[_spec_key(job, term)]][sub]
+                job.apply_exact(batch, job.fused_values(batch, cdict))
+            sp.set(jobs=len(pairs), descriptors=len(specs),
+                   union_masks=len(all_pos),
+                   bytes_loaded=store.io.bytes_read - io0,
+                   bytes_saved=store.cache_stats.bytes_saved - saved0)
 
         # Per-job ExecStats get a fair share of the round's shared load and
         # wall time (proportional to batch size); the exact aggregate lives
         # in SchedulerStats.fused_bytes_loaded / fused_time_s.
         self._account(pairs, store.io.bytes_read - io0,
+                      store.cache_stats.bytes_saved - saved0,
                       time.perf_counter() - t0)
 
-    def _account(self, pairs, bytes_delta: int, elapsed: float) -> None:
+    def _account(self, pairs, bytes_delta: int, saved_delta: int,
+                 elapsed: float) -> None:
+        """Attribute one fused round's *metered* bytes and wall time to the
+        participating runs, proportional to batch size.  The byte
+        apportionment is exact (largest remainder), so the sum of per-run
+        ``bytes_loaded`` equals the store's metered delta — never the
+        truncation drift of per-job ``int(delta * share)``.  Bytes the
+        shared-load cache served count once globally (the store meters only
+        misses) and are attributed per run as ``bytes_saved``."""
         self.stats.fused_bytes_loaded += bytes_delta
         self.stats.fused_time_s += elapsed
-        total = sum(len(b) for _, b in pairs)
-        for job, batch in pairs:
-            share = len(batch) / max(total, 1)
-            job.stats.bytes_loaded += int(bytes_delta * share)
-            job.stats.verify_time_s += elapsed * share
+        weights = [len(b) for _, b in pairs]
+        for (job, batch), share_bytes, share_saved in zip(
+                pairs, _apportion(bytes_delta, weights),
+                _apportion(saved_delta, weights)):
+            job.stats.bytes_loaded += share_bytes
+            job.stats.bytes_saved += share_saved
+            job.stats.verify_time_s += \
+                elapsed * len(batch) / max(sum(weights), 1)
 
     # -- the fused dual-mask pass ----------------------------------------
     def _fused_pair_pass(self, pairs) -> None:
@@ -206,32 +243,40 @@ class FusedScheduler:
         u_pa = (all_keys >> 32).astype(np.int64)
         u_pb = (all_keys & 0xffffffff).astype(np.int64)
         io0 = store.io.bytes_read
+        saved0 = store.cache_stats.bytes_saved
         t0 = time.perf_counter()
 
-        rows: dict = {}
-        specs: list = []
-        for job, _ in pairs:
-            for term in set(job.cp_terms()):
-                key = _spec_key(job, term)
-                if key not in rows:
-                    rows[key] = len(specs)
-                    specs.append((job.ctx.resolve_pair_rois(term.roi, u_pa),
-                                  term.ta, term.tb))
-        counts = self.backend.fused_pair_counts(store, u_pa, u_pb, specs)
+        with _trace.span("scheduler.pair_pass") as sp:
+            rows: dict = {}
+            specs: list = []
+            for job, _ in pairs:
+                for term in set(job.cp_terms()):
+                    key = _spec_key(job, term)
+                    if key not in rows:
+                        rows[key] = len(specs)
+                        specs.append(
+                            (job.ctx.resolve_pair_rois(term.roi, u_pa),
+                             term.ta, term.tb))
+            counts = self.backend.fused_pair_counts(store, u_pa, u_pb, specs)
 
-        self.stats.pair_passes += 1
-        self.stats.pair_descriptors += len(specs)
-        self.stats.pair_pairs += len(all_keys)
+            self.stats.pair_passes += 1
+            self.stats.pair_descriptors += len(specs)
+            self.stats.pair_pairs += len(all_keys)
 
-        stat_row = self.backend.PAIR_STAT_ROW
-        for job, batch in pairs:
-            sub = np.searchsorted(all_keys, keys_of(job, batch))
-            cdict = {}
-            for term in set(job.cp_terms()):
-                cdict[term] = np.asarray(
-                    counts[rows[_spec_key(job, term)],
-                           stat_row[term.stat]], np.float64)[sub]
-            job.apply_exact(batch, job.fused_values(batch, cdict))
+            stat_row = self.backend.PAIR_STAT_ROW
+            for job, batch in pairs:
+                sub = np.searchsorted(all_keys, keys_of(job, batch))
+                cdict = {}
+                for term in set(job.cp_terms()):
+                    cdict[term] = np.asarray(
+                        counts[rows[_spec_key(job, term)],
+                               stat_row[term.stat]], np.float64)[sub]
+                job.apply_exact(batch, job.fused_values(batch, cdict))
+            sp.set(jobs=len(pairs), descriptors=len(specs),
+                   union_pairs=len(all_keys),
+                   bytes_loaded=store.io.bytes_read - io0,
+                   bytes_saved=store.cache_stats.bytes_saved - saved0)
 
         self._account(pairs, store.io.bytes_read - io0,
+                      store.cache_stats.bytes_saved - saved0,
                       time.perf_counter() - t0)

@@ -16,7 +16,14 @@ Endpoints (all JSON):
 * ``GET /session/<id>/page?k=N`` — next page of an open session (409 if
   the session's pinned epoch can no longer be served after a mutation).
 * ``DELETE /session/<id>``       — drop a session.
-* ``GET /stats``     — cache / I/O / session counters + the store epoch.
+* ``GET /stats``     — cache / I/O / session counters + the store epoch,
+  per-session phase breakdowns, and query-phase latency summaries.
+* ``GET /metrics``   — the Prometheus text exposition (service registry +
+  process-global kernel/jit/backend counters); not JSON.
+* ``GET /trace/<query_id>`` — a retained span tree (``<query_id>`` =
+  ``last`` → most recent; ``?format=chrome`` → Chrome trace-event JSON,
+  loadable in Perfetto).  Traces are retained for every query when the
+  server runs with ``--trace``, and always for ``EXPLAIN ANALYZE``.
 * ``GET /healthz``   — liveness.
 
 Run it::
@@ -40,6 +47,7 @@ from .api import MaskSearchService
 
 _SESSION_PAGE_RE = re.compile(r"^/session/([^/]+)/page$")
 _SESSION_RE = re.compile(r"^/session/([^/]+)$")
+_TRACE_RE = re.compile(r"^/trace/([^/]+)$")
 
 
 class ServiceHandler(BaseHTTPRequestHandler):
@@ -55,6 +63,16 @@ class ServiceHandler(BaseHTTPRequestHandler):
         body = json.dumps(obj).encode()
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
+        self.send_header("Content-Length", str(len(body)))
+        self.end_headers()
+        self.wfile.write(body)
+
+    def _send_text(self, text: str, code: int = 200,
+                   content_type: str = "text/plain; version=0.0.4; "
+                                       "charset=utf-8") -> None:
+        body = text.encode()
+        self.send_response(code)
+        self.send_header("Content-Type", content_type)
         self.send_header("Content-Length", str(len(body)))
         self.end_headers()
         self.wfile.write(body)
@@ -142,8 +160,23 @@ class ServiceHandler(BaseHTTPRequestHandler):
                     raise ValueError(f"bad page size k={qs['k'][0]!r}")
                 self._send(self.service.next_page(sid, k))
             return self._guard(run)
+        m = _TRACE_RE.match(parsed.path)
+        if m:
+            qid = m.group(1)
+
+            def run():
+                qs = parse_qs(parsed.query)
+                fmt = (qs.get("format") or ["json"])[0]
+                if fmt not in ("json", "chrome"):
+                    raise ValueError(f"format must be json|chrome, "
+                                     f"got {fmt!r}")
+                self._send(self.service.trace(qid, fmt=fmt))
+            return self._guard(run)
         if parsed.path == "/stats":
             return self._guard(lambda: self._send(self.service.stats()))
+        if parsed.path == "/metrics":
+            return self._guard(
+                lambda: self._send_text(self.service.metrics_text()))
         if parsed.path == "/healthz":
             return self._send({"ok": True})
         self._error(404, f"no route {parsed.path}")
@@ -195,6 +228,10 @@ def main(argv=None):
                     help="physical execution layer (core/backend.py): host "
                          "NumPy, HBM-resident single device, or the "
                          "shard_map mesh over all local devices")
+    ap.add_argument("--trace", action="store_true",
+                    help="trace every query (span trees retrievable at "
+                         "GET /trace/<query_id>); EXPLAIN ANALYZE traces "
+                         "its query regardless")
     ap.add_argument("--verbose", action="store_true")
     args = ap.parse_args(argv)
 
@@ -205,7 +242,7 @@ def main(argv=None):
         store, rois = _synthetic_store(args.synthetic, args.size)
     service = MaskSearchService(store, provided_rois=rois,
                                 verify_batch=args.verify_batch,
-                                backend=args.backend)
+                                backend=args.backend, trace=args.trace)
     httpd = make_server(service, args.host, args.port, verbose=args.verbose)
     host, port = httpd.server_address[:2]
     print(f"masksearch service: {len(store)} masks on http://{host}:{port}",

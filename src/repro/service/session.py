@@ -47,6 +47,22 @@ class Session:
         k = self.page_size if k is None else max(int(k), 1)
         return self.served, min(self.served + k, self.run.n)
 
+    def stats(self) -> dict:
+        """Per-session progress + phase breakdown (DESIGN.md §10) — what
+        ``/stats`` and ``session.stats()`` surface for each live session."""
+        s = self.run.stats
+        now = time.monotonic()
+        return {
+            "sql": self.sql[:200], "kind": self.kind,
+            "served": self.served, "pages_served": self.pages_served,
+            "total_candidates": self.run.n, "exhausted": self.exhausted,
+            "age_s": now - self.created_s, "idle_s": now - self.last_used_s,
+            "verified": s.n_verified, "bytes_loaded": s.bytes_loaded,
+            "bytes_saved": s.bytes_saved,
+            "phases": {"bounds_s": s.bound_time_s,
+                       "verify_s": s.verify_time_s},
+        }
+
 
 class SessionManager:
     """Holds live sessions with LRU eviction beyond ``max_sessions``."""
@@ -87,4 +103,6 @@ class SessionManager:
         return {"active": len(self._sessions), "created": self.created,
                 "evicted": self.evicted,
                 "pages_served": sum(s.pages_served
-                                    for s in self._sessions.values())}
+                                    for s in self._sessions.values()),
+                "per_session": {sid: s.stats()
+                                for sid, s in self._sessions.items()}}

@@ -1,0 +1,179 @@
+"""Stats-accounting consistency (satellites of the observability PR).
+
+Two families of invariants:
+
+* **No drifted fields** — every stats dataclass's ``reset()`` restores every
+  field to its default and ``as_dict()`` exposes every field.  Asserted by
+  reflection over ``dataclasses.fields``, so a field added tomorrow cannot
+  silently drift out of either method.
+* **Exact byte attribution** — the sum of per-run ``bytes_loaded`` equals
+  the store's metered ``io.bytes_read`` delta on both the one-shot path and
+  the fused scheduler path (largest-remainder apportionment, no truncation
+  drift), and cache-served bytes count once globally
+  (``cache_stats.bytes_saved``) while being attributed per run as
+  ``bytes_saved``.
+"""
+
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.core import CHIConfig, MaskStore, queries
+from repro.core.engine import ExecStats
+from repro.core.plan import compile_plan, run_plan
+from repro.core.store import MASK_META_DTYPE, CacheStats, IOStats
+from repro.data.masks import object_boxes, saliency_masks
+from repro.service.planner import CacheInfo
+from repro.service.scheduler import FusedScheduler, SchedulerStats, _apportion
+
+B, H, W = 30, 32, 32
+
+STATS_CLASSES = [ExecStats, IOStats, CacheStats, SchedulerStats, CacheInfo]
+
+
+@pytest.fixture()
+def db():
+    rois = object_boxes(B, H, W, seed=7)
+    masks, _ = saliency_masks(B, H, W, seed=6, attacked_fraction=0.3,
+                              boxes=rois)
+    meta = np.zeros(B, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(B)
+    meta["image_id"] = np.arange(B) // 2
+    meta["mask_type"] = np.arange(B) % 2 + 1
+    cfg = CHIConfig(grid=4, num_bins=8, height=H, width=W)
+    return MaskStore.create_memory(masks, meta, cfg), rois
+
+
+# -- reflection drift tests --------------------------------------------------
+
+
+def _poke(obj):
+    """Set every numeric field to a distinctive nonzero value."""
+    for i, f in enumerate(dataclasses.fields(obj)):
+        cur = getattr(obj, f.name)
+        if isinstance(cur, bool) or not isinstance(cur, (int, float)):
+            continue
+        setattr(obj, f.name, type(cur)(i + 7))
+    return obj
+
+
+@pytest.mark.parametrize("cls", STATS_CLASSES,
+                         ids=[c.__name__ for c in STATS_CLASSES])
+def test_as_dict_exposes_every_field(cls):
+    obj = _poke(cls())
+    d = obj.as_dict()
+    for f in dataclasses.fields(obj):
+        assert f.name in d, f"{cls.__name__}.as_dict() drifted: {f.name}"
+        assert d[f.name] == getattr(obj, f.name)
+
+
+@pytest.mark.parametrize("cls", [c for c in STATS_CLASSES
+                                 if hasattr(c, "reset")],
+                         ids=[c.__name__ for c in STATS_CLASSES
+                              if hasattr(c, "reset")])
+def test_reset_restores_every_field(cls):
+    obj = _poke(cls())
+    obj.reset()
+    fresh = cls()
+    for f in dataclasses.fields(obj):
+        assert getattr(obj, f.name) == getattr(fresh, f.name), \
+            f"{cls.__name__}.reset() drifted: {f.name}"
+
+
+def test_iostats_merge_covers_every_field():
+    a, b = _poke(IOStats()), _poke(IOStats())
+    want = {f.name: getattr(a, f.name) + getattr(b, f.name)
+            for f in dataclasses.fields(a)}
+    a.merge(b)
+    for name, v in want.items():
+        assert getattr(a, name) == v, f"IOStats.merge() drifted: {name}"
+
+
+# -- exact apportionment -----------------------------------------------------
+
+
+@pytest.mark.parametrize("total,weights", [
+    (100, [1, 1, 1]),          # the old int(total*share) truncation case
+    (7, [3, 2, 2]),
+    (1, [5, 5]),
+    (0, [1, 2]),
+    (999983, [17, 3, 250, 1]),
+    (10, [0, 0]),              # degenerate: no weight
+])
+def test_apportion_sums_exactly(total, weights):
+    shares = _apportion(total, weights)
+    assert len(shares) == len(weights)
+    assert all(s >= 0 for s in shares)
+    if sum(weights) > 0 and total > 0:
+        assert sum(shares) == total
+    else:
+        assert shares == [0] * len(weights)
+
+
+# -- byte cross-checks -------------------------------------------------------
+
+
+def test_one_shot_bytes_match_store_meter(db):
+    store, rois = db
+    io0 = store.io.bytes_read
+    _, stats = run_plan(store, queries.parse(
+        "SELECT mask_id FROM V ORDER BY CP(mask, roi, (0.8, 1.0)) "
+        "ASC LIMIT 10;").plan, provided_rois=rois, verify_batch=4)
+    assert stats.bytes_loaded == store.io.bytes_read - io0
+    assert stats.bytes_saved == 0      # no cache in play
+
+
+def test_scheduler_bytes_partition_store_meter(db):
+    """Fused rounds: per-run bytes_loaded must sum to exactly the metered
+    delta, and per-run bytes_saved to exactly the cache's bytes_saved
+    delta — cache-served bytes never double-count as loads."""
+    store, rois = db
+    sqls = [
+        "SELECT mask_id FROM V ORDER BY CP(mask, roi, (0.8, 1.0)) "
+        "ASC LIMIT 7;",
+        "SELECT mask_id FROM V ORDER BY CP(mask, full_img, (0.2, 0.6)) "
+        "DESC LIMIT 9;",
+        "SELECT mask_id FROM V WHERE CP(mask, full_img, (0.5, 1.0)) > 10;",
+    ]
+    runs = [compile_plan(store, queries.parse(s).plan, provided_rois=rois,
+                         verify_batch=4) for s in sqls]
+    for run, s in zip(runs, sqls):
+        run.target(queries.parse(s).plan.k)
+    io0 = store.io.bytes_read
+    saved0 = store.cache_stats.bytes_saved
+    sched = FusedScheduler(store)
+    sched.drive(runs)
+    loaded = sum(r.stats.bytes_loaded for r in runs)
+    saved = sum(r.stats.bytes_saved for r in runs)
+    assert loaded == store.io.bytes_read - io0
+    assert saved == store.cache_stats.bytes_saved - saved0
+    assert sched.stats.fused_bytes_loaded <= loaded   # fused subset of total
+
+
+def test_self_verify_attributes_cache_savings(db):
+    """Two identical runs behind the shared-load cache: the second run's
+    loads are served from cache — metered once globally, attributed to the
+    run as bytes_saved."""
+    store, rois = db
+    plan = queries.parse("SELECT mask_id FROM V "
+                         "ORDER BY CP(mask, roi, (0.8, 1.0)) ASC "
+                         "LIMIT 10;").plan
+    owns = store.enable_cache()
+    try:
+        _, first = run_plan(store, plan, provided_rois=rois, verify_batch=4)
+        io0 = store.io.bytes_read
+        _, second = run_plan(store, plan, provided_rois=rois, verify_batch=4)
+        assert second.bytes_loaded == store.io.bytes_read - io0
+        assert second.bytes_saved > 0
+        # everything the second run touched was already cached
+        assert second.bytes_loaded == 0
+    finally:
+        if owns:
+            store.clear_cache()
+
+
+def test_execstats_as_dict_reports_load_fraction():
+    s = ExecStats(n_candidates=10, n_verified=4)
+    d = s.as_dict()
+    assert d["load_fraction"] == pytest.approx(0.4)
