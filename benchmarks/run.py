@@ -110,11 +110,11 @@ def bench_topk_query(store, rois, args):
 
     for name, expr, desc in (("topk_s1_asc", expr1, False),
                              ("topk_s2_desc", expr2, True)):
-        def run_idx():
+        def run_idx(expr=expr, desc=desc):
             store.io.reset()
             return topk_query(store, expr, 25, desc=desc, provided_rois=rois)
 
-        def run_scan():
+        def run_scan(expr=expr, desc=desc):
             store.io.reset()
             return topk_query(store, expr, 25, desc=desc, provided_rois=rois,
                               use_index=False)

@@ -1,0 +1,13 @@
+"""masklint — the repo's own static-analysis pass (DESIGN.md §11).
+
+Run it as ``python -m repro.analysis``; see ``--list`` for the rule set
+and ``--explain <rule>`` for the invariant each rule enforces.  The
+package is pure-stdlib (``ast`` only): it never imports the code under
+analysis, so it runs without jax/numpy installed.
+"""
+
+from .core import (Finding, ModuleCtx, Rule, RunResult, all_rules,
+                   report_json, report_text, run_paths)
+
+__all__ = ["Finding", "ModuleCtx", "Rule", "RunResult", "all_rules",
+           "report_json", "report_text", "run_paths"]

@@ -1,0 +1,298 @@
+"""masklint core: the visitor framework, findings, suppression, reporters.
+
+masklint is the repo's own static-analysis pass (``python -m
+repro.analysis``).  Generic linters check style; this one checks the
+*correctness contracts* the MaskSearch reproduction actually rests on —
+lock discipline in the threaded service, epoch threading through cache
+keys, bounds-soundness combinator usage, Pallas kernel constraints, and
+stats-dataclass/reflection agreement (DESIGN.md §11 documents each
+invariant).  Rules are pure ``ast`` passes: the analyzer imports nothing
+from the analyzed code (no jax, no numpy), so it runs anywhere Python
+runs and can never be broken by an import-time failure in the target.
+
+Suppression, in order of review friction:
+
+* inline — ``# masklint: ignore[rule-name] -- reason`` on the flagged
+  line (the reason is mandatory; a bare ignore is itself a finding);
+* repo-level — entries in ``masklint-suppressions.json`` (``{"rule",
+  "path", "line"?, "reason"}``); the file ships empty and every entry
+  is expected to carry a written justification.
+"""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+import json
+import os
+import re
+
+SUPPRESSION_FILE = "masklint-suppressions.json"
+
+_INLINE_RE = re.compile(
+    r"#\s*masklint:\s*ignore\[([a-zA-Z0-9_,\- ]+)\]"
+    r"(?:\s*--\s*(?P<reason>\S.*))?")
+
+
+@dataclasses.dataclass
+class Finding:
+    """One rule violation at one source location."""
+    rule: str
+    path: str          # repo-relative, '/'-separated
+    line: int
+    col: int
+    message: str
+
+    def format(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+    def as_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class ModuleCtx:
+    """Everything a rule sees for one source file."""
+
+    def __init__(self, path: str, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath.replace(os.sep, "/")
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+
+    def finding(self, rule: str, node: ast.AST, message: str) -> Finding:
+        return Finding(rule, self.relpath,
+                       getattr(node, "lineno", 1),
+                       getattr(node, "col_offset", 0) + 1, message)
+
+    def endswith(self, *suffixes: str) -> bool:
+        return self.relpath.endswith(suffixes)
+
+
+class Rule:
+    """Base class: subclass, set the metadata, implement check_module.
+
+    ``check_module`` runs once per file; ``finalize`` runs once after all
+    files, for rules that need cross-module state (the lock-order graph).
+    """
+
+    name: str = ""
+    summary: str = ""       # one line, shown by --list
+    doc: str = ""           # full invariant docs, shown by --explain
+
+    def check_module(self, ctx: ModuleCtx) -> list[Finding]:
+        return []
+
+    def finalize(self) -> list[Finding]:
+        return []
+
+
+_REGISTRY: dict[str, type[Rule]] = {}
+
+
+def register(cls: type[Rule]) -> type[Rule]:
+    if not cls.name:
+        raise ValueError(f"rule {cls.__name__} has no name")
+    if cls.name in _REGISTRY:
+        raise ValueError(f"duplicate rule name {cls.name!r}")
+    _REGISTRY[cls.name] = cls
+    return cls
+
+
+def all_rules() -> dict[str, type[Rule]]:
+    """Name → rule class, importing the rule modules on first use."""
+    from . import (  # noqa: F401 — imported for their @register side effect
+        rules_bounds, rules_epoch, rules_kernels, rules_locks, rules_stats,
+    )
+    return dict(_REGISTRY)
+
+
+# -- shared AST helpers (used by several rule modules) -------------------------
+
+def call_name(node: ast.Call) -> str:
+    """The terminal name of a call target: f(...) → 'f', a.b.f(...) → 'f'."""
+    fn = node.func
+    if isinstance(fn, ast.Name):
+        return fn.id
+    if isinstance(fn, ast.Attribute):
+        return fn.attr
+    return ""
+
+
+def mentions_identifier(node: ast.AST, fragment: str) -> bool:
+    """Whether any Name/Attribute identifier in ``node`` contains
+    ``fragment`` (case-insensitive)."""
+    frag = fragment.lower()
+    for sub in ast.walk(node):
+        if isinstance(sub, ast.Name) and frag in sub.id.lower():
+            return True
+        if isinstance(sub, ast.Attribute) and frag in sub.attr.lower():
+            return True
+    return False
+
+
+def is_self_attr(node: ast.AST, attr: str | None = None) -> bool:
+    """Whether ``node`` is ``self.<attr>`` (any attr when None)."""
+    return (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"
+            and (attr is None or node.attr == attr))
+
+
+# -- file discovery ------------------------------------------------------------
+
+_SKIP_DIRS = {"__pycache__", ".git", ".pytest_cache", ".hypothesis",
+              ".ruff_cache", "node_modules"}
+
+
+def iter_py_files(paths: list[str]) -> list[str]:
+    out: list[str] = []
+    for p in paths:
+        if os.path.isfile(p):
+            if p.endswith(".py"):
+                out.append(p)
+            continue
+        for dirpath, dirnames, filenames in os.walk(p):
+            dirnames[:] = sorted(d for d in dirnames if d not in _SKIP_DIRS)
+            out.extend(os.path.join(dirpath, f)
+                       for f in sorted(filenames) if f.endswith(".py"))
+    return out
+
+
+# -- suppression ---------------------------------------------------------------
+
+def load_suppression_file(path: str) -> tuple[list[dict], list[Finding]]:
+    """Parse the repo-level suppression file → (entries, file-errors)."""
+    if not os.path.exists(path):
+        return [], []
+    try:
+        with open(path) as f:
+            data = json.load(f)
+        entries = data["suppressions"]
+        assert isinstance(entries, list)
+    except (json.JSONDecodeError, KeyError, AssertionError, TypeError) as e:
+        return [], [Finding("suppression-file", path, 1, 1,
+                            f"unreadable suppression file: {e}")]
+    errors = []
+    for i, ent in enumerate(entries):
+        if not isinstance(ent, dict) or not ent.get("rule") \
+                or not ent.get("path") or not str(ent.get("reason", "")).strip():
+            errors.append(Finding(
+                "suppression-file", path, 1, 1,
+                f"suppression entry {i} must carry rule, path, and a "
+                f"non-empty reason: {ent!r}"))
+    return entries, errors
+
+
+def _inline_suppressed(line_text: str, rule: str) -> tuple[bool, bool]:
+    """(suppressed, has_reason) for an inline masklint comment."""
+    m = _INLINE_RE.search(line_text)
+    if not m:
+        return False, True
+    names = {n.strip() for n in m.group(1).split(",")}
+    if rule not in names and "all" not in names:
+        return False, True
+    return True, bool(m.group("reason"))
+
+
+def apply_suppressions(findings: list[Finding],
+                       sources: dict[str, list[str]],
+                       file_entries: list[dict]) -> tuple[list[Finding], int]:
+    """Drop suppressed findings → (kept, n_suppressed).  An inline ignore
+    without a ``-- reason`` suppresses nothing and is itself flagged."""
+    kept: list[Finding] = []
+    suppressed = 0
+    for f in findings:
+        lines = sources.get(f.path, [])
+        text = lines[f.line - 1] if 0 < f.line <= len(lines) else ""
+        inline, has_reason = _inline_suppressed(text, f.rule)
+        if inline and not has_reason:
+            kept.append(dataclasses.replace(
+                f, message=f.message + "  [inline ignore present but has no "
+                                       f"'-- reason'; reasons are mandatory]"))
+            continue
+        if inline:
+            suppressed += 1
+            continue
+        if any(e.get("rule") in (f.rule, "all") and e.get("path") == f.path
+               and ("line" not in e or int(e["line"]) == f.line)
+               for e in file_entries):
+            suppressed += 1
+            continue
+        kept.append(f)
+    return kept, suppressed
+
+
+# -- the runner ----------------------------------------------------------------
+
+@dataclasses.dataclass
+class RunResult:
+    findings: list[Finding]
+    n_files: int = 0
+    n_suppressed: int = 0
+
+    @property
+    def ok(self) -> bool:
+        return not self.findings
+
+
+def run_paths(paths: list[str], rule_names: list[str] | None = None,
+              suppressions_path: str | None = None,
+              root: str | None = None) -> RunResult:
+    """Run the (selected) rules over every ``*.py`` under ``paths``."""
+    root = os.path.abspath(root or os.getcwd())
+    registry = all_rules()
+    names = rule_names or sorted(registry)
+    unknown = [n for n in names if n not in registry]
+    if unknown:
+        raise KeyError(f"unknown rule(s): {', '.join(unknown)}; "
+                       f"known: {', '.join(sorted(registry))}")
+    rules = [registry[n]() for n in names]
+
+    findings: list[Finding] = []
+    sources: dict[str, list[str]] = {}
+    files = iter_py_files(paths)
+    for path in files:
+        ap = os.path.abspath(path)
+        rel = (os.path.relpath(ap, root) if ap.startswith(root + os.sep)
+               else path).replace(os.sep, "/")
+        try:
+            with open(path, encoding="utf-8") as f:
+                source = f.read()
+            ctx = ModuleCtx(path, rel, source)
+        except (SyntaxError, UnicodeDecodeError, OSError) as e:
+            lineno = getattr(e, "lineno", 1) or 1
+            findings.append(Finding("parse-error", rel, lineno, 1, str(e)))
+            continue
+        sources[rel] = ctx.lines
+        for r in rules:
+            findings.extend(r.check_module(ctx))
+    for r in rules:
+        findings.extend(r.finalize())
+
+    sup_path = suppressions_path if suppressions_path is not None else \
+        os.path.join(root, SUPPRESSION_FILE)
+    entries, sup_errors = load_suppression_file(sup_path)
+    kept, n_sup = apply_suppressions(findings, sources, entries)
+    kept.extend(sup_errors)
+    kept.sort(key=lambda f: (f.path, f.line, f.col, f.rule))
+    return RunResult(kept, n_files=len(files), n_suppressed=n_sup)
+
+
+# -- reporters -----------------------------------------------------------------
+
+def report_text(result: RunResult) -> str:
+    out = [f.format() for f in result.findings]
+    out.append(f"masklint: {len(result.findings)} finding(s), "
+               f"{result.n_suppressed} suppressed, "
+               f"{result.n_files} file(s) scanned")
+    return "\n".join(out)
+
+
+def report_json(result: RunResult) -> str:
+    return json.dumps({
+        "findings": [f.as_dict() for f in result.findings],
+        "suppressed": result.n_suppressed,
+        "files_scanned": result.n_files,
+        "ok": result.ok,
+    }, indent=2)

@@ -1,0 +1,146 @@
+"""Bounds rules: three-valued comparisons stay in the sound combinators."""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from .core import Finding, ModuleCtx, Rule, call_name, register
+
+_BOUND_NAME_RE = re.compile(r"^(lb|ub)s?$|^(lb|ub)_|_(lb|ub)s?$")
+
+# The vetted combinator implementations.  core/exprs.py owns cmp_decide
+# and the interval arithmetic; core/backend.py and core/distributed.py
+# carry the device/mesh mirrors of the same decisions (kept equivalent by
+# the backend-equivalence test suite).
+_BLESSED_SOUNDNESS = ("core/exprs.py", "core/backend.py",
+                      "core/distributed.py")
+
+# Modules allowed to binary-search CHI bin edges directly: the CHI
+# builder, the combinator module (via _threshold_ks), and the mesh shards.
+_BLESSED_EDGES = ("core/chi.py", "core/exprs.py", "core/distributed.py")
+
+
+def _edgy(node: ast.AST) -> bool:
+    """Whether any identifier in ``node`` smells like a bin-edge array."""
+    return any(
+        (isinstance(s, ast.Name) and "edge" in s.id.lower())
+        or (isinstance(s, ast.Attribute) and "edge" in s.attr.lower())
+        for s in ast.walk(node))
+
+
+def _bound_ident(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Name) and _BOUND_NAME_RE.search(node.id):
+        return node.id
+    if isinstance(node, ast.Attribute) and _BOUND_NAME_RE.search(node.attr):
+        return node.attr
+    return None
+
+
+@register
+class BoundsSoundnessRule(Rule):
+    name = "bounds-soundness"
+    summary = ("CHI bound tuples are compared only via the sound "
+               "combinators in core/exprs.py")
+    doc = """\
+Invariant: outside the combinator modules (core/exprs.py and its vetted
+device/mesh mirrors in core/backend.py and core/distributed.py), no code
+applies a raw `<" <= > >=` comparison to a CHI bound array (names like
+lb/ub/lbs/ubs/cp_lb/ub_arr).  Predicate decisions over bounds go through
+cmp_decide(op, lb, ub, threshold), which returns the three-valued
+accept / reject / unknown split.
+
+Why it holds: MaskSearch's correctness claim is that bounded filter-verify
+returns exactly the naive scan's answer.  That rests on the bound
+semantics: lb <= exact <= ub always.  A raw `ub > t` used as "accepted"
+conflates *possible* with *certain* — masks whose exact value is below t
+but whose upper bound clears it get accepted without verification.
+cmp_decide also owns the strict-threshold edge case: `CP(...) > t` at a
+CHI bin edge must bump the threshold by one float32 ulp
+(np.nextafter, see _threshold_ks) before binning, or boundary-valued
+masks flip between accept and unknown depending on bin alignment.
+
+Violation example:
+
+    accepted = ids[ub > t]                    # wrong: possible != certain
+
+Correct:
+
+    acc, rej = cmp_decide(op, lb, ub, t)      # unknown -> verify loop
+
+Comparisons whose lb/ub names are *not* CHI bounds (histogram bucket
+edges, address bounds) are suppressed inline with a reason, e.g.
+`# masklint: ignore[bounds-soundness] -- histogram bucket edge`.
+"""
+
+    def check_module(self, ctx: ModuleCtx) -> list[Finding]:
+        if ctx.endswith(*_BLESSED_SOUNDNESS):
+            return []
+        findings: list[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Compare):
+                continue
+            if not any(isinstance(op, (ast.Lt, ast.LtE, ast.Gt, ast.GtE))
+                       for op in node.ops):
+                continue
+            operands = [node.left, *node.comparators]
+            hit = next((n for n in map(_bound_ident, operands) if n), None)
+            if hit:
+                findings.append(ctx.finding(
+                    self.name, node,
+                    f"raw ordering comparison on bound-like value "
+                    f"{hit!r} — decide predicates over CHI bounds via "
+                    f"cmp_decide(op, lb, ub, t) in core/exprs.py (three-"
+                    f"valued accept/reject/unknown, nextafter32 edge "
+                    f"handling)"))
+        return findings
+
+
+@register
+class BoundsEdgeRule(Rule):
+    name = "bounds-edge"
+    summary = ("CHI bin-edge thresholding happens only in the blessed "
+               "helpers (nextafter32 strict-threshold semantics)")
+    doc = """\
+Invariant: binary-searching CHI bin edges (np.searchsorted over an
+`edges` array) happens only in core/chi.py (index construction),
+core/exprs.py (_threshold_ks), and core/distributed.py (the shard-local
+mirror).  Everyone else passes thresholds to the combinators.
+
+Why it holds: CHI histograms are cumulative counts over float32 pixel
+bins.  Mapping a query threshold t to bin indices is where the strict
+vs. non-strict distinction lives: for `> t` the threshold must be bumped
+to np.nextafter(float32(t), +inf) *before* searchsorted, so pixels equal
+to t land on the correct side of the cumulative count.  An ad-hoc
+searchsorted(edges, t) elsewhere silently drops that ulp bump and the
+bounds stop bracketing the exact value for thresholds sitting exactly on
+a bin edge — exactly the inputs the demo UI produces (round numbers like
+0.5 with power-of-two bin grids).
+
+Violation example:
+
+    k = np.searchsorted(cfg.edges, t)          # strictness-unaware
+
+Correct: call through exprs bounds machinery (which uses _threshold_ks),
+or extend _threshold_ks if a new site genuinely needs edge indices.
+"""
+
+    def check_module(self, ctx: ModuleCtx) -> list[Finding]:
+        if ctx.endswith(*_BLESSED_EDGES):
+            return []
+        findings: list[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not (isinstance(node, ast.Call)
+                    and call_name(node) == "searchsorted"):
+                continue
+            operands = list(node.args)
+            if isinstance(node.func, ast.Attribute):
+                operands.append(node.func.value)   # edges.searchsorted(t)
+            if any(_edgy(a) for a in operands):
+                findings.append(ctx.finding(
+                    self.name, node,
+                    "searchsorted over CHI bin edges outside the blessed "
+                    "helpers — threshold-to-bin mapping must go through "
+                    "core/exprs._threshold_ks (float32 nextafter bump for "
+                    "strict thresholds)"))
+        return findings

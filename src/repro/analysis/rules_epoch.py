@@ -1,0 +1,142 @@
+"""Epoch rules: cache keys must thread the epoch; no snapshot bypass."""
+
+from __future__ import annotations
+
+import ast
+
+from .core import (Finding, ModuleCtx, Rule, call_name, mentions_identifier,
+                   register)
+
+# function name -> 0-based positional index where the epoch argument lands
+# (matching the signatures in service/planner.py)
+_KEYED_CALLS = {
+    "result_key": 3,       # (plan_or_query, roi_sig, backend, epoch)
+    "bounds_key": 4,       # (expr, plan_or_query, roi_sig, backend, epoch)
+    "cached_result": 3,    # (plan_or_query, roi_sig, backend, epoch)
+    "store_result": 4,     # (plan_or_query, roi_sig, payload, backend, epoch)
+}
+
+
+@register
+class EpochDisciplineRule(Rule):
+    name = "epoch-discipline"
+    summary = ("planner cache-key constructions must thread the store "
+               "epoch explicitly")
+    doc = """\
+Invariant: every call to the planner's key constructors and cache tiers —
+result_key / bounds_key / cached_result / store_result — passes an epoch
+argument whose expression actually derives from an epoch (store.epoch,
+self._epoch, run.epoch, ...).  Omitting it silently binds the signature
+default (epoch=0); hardcoding a literal pins one epoch forever.
+
+Why it holds: since the mutable-store PR, cache keys end in an `e<epoch>`
+component and Planner.evict_dead_epochs sweeps keys from superseded
+epochs.  A key built without the epoch aliases across mutations: a result
+computed before an ingest/delete is served after it — the exact
+wrong-answers-not-crashes failure mode the epoch machinery exists to
+prevent (bounds refer to rows that moved; ids map to different masks).
+
+Violation example:
+
+    payload = planner.cached_result(plan, roi_sig, backend.name)
+    #                               ^ no epoch: epoch=0 default binds,
+    #                                 pre-mutation results leak forward
+
+Fix: pass `epoch=self.store.epoch` (services) or thread the pinned run
+epoch.  Calls that intentionally address a single immutable store can
+suppress with `# masklint: ignore[epoch-discipline] -- <why>`.
+"""
+
+    def check_module(self, ctx: ModuleCtx) -> list[Finding]:
+        findings: list[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            fname = call_name(node)
+            if fname not in _KEYED_CALLS:
+                continue
+            pos = _KEYED_CALLS[fname]
+            epoch_arg = next((kw.value for kw in node.keywords
+                              if kw.arg == "epoch"), None)
+            if epoch_arg is None and len(node.args) > pos:
+                epoch_arg = node.args[pos]
+            if epoch_arg is None:
+                findings.append(ctx.finding(
+                    self.name, node,
+                    f"{fname}(...) without an epoch argument — the "
+                    f"epoch=0 default binds and cached entries alias "
+                    f"across store mutations"))
+            elif isinstance(epoch_arg, ast.Constant):
+                findings.append(ctx.finding(
+                    self.name, node,
+                    f"{fname}(...) hardcodes epoch={epoch_arg.value!r} — "
+                    f"thread the live store/run epoch instead"))
+            elif not mentions_identifier(epoch_arg, "epoch"):
+                findings.append(ctx.finding(
+                    self.name, node,
+                    f"{fname}(...) epoch argument "
+                    f"{ast.unparse(epoch_arg)!r} does not derive from an "
+                    f"epoch — thread store.epoch or the pinned run epoch"))
+        return findings
+
+
+_STORE_NAMES = {"store", "snap", "snapshot", "st", "mask_store"}
+_STORE_ATTRS = {"store", "_store", "snap", "_snap", "snapshot"}
+
+
+def _is_store_expr(node: ast.AST) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in _STORE_NAMES or node.id.endswith("_store")
+    if isinstance(node, ast.Attribute):
+        return node.attr in _STORE_ATTRS
+    return False
+
+
+@register
+class EpochSnapshotRule(Rule):
+    name = "epoch-snapshot"
+    summary = ("engine/run code may not reach around StoreSnapshot into "
+               "private store state")
+    doc = """\
+Invariant: outside core/store.py, no code touches an underscore-private
+attribute of a store or snapshot expression (`store._x`, `self.store._x`,
+`snap._x`).  Everything the engine, backends, and service need is part of
+the public surface (epoch, snapshot(), load/load_rows, chi_host/chi_table,
+cache_enabled, backend_cache, ids_dirty_since, can_serve, ...).
+
+Why it holds: StoreSnapshot is the consistency boundary for resumable
+runs — it pins an epoch and mediates every read, refusing (StaleRunError)
+or rerouting once the store moves on.  Private state like the load-cache
+position map or CHI chunk buffers tracks the *current* epoch; reading it
+through a pinned snapshot's back door returns rows renumbered by a
+delete, which is a wrong answer, not an error.  PR 7 converted the two
+historical reach-arounds (core/exprs.py reading `store._cache_map`,
+core/backend.py reading `store._backend_cache`) into public properties
+precisely so this rule can hold everywhere.
+
+Violation example:
+
+    if ctx.store._cache_map is not None:    # pre-PR-7 exprs.py
+        ...
+
+Fix: add/extend a public property on MaskStore *and* StoreSnapshot (so
+the snapshot can apply its staleness contract), then use it.
+"""
+
+    def check_module(self, ctx: ModuleCtx) -> list[Finding]:
+        if ctx.endswith("core/store.py"):
+            return []
+        findings: list[Finding] = []
+        for node in ast.walk(ctx.tree):
+            if isinstance(node, ast.Attribute) \
+                    and node.attr.startswith("_") \
+                    and not node.attr.startswith("__") \
+                    and _is_store_expr(node.value):
+                base = ast.unparse(node.value)
+                findings.append(ctx.finding(
+                    self.name, node,
+                    f"private store state {base}.{node.attr} accessed "
+                    f"outside core/store.py — go through the public "
+                    f"MaskStore/StoreSnapshot surface so the snapshot "
+                    f"staleness contract applies"))
+        return findings

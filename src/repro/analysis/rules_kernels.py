@@ -1,0 +1,185 @@
+"""Pallas kernel constraints: grid/index-map arity, traced control flow,
+dtype/host-callback bans inside kernel bodies."""
+
+from __future__ import annotations
+
+import ast
+
+from .core import Finding, ModuleCtx, Rule, call_name, register
+
+_HOST_CALLS = {"print", "io_callback", "pure_callback", "host_callback",
+               "debug_callback", "breakpoint"}
+
+
+def _first_kernel_ref(call: ast.Call) -> str | None:
+    """The kernel function a pallas_call launches: a bare Name, or the
+    first argument of functools.partial(Name, ...)."""
+    if not call.args:
+        return None
+    a = call.args[0]
+    if isinstance(a, ast.Name):
+        return a.id
+    if isinstance(a, ast.Call) and call_name(a) == "partial" and a.args \
+            and isinstance(a.args[0], ast.Name):
+        return a.args[0].id
+    return None
+
+
+def _grid_arity(call: ast.Call, local_tuples: dict[str, int]) -> int | None:
+    for kw in call.keywords:
+        if kw.arg == "grid":
+            if isinstance(kw.value, ast.Tuple):
+                return len(kw.value.elts)
+            if isinstance(kw.value, ast.Name):
+                return local_tuples.get(kw.value.id)
+    return None
+
+
+def _iter_blockspecs(call: ast.Call):
+    """Every BlockSpec(...) call reachable from in_specs/out_specs/
+    out_shape keyword values."""
+    for kw in call.keywords:
+        if kw.arg not in ("in_specs", "out_specs"):
+            continue
+        for sub in ast.walk(kw.value):
+            if isinstance(sub, ast.Call) and call_name(sub) == "BlockSpec":
+                yield sub
+
+
+def _index_map_lambda(spec: ast.Call) -> ast.Lambda | None:
+    for kw in spec.keywords:
+        if kw.arg == "index_map" and isinstance(kw.value, ast.Lambda):
+            return kw.value
+    for a in spec.args:
+        if isinstance(a, ast.Lambda):
+            return a
+    return None
+
+
+@register
+class KernelConstraintsRule(Rule):
+    name = "kernel-constraints"
+    summary = ("Pallas kernels: index-map arity == grid rank, no Python "
+               "control flow / float64 / host callbacks in kernel bodies")
+    doc = """\
+Invariant, three parts, applied to any module that defines `*_kernel`
+functions or issues pl.pallas_call:
+
+1. Every BlockSpec index_map lambda takes exactly len(grid) parameters.
+   Pallas hands the index map one program id per grid axis; an arity
+   mismatch is a TypeError at trace time on TPU but can silently slip
+   through on interpret-mode-only CI runs when the call path is not
+   exercised.
+
+2. Kernel bodies contain no Python `if`/`while`, and `for` only over
+   range(...) with static bounds.  Kernel bodies run once at trace time:
+   branching on a traced value raises ConcretizationTypeError at best;
+   at worst a condition on a *static-looking* value bakes one branch into
+   the compiled kernel.  Data-dependent selection uses @pl.when /
+   jnp.where; static unrolling threads Python ints via functools.partial
+   (how cp_count/mask_agg pass num-block counts).
+
+3. No float64 and no host callbacks (print, io/pure/host/debug_callback)
+   inside kernel bodies.  TPU Pallas has no f64 vector unit — jax silently
+   downcasts under jax_enable_x64=False and *fails to lower* otherwise —
+   and host callbacks stall the systolic pipeline (they are also
+   unsupported inside Pallas kernels on TPU).  CHI count math is exact in
+   int32; accumulate in float32.
+
+Violation examples:
+
+    pl.pallas_call(f, grid=(b, h // bh),
+                   in_specs=[pl.BlockSpec((1, bh), lambda i: (i, 0))], ...)
+    # index map takes 1 arg, grid has rank 2
+
+    def cp_count_kernel(chi_ref, out_ref):
+        if chi_ref[0, 0] > 0:        # traced value in Python `if`
+            ...
+
+Fix: match lambda arity to the grid; replace `if` with @pl.when or
+jnp.where; keep accumulation in f32/int32.  Reference kernels:
+src/repro/kernels/cp_count.py, mask_agg.py, pair_count.py, chi_build.py.
+"""
+
+    def check_module(self, ctx: ModuleCtx) -> list[Finding]:
+        tree = ctx.tree
+        kernel_names = {n.name for n in ast.walk(tree)
+                        if isinstance(n, ast.FunctionDef)
+                        and n.name.endswith("_kernel")}
+        pallas_calls = [n for n in ast.walk(tree)
+                        if isinstance(n, ast.Call)
+                        and call_name(n) == "pallas_call"]
+        if not kernel_names and not pallas_calls:
+            return []
+        findings: list[Finding] = []
+
+        # local `grid = (a, b)` style assignments, for grid=grid resolution
+        local_tuples: dict[str, int] = {}
+        for n in ast.walk(tree):
+            if isinstance(n, ast.Assign) and isinstance(n.value, ast.Tuple):
+                for t in n.targets:
+                    if isinstance(t, ast.Name):
+                        local_tuples[t.id] = len(n.value.elts)
+
+        for call in pallas_calls:
+            ref = _first_kernel_ref(call)
+            if ref:
+                kernel_names.add(ref)
+            arity = _grid_arity(call, local_tuples)
+            if arity is None:
+                continue
+            for spec in _iter_blockspecs(call):
+                lam = _index_map_lambda(spec)
+                if lam is not None and len(lam.args.args) != arity:
+                    findings.append(ctx.finding(
+                        self.name, lam,
+                        f"BlockSpec index_map takes "
+                        f"{len(lam.args.args)} argument(s) but the grid "
+                        f"has rank {arity} — Pallas passes one program "
+                        f"id per grid axis"))
+
+        for fn in ast.walk(tree):
+            if isinstance(fn, ast.FunctionDef) and fn.name in kernel_names:
+                findings.extend(self._check_body(ctx, fn))
+        return findings
+
+    def _check_body(self, ctx: ModuleCtx, fn: ast.FunctionDef):
+        findings: list[Finding] = []
+        for node in ast.walk(fn):
+            if isinstance(node, (ast.If, ast.While)):
+                kind = "if" if isinstance(node, ast.If) else "while"
+                findings.append(ctx.finding(
+                    self.name, node,
+                    f"Python `{kind}` inside kernel body {fn.name} — "
+                    f"control flow on traced values must use @pl.when / "
+                    f"jnp.where; static specialization goes through "
+                    f"functools.partial"))
+            elif isinstance(node, ast.For):
+                it = node.iter
+                if not (isinstance(it, ast.Call)
+                        and isinstance(it.func, ast.Name)
+                        and it.func.id == "range"):
+                    findings.append(ctx.finding(
+                        self.name, node,
+                        f"`for` over a non-range iterable inside kernel "
+                        f"body {fn.name} — only static range(...) "
+                        f"unrolls are traceable"))
+            elif isinstance(node, ast.Call) \
+                    and call_name(node) in _HOST_CALLS:
+                findings.append(ctx.finding(
+                    self.name, node,
+                    f"host callback {call_name(node)}(...) inside kernel "
+                    f"body {fn.name} — unsupported in TPU Pallas and "
+                    f"stalls the pipeline"))
+            elif (isinstance(node, ast.Attribute)
+                  and node.attr == "float64") \
+                    or (isinstance(node, ast.Name)
+                        and node.id == "float64") \
+                    or (isinstance(node, ast.Constant)
+                        and node.value == "float64"):
+                findings.append(ctx.finding(
+                    self.name, node,
+                    f"float64 inside kernel body {fn.name} — TPU Pallas "
+                    f"has no f64 path; CHI count math is exact in "
+                    f"int32/float32"))
+        return findings

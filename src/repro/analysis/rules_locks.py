@@ -1,0 +1,329 @@
+"""Lock rules: unlocked shared-state writes, and lock-order cycles."""
+
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from .core import Finding, ModuleCtx, Rule, is_self_attr, register
+
+_DUNDER_EXEMPT = {"__init__", "__post_init__", "__new__", "__del__",
+                  "__getstate__", "__setstate__", "__reduce__"}
+
+
+def _lock_classes(tree: ast.Module) -> dict[str, ast.ClassDef]:
+    """Classes whose ``__init__`` assigns ``self._lock`` — the repo's
+    marker for 'instances of me are shared across threads'."""
+    out = {}
+    for node in tree.body:
+        if not isinstance(node, ast.ClassDef):
+            continue
+        for meth in node.body:
+            if isinstance(meth, ast.FunctionDef) and meth.name == "__init__":
+                for sub in ast.walk(meth):
+                    if isinstance(sub, (ast.Assign, ast.AnnAssign)):
+                        targets = (sub.targets
+                                   if isinstance(sub, ast.Assign)
+                                   else [sub.target])
+                        if any(is_self_attr(t, "_lock") for t in targets):
+                            out[node.name] = node
+    return out
+
+
+@dataclasses.dataclass
+class _Write:
+    method: str
+    attr: str
+    locked: bool
+    node: ast.AST
+
+
+@dataclasses.dataclass
+class _CallSite:
+    caller: str
+    callee: str
+    locked: bool
+
+
+class _MethodScanner(ast.NodeVisitor):
+    """Walk one method, tracking whether each statement is lexically
+    inside ``with self._lock``; collect self-attribute writes and
+    self-method calls."""
+
+    def __init__(self, method_name: str):
+        self.method = method_name
+        self.locked = False
+        self.writes: list[_Write] = []
+        self.calls: list[_CallSite] = []
+
+    def visit_With(self, node: ast.With) -> None:
+        takes_lock = any(is_self_attr(item.context_expr, "_lock")
+                         for item in node.items)
+        for item in node.items:
+            self.visit(item.context_expr)
+        was = self.locked
+        self.locked = was or takes_lock
+        for stmt in node.body:
+            self.visit(stmt)
+        self.locked = was
+
+    def _record_target(self, target: ast.AST, node: ast.AST) -> None:
+        # self.x = ... / self.x[...] = ... / (a, self.x) = ...
+        if isinstance(target, (ast.Tuple, ast.List)):
+            for elt in target.elts:
+                self._record_target(elt, node)
+            return
+        base = target
+        if isinstance(base, ast.Subscript):
+            base = base.value
+        if is_self_attr(base) and base.attr != "_lock":
+            self.writes.append(_Write(self.method, base.attr,
+                                      self.locked, node))
+
+    def visit_Assign(self, node: ast.Assign) -> None:
+        for t in node.targets:
+            self._record_target(t, node)
+        self.generic_visit(node)
+
+    def visit_AnnAssign(self, node: ast.AnnAssign) -> None:
+        if node.value is not None:
+            self._record_target(node.target, node)
+        self.generic_visit(node)
+
+    def visit_AugAssign(self, node: ast.AugAssign) -> None:
+        self._record_target(node.target, node)
+        self.generic_visit(node)
+
+    def visit_Call(self, node: ast.Call) -> None:
+        if is_self_attr(node.func):
+            self.calls.append(_CallSite(self.method, node.func.attr,
+                                        self.locked))
+        self.generic_visit(node)
+
+
+def _scan_class(cls: ast.ClassDef):
+    writes: list[_Write] = []
+    calls: list[_CallSite] = []
+    method_names = set()
+    for meth in cls.body:
+        if not isinstance(meth, ast.FunctionDef):
+            continue
+        method_names.add(meth.name)
+        scanner = _MethodScanner(meth.name)
+        for stmt in meth.body:
+            scanner.visit(stmt)
+        writes.extend(scanner.writes)
+        calls.extend(scanner.calls)
+    return writes, calls, method_names
+
+
+def _locked_closure(calls: list[_CallSite], method_names: set[str]) -> set[str]:
+    """Private methods whose *every* intra-class call site is inside a
+    locked region (directly, or via a caller already in the closure) —
+    the service's ``_serve_page``-style helpers, which run under the
+    public methods' lock without re-taking it."""
+    sites: dict[str, list[_CallSite]] = {}
+    for c in calls:
+        if c.callee in method_names and c.callee.startswith("_") \
+                and not c.callee.startswith("__"):
+            sites.setdefault(c.callee, []).append(c)
+    closed: set[str] = set()
+    changed = True
+    while changed:
+        changed = False
+        for name, cs in sites.items():
+            if name in closed:
+                continue
+            if all(c.locked or c.caller in closed for c in cs):
+                closed.add(name)
+                changed = True
+    return closed
+
+
+@register
+class LockDisciplineRule(Rule):
+    name = "lock-discipline"
+    summary = ("writes to shared state in lock-owning classes must happen "
+               "under `with self._lock`")
+    doc = """\
+Invariant: in any class whose __init__ creates `self._lock`, every write
+to instance state outside __init__ happens while the lock is held — either
+lexically inside `with self._lock:`, or in a private helper whose every
+intra-class call site is inside a locked region (the service's
+`_serve_page` pattern: public methods take the RLock once, helpers run
+under it).
+
+Why it holds: the HTTP front (service/server.py) is a ThreadingHTTPServer,
+so MaskSearchService methods, the planner's LRU caches, the metrics
+registry, and the tracer all run concurrently.  An unlocked read of a
+monotonic counter is a tolerated torn read (the /metrics scrape does this
+by design); an unlocked *write* is a lost update or a torn compound
+mutation — e.g. an LRU eviction racing an insert corrupts the cache's
+size accounting silently.
+
+Violation caught (PR 7 fixed this in obs/trace.py):
+
+    class Tracer:
+        def __init__(self):
+            self._lock = threading.Lock()
+            self.spans_started = 0
+        def span(self, name):
+            self.spans_started += 1      # <- unlocked read-modify-write
+
+Fix: wrap the write in `with self._lock:`.  If the write is genuinely
+single-threaded (construction-time, or documented reader-tolerated),
+suppress with `# masklint: ignore[lock-discipline] -- <why>`.
+
+Runtime counterpart: REPRO_LOCK_CHECK=1 (repro/lockcheck.py) promotes
+the same contract to execution-time assertions (owner-checked release,
+order-cycle detection, guarded dict mutation).
+"""
+
+    def check_module(self, ctx: ModuleCtx) -> list[Finding]:
+        findings: list[Finding] = []
+        for cls_name, cls in _lock_classes(ctx.tree).items():
+            writes, calls, method_names = _scan_class(cls)
+            closed = _locked_closure(calls, method_names)
+            for w in writes:
+                if w.method in _DUNDER_EXEMPT or w.locked \
+                        or w.method in closed:
+                    continue
+                findings.append(ctx.finding(
+                    self.name, w.node,
+                    f"{cls_name}.{w.method} writes self.{w.attr} outside "
+                    f"`with self._lock` ({cls_name} owns a lock; shared "
+                    f"state must be written under it)"))
+        return findings
+
+
+@register
+class LockOrderRule(Rule):
+    name = "lock-order"
+    summary = "the static lock-order graph across classes must be acyclic"
+    doc = """\
+Invariant: the directed graph "class A's locked regions reach into class
+B, which owns its own lock" has no cycles.  Two threads taking the same
+pair of locks in opposite orders is a deadlock waiting for the right
+interleaving; with the service lock outermost and the planner-cache /
+metrics / tracer locks strictly inner, the repo's graph is a tree.
+
+How the edges are derived (a one-level static approximation): inside
+`with self._lock:` of class A, a call `self.<attr>.<anything>(...)` —
+where __init__ assigned `self.<attr> = B(...)` and B owns a `_lock` —
+adds edge A → B; so does a nested `with self.<attr>._lock:`.  Cycles in
+the resulting cross-module graph are reported on one edge of the cycle.
+
+Violation example:
+
+    class A:
+        def __init__(self): self._lock = threading.Lock(); self.b = B(self)
+        def f(self):
+            with self._lock: self.b.g()      # A -> B
+    class B:
+        def __init__(self, a): self._lock = threading.Lock(); self.a = a
+        def g(self):
+            with self._lock: self.a.f()      # B -> A: cycle
+
+Fix: establish a single order (take the outer lock first in both paths)
+or drop work out of the locked region before calling across.  The runtime
+check (REPRO_LOCK_CHECK=1) catches the dynamic version of the same bug,
+including orders masklint's static approximation cannot see.
+"""
+
+    def __init__(self):
+        # class -> {attr -> constructed-class-name}
+        self._attr_types: dict[str, dict[str, str]] = {}
+        self._lock_owners: set[str] = set()
+        # (owner-class, attr, finding-stub)
+        self._pending: list[tuple[str, str, Finding]] = []
+
+    def check_module(self, ctx: ModuleCtx) -> list[Finding]:
+        for cls_name, cls in _lock_classes(ctx.tree).items():
+            self._lock_owners.add(cls_name)
+            attr_types: dict[str, str] = {}
+            for meth in cls.body:
+                if isinstance(meth, ast.FunctionDef) \
+                        and meth.name == "__init__":
+                    for sub in ast.walk(meth):
+                        if isinstance(sub, ast.Assign) \
+                                and isinstance(sub.value, ast.Call):
+                            fn = sub.value.func
+                            ctor = fn.id if isinstance(fn, ast.Name) else \
+                                (fn.attr if isinstance(fn, ast.Attribute)
+                                 else "")
+                            for t in sub.targets:
+                                if is_self_attr(t) and ctor:
+                                    attr_types[t.attr] = ctor
+            self._attr_types[cls_name] = attr_types
+            self._collect_edges(ctx, cls_name, cls)
+        return []
+
+    def _collect_edges(self, ctx: ModuleCtx, cls_name: str,
+                       cls: ast.ClassDef) -> None:
+        rule = self
+
+        class V(ast.NodeVisitor):
+            def __init__(self):
+                self.locked = False
+
+            def visit_With(self, node: ast.With) -> None:
+                takes = any(is_self_attr(i.context_expr, "_lock")
+                            for i in node.items)
+                # nested `with self.<attr>._lock:` inside a locked region
+                if self.locked:
+                    for i in node.items:
+                        e = i.context_expr
+                        if isinstance(e, ast.Attribute) and e.attr == "_lock" \
+                                and is_self_attr(e.value):
+                            rule._pending.append(
+                                (cls_name, e.value.attr,
+                                 ctx.finding("lock-order", node, "")))
+                was = self.locked
+                self.locked = was or takes
+                for stmt in node.body:
+                    self.visit(stmt)
+                self.locked = was
+
+            def visit_Call(self, node: ast.Call) -> None:
+                if self.locked and isinstance(node.func, ast.Attribute) \
+                        and is_self_attr(node.func.value):
+                    rule._pending.append(
+                        (cls_name, node.func.value.attr,
+                         ctx.finding("lock-order", node, "")))
+                self.generic_visit(node)
+
+        for meth in cls.body:
+            if isinstance(meth, ast.FunctionDef):
+                v = V()
+                for stmt in meth.body:
+                    v.visit(stmt)
+
+    def finalize(self) -> list[Finding]:
+        edges: dict[str, dict[str, Finding]] = {}
+        for owner, attr, stub in self._pending:
+            target = self._attr_types.get(owner, {}).get(attr)
+            if target in self._lock_owners and target != owner:
+                edges.setdefault(owner, {}).setdefault(target, stub)
+        findings: list[Finding] = []
+        reported: set[frozenset] = set()
+
+        def dfs(node: str, path: list[str]) -> None:
+            for nxt, stub in edges.get(node, {}).items():
+                if nxt in path:
+                    cycle = path[path.index(nxt):] + [nxt]
+                    key = frozenset(cycle)
+                    if key not in reported:
+                        reported.add(key)
+                        findings.append(dataclasses.replace(
+                            stub, message=(
+                                f"lock-order cycle "
+                                f"{' -> '.join(cycle)}: these classes take "
+                                f"each other's locks while holding their "
+                                f"own — a deadlock under the right thread "
+                                f"interleaving")))
+                elif len(path) < 16:
+                    dfs(nxt, path + [nxt])
+
+        for start in sorted(edges):
+            dfs(start, [start])
+        return findings

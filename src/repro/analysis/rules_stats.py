@@ -1,0 +1,143 @@
+"""Stats-reflection drift: stats dataclasses must stay absorbable by the
+obs/metrics.py reflection samplers and reset/merge machinery."""
+
+from __future__ import annotations
+
+import ast
+import re
+
+from .core import Finding, ModuleCtx, Rule, call_name, register
+
+_STATS_NAME_RE = re.compile(r"(Stats|Info)$")
+_NUMERIC = {"int", "float"}
+
+
+def _is_dataclass(cls: ast.ClassDef) -> bool:
+    for dec in cls.decorator_list:
+        d = dec.func if isinstance(dec, ast.Call) else dec
+        if (isinstance(d, ast.Name) and d.id == "dataclass") or \
+                (isinstance(d, ast.Attribute) and d.attr == "dataclass"):
+            return True
+    return False
+
+
+def _ann_name(ann: ast.AST) -> str:
+    if isinstance(ann, ast.Name):
+        return ann.id
+    if isinstance(ann, ast.Attribute):
+        return ann.attr
+    if isinstance(ann, ast.Constant) and isinstance(ann.value, str):
+        return ann.value
+    return ast.unparse(ann)
+
+
+def _uses_fields_reflection(fn: ast.FunctionDef) -> bool:
+    return any(isinstance(n, ast.Call) and call_name(n) in
+               ("fields", "asdict", "astuple", "replace")
+               for n in ast.walk(fn))
+
+
+@register
+class StatsDriftRule(Rule):
+    name = "stats-drift"
+    summary = ("*Stats/*Info dataclass fields must stay visible to the "
+               "metrics reflection samplers and reset/merge machinery")
+    doc = """\
+Invariant: every dataclass named *Stats or *Info keeps the shape the
+reflection machinery relies on —
+
+* every field is annotated `int` or `float` (obs/metrics.py's
+  dataclass_sampler iterates dataclasses.fields and silently *skips*
+  anything non-numeric, so a str/bool/list field simply vanishes from
+  /metrics with no error);
+* every field has a default (reset() restores `f.default` per field —
+  a default-less field breaks reflection reset, and dataclass ordering);
+* reset()/merge(), where present, iterate dataclasses.fields(...) (or
+  asdict) instead of hand-listing attributes;
+* as_dict(), where present, goes through asdict/fields, or its literal
+  dict covers every declared field.
+
+Why it holds: the observability PR deliberately built samplers, reset,
+and merge on reflection so that adding a counter to ExecStats/IOStats/
+CacheStats/SchedulerStats is a one-line change that automatically
+appears in /metrics, EXPLAIN ANALYZE, and the phase summaries.  The
+failure mode is *drift*: a hand-listed reset() keeps compiling after a
+field is added, silently carrying the new counter across runs —
+test_stats_consistency.py catches some of this at test time; this rule
+catches all of it at lint time.
+
+Violation examples:
+
+    @dataclasses.dataclass
+    class IngestStats:
+        rows: int = 0
+        source: str = ""          # vanishes from /metrics silently
+
+    def reset(self):
+        self.rows = 0             # next field added -> stale carry-over
+
+Fix: keep stats dataclasses purely numeric (put labels/identity on the
+metric family, not the stats object), give every field a default, and
+write reset/merge as `for f in dataclasses.fields(self): ...`.
+Non-stats dataclasses that merely end in ...Stats/...Info should be
+renamed or suppressed with a reason.
+"""
+
+    def check_module(self, ctx: ModuleCtx) -> list[Finding]:
+        findings: list[Finding] = []
+        for cls in ast.walk(ctx.tree):
+            if not (isinstance(cls, ast.ClassDef)
+                    and _STATS_NAME_RE.search(cls.name)
+                    and _is_dataclass(cls)):
+                continue
+            fields: list[str] = []
+            for stmt in cls.body:
+                if not (isinstance(stmt, ast.AnnAssign)
+                        and isinstance(stmt.target, ast.Name)):
+                    continue
+                ann = _ann_name(stmt.annotation)
+                if "ClassVar" in ast.unparse(stmt.annotation):
+                    continue
+                name = stmt.target.id
+                fields.append(name)
+                if ann not in _NUMERIC:
+                    findings.append(ctx.finding(
+                        self.name, stmt,
+                        f"{cls.name}.{name} is annotated {ann!r} — "
+                        f"dataclass_sampler only absorbs int/float "
+                        f"fields; this one silently drops out of "
+                        f"/metrics"))
+                if stmt.value is None:
+                    findings.append(ctx.finding(
+                        self.name, stmt,
+                        f"{cls.name}.{name} has no default — reflection "
+                        f"reset() restores f.default per field and "
+                        f"cannot handle default-less fields"))
+            for meth in cls.body:
+                if not isinstance(meth, ast.FunctionDef):
+                    continue
+                if meth.name in ("reset", "merge") \
+                        and not _uses_fields_reflection(meth):
+                    findings.append(ctx.finding(
+                        self.name, meth,
+                        f"{cls.name}.{meth.name} hand-lists attributes — "
+                        f"iterate dataclasses.fields(self) so a new "
+                        f"field cannot silently escape "
+                        f"{meth.name}"))
+                elif meth.name == "as_dict" \
+                        and not _uses_fields_reflection(meth):
+                    covered: set[str] = set()
+                    for n in ast.walk(meth):
+                        if isinstance(n, ast.Dict):
+                            covered.update(
+                                k.value for k in n.keys
+                                if isinstance(k, ast.Constant)
+                                and isinstance(k.value, str))
+                    missing = [f for f in fields if f not in covered]
+                    if missing:
+                        findings.append(ctx.finding(
+                            self.name, meth,
+                            f"{cls.name}.as_dict omits field(s) "
+                            f"{', '.join(missing)} — use "
+                            f"dataclasses.asdict or cover every field"))
+        return findings

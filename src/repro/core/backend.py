@@ -576,7 +576,7 @@ def get_backend(store, backend=None) -> ExecBackend:
     if cls is None:
         raise ValueError(f"unknown backend {backend!r}; expected one of "
                          f"{['host'] + sorted(_NAMED)} or an ExecBackend")
-    cache = store._backend_cache
+    cache = store.backend_cache
     if backend not in cache:
         cache[backend] = cls(store)
         _BACKEND_BUILDS.labels(backend=backend).inc()

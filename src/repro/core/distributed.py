@@ -34,7 +34,6 @@ except the query descriptor scalars.
 
 from __future__ import annotations
 
-import functools
 from typing import Sequence
 
 import jax

@@ -571,7 +571,7 @@ class MaskEvalContext:
 
     def _can_partial(self, node) -> bool:
         return (self.partial_rows and self._loaded is None and
-                self.store._cache_map is None and
+                not self.store.cache_enabled and
                 len(node.cp_terms()) <= 1)
 
     # bounds -----------------------------------------------------------------

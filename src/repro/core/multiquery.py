@@ -18,15 +18,12 @@ import dataclasses
 import time
 from typing import Sequence
 
-import numpy as np
-
-from .engine import ExecStats
-from .queries import Query, parse
+from .queries import parse
 
 
 @dataclasses.dataclass
 class WorkloadStats:
-    per_query: list
+    per_query: list  # masklint: ignore[stats-drift] -- report object, not sampled counters
     total_wall_s: float = 0.0
     bytes_loaded: int = 0
     files_loaded: int = 0

@@ -27,8 +27,6 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
-import numpy as np
-
 from ..obs import trace as _trace
 from . import engine
 from .exprs import (And, BinOp, Cmp, CP, Node, Not, Or, PairTerm, Pred,

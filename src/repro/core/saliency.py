@@ -19,11 +19,8 @@ Every source normalizes into the paper's data model: 2-D float arrays in
 
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 Array = jax.Array
 

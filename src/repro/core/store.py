@@ -41,7 +41,7 @@ import dataclasses
 import json
 import os
 import time
-from typing import Optional, Sequence
+from typing import Sequence
 
 import jax.numpy as jnp
 import numpy as np
@@ -354,6 +354,19 @@ class MaskStore:
     @property
     def mask_ids(self) -> np.ndarray:
         return self.meta["mask_id"]
+
+    @property
+    def cache_enabled(self) -> bool:
+        """Whether the cross-query load cache is on — the public signal
+        for planners choosing between cached whole-row loads and
+        partial-row reads (see :meth:`enable_cache`)."""
+        return self._cache_map is not None
+
+    @property
+    def backend_cache(self) -> dict:
+        """Named :class:`ExecBackend` instances resident over this store
+        (owned by ``core.backend.get_backend``, keyed by backend name)."""
+        return self._backend_cache
 
     def positions_of(self, mask_ids: Sequence[int]) -> np.ndarray:
         """Row positions for the given mask_ids (metadata is host-side)."""
@@ -881,6 +894,18 @@ class StoreSnapshot:
         # Stale readers must not consult the live cache: its position
         # numbering and contents track the *current* epoch.
         return self._store._cache_map if self.fresh else None
+
+    @property
+    def cache_enabled(self) -> bool:
+        """Cross-query load cache visibility at the pinned epoch — False
+        once the store moves on (the live cache's position numbering
+        tracks the current epoch, so a stale reader must not plan
+        around it)."""
+        return self._cache_map is not None
+
+    @property
+    def backend_cache(self) -> dict:
+        return self._store.backend_cache
 
     # -- pinned metadata surface --------------------------------------------
     def __len__(self) -> int:

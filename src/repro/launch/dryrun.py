@@ -33,7 +33,7 @@ import traceback
 import jax
 
 from ..configs.base import ARCH_IDS, SHAPES, load_arch
-from ..roofline.extract import CellCost, Roofline, collective_bytes
+from ..roofline.extract import CellCost, Roofline
 from . import sharding as sh
 from .mesh import make_production_mesh
 from .specs import build_cell, build_masksearch_cells

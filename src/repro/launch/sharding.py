@@ -20,11 +20,9 @@ The plan (DESIGN.md §6):
 
 from __future__ import annotations
 
-import functools
 from typing import Any
 
 import jax
-import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from ..models import layers as L

@@ -17,10 +17,7 @@ Production shape (documented; same code path):
 from __future__ import annotations
 
 import argparse
-import os
 import time
-
-import numpy as np
 
 import jax
 

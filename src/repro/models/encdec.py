@@ -21,7 +21,7 @@ import jax.numpy as jnp
 from . import attention as attn
 from .layers import (cross_entropy, embed, gelu_mlp, init_embedding,
                      maybe_scan,
-                     init_gelu_mlp, init_rms, logits_from_tied, param,
+                     init_gelu_mlp, init_rms, logits_from_tied,
                      rms_norm, shard_act, sinusoidal_positions, split_params)
 
 Array = jax.Array

@@ -12,7 +12,7 @@ from __future__ import annotations
 import dataclasses
 import functools
 import math
-from typing import Any, Callable
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -106,7 +106,7 @@ def maybe_scan(body, carry, xs, unroll: bool):
     n = jax.tree.leaves(xs)[0].shape[0]
     ys = []
     for i in range(n):
-        x_i = jax.tree.map(lambda a: a[i], xs)
+        x_i = jax.tree.map(lambda a, i=i: a[i], xs)
         carry, y = body(carry, x_i)
         ys.append(y)
     if ys and ys[0] is not None:

@@ -20,7 +20,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from .layers import gelu, param, shard_act, silu
+from .layers import gelu, param, shard_act
 
 Array = jax.Array
 _C = 8.0

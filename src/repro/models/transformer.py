@@ -20,9 +20,7 @@ MTP head is an extra shared-embedding block predicting t+2.
 
 from __future__ import annotations
 
-import dataclasses
-import functools
-from typing import Any, Optional
+from typing import Any
 
 import jax
 import jax.numpy as jnp

@@ -27,8 +27,8 @@ from typing import Optional
 
 import numpy as np
 
-from ..core.exprs import (And, Cmp, GroupEvalContext, Not, Or,
-                          PairEvalContext, Pred, TypeIn)
+from ..core.exprs import (And, GroupEvalContext, Not, Or,
+                          PairEvalContext, Pred)
 from ..core.plan import LogicalPlan, compile_plan
 from . import trace as trace_mod
 

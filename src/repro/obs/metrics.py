@@ -26,9 +26,10 @@ from __future__ import annotations
 
 import dataclasses
 import math
-import threading
 from collections import OrderedDict
 from typing import Callable, Optional, Sequence
+
+from .. import lockcheck
 
 __all__ = ["MetricsRegistry", "REGISTRY", "get_registry",
            "DEFAULT_TIME_BUCKETS", "dataclass_sampler"]
@@ -73,7 +74,7 @@ class _Child:
 
     def __init__(self):
         self.value = 0.0
-        self._lock = threading.Lock()
+        self._lock = lockcheck.make_lock("metrics.child")
 
     def inc(self, amount: float = 1.0) -> None:
         with self._lock:
@@ -97,14 +98,14 @@ class _HistChild:
         self.counts = [0] * (len(self.buckets) + 1)   # +1 → +Inf
         self.total = 0.0
         self.count = 0
-        self._lock = threading.Lock()
+        self._lock = lockcheck.make_lock("metrics.hist")
 
     def observe(self, value: float) -> None:
         value = float(value)
         with self._lock:
             i = 0
             for i, ub in enumerate(self.buckets):        # noqa: B007
-                if value <= ub:
+                if value <= ub:  # masklint: ignore[bounds-soundness] -- histogram bucket edge, not a CHI bound
                     break
             else:
                 i = len(self.buckets)
@@ -152,7 +153,7 @@ class _Family:
         self.labelnames = tuple(labelnames)
         self.buckets = buckets
         self._children: "OrderedDict[tuple, object]" = OrderedDict()
-        self._lock = threading.Lock()
+        self._lock = lockcheck.make_lock("metrics.family")
 
     def labels(self, **labels):
         if tuple(sorted(labels)) != tuple(sorted(self.labelnames)):
@@ -193,7 +194,7 @@ class MetricsRegistry:
     def __init__(self):
         self._families: "OrderedDict[str, _Family]" = OrderedDict()
         self._collectors: list = []
-        self._lock = threading.Lock()
+        self._lock = lockcheck.make_lock("metrics.registry")
 
     # -- family constructors (idempotent by name) -------------------------
     def _family(self, name, mtype, help, labelnames, buckets=None) -> _Family:

@@ -30,10 +30,11 @@ from __future__ import annotations
 import contextlib
 import contextvars
 import itertools
-import threading
 import time
 from collections import OrderedDict
 from typing import Optional
+
+from .. import lockcheck
 
 __all__ = ["Span", "Tracer", "span", "current_tracer", "chrome_trace",
            "NOOP_SPAN", "GLOBAL_TRACER"]
@@ -155,14 +156,15 @@ class Tracer:
         self.spans_started = 0           # the zero-allocation check counter
         self._traces: OrderedDict[str, Span] = OrderedDict()
         self._ids = itertools.count(1)
-        self._lock = threading.Lock()
+        self._lock = lockcheck.make_lock("obs.tracer")
 
     # -- span creation -----------------------------------------------------
     def span(self, name: str):
         """Start a child span of the current context (or a new root)."""
         if not self.enabled:
             return NOOP_SPAN
-        self.spans_started += 1
+        with self._lock:
+            self.spans_started += 1
         sp = Span(name, self)
         parent = _CURRENT_SPAN.get()
         if parent is not None:

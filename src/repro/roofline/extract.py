@@ -26,9 +26,6 @@ from __future__ import annotations
 
 import dataclasses
 import re
-from typing import Optional
-
-import numpy as np
 
 from ..launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16
 

@@ -25,12 +25,12 @@ from __future__ import annotations
 import contextlib
 import copy
 import dataclasses
-import threading
 import time
 from typing import Optional, Sequence
 
 import numpy as np
 
+from .. import lockcheck
 from ..core.backend import get_backend
 from ..core.engine import ExecStats
 from ..core.plan import LogicalPlan, compile_plan
@@ -82,10 +82,14 @@ class MaskSearchService:
                                bounds_cache_size=bounds_cache_size)
         self.sessions = SessionManager(max_sessions=max_sessions)
         self.scheduler = FusedScheduler(store, backend=self.backend)
-        self._lock = threading.RLock()
-        self._counts = {"total": 0, "filter": 0, "topk": 0,
-                        "filtered_topk": 0, "scalar_agg": 0,
-                        "result_cache_hits": 0}
+        self._lock = lockcheck.make_rlock("service")
+        # guard_dict: under REPRO_LOCK_CHECK=1, mutations of the counter
+        # dict assert the service lock is held (reads stay lock-free —
+        # the /metrics scrape tolerates torn reads of monotonic counts).
+        self._counts = lockcheck.guard_dict(
+            {"total": 0, "filter": 0, "topk": 0,
+             "filtered_topk": 0, "scalar_agg": 0,
+             "result_cache_hits": 0}, self._lock)
         self._started_s = time.monotonic()
         # Observability: a per-service tracer (its ring buffer backs
         # ``GET /trace/<query_id>``; ``trace=True`` traces every query, and

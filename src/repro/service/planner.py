@@ -30,12 +30,12 @@ from __future__ import annotations
 
 import dataclasses
 import hashlib
-import threading
 from collections import OrderedDict
 from typing import Optional
 
 import numpy as np
 
+from .. import lockcheck
 from ..core.exprs import Node
 from ..core.plan import LogicalPlan
 
@@ -105,10 +105,10 @@ class LRUCache:
     ``OrderedDict`` corrupts under concurrent ``get``/``put`` (move_to_end
     during iteration of a resize) — every operation holds a lock."""
 
-    def __init__(self, capacity: int):
+    def __init__(self, capacity: int, name: str = "cache"):
         self.capacity = max(int(capacity), 0)
         self._data: OrderedDict = OrderedDict()
-        self._lock = threading.Lock()
+        self._lock = lockcheck.make_lock(f"planner.{name}")
         self.info = CacheInfo()
 
     def get(self, key):
@@ -183,8 +183,8 @@ class Planner:
 
     def __init__(self, *, result_cache_size: int = 128,
                  bounds_cache_size: int = 64):
-        self.result_cache = LRUCache(result_cache_size)
-        self.bounds_cache = LRUCache(bounds_cache_size)
+        self.result_cache = LRUCache(result_cache_size, name="results")
+        self.bounds_cache = LRUCache(bounds_cache_size, name="bounds")
 
     # -- result tier ------------------------------------------------------
     def cached_result(self, plan_or_query, roi_sig: str,

@@ -25,7 +25,6 @@ from __future__ import annotations
 
 import signal
 import threading
-from typing import Optional
 
 from . import checkpoint as ckpt_lib
 

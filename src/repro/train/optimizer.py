@@ -11,7 +11,6 @@ the same logical axes).
 from __future__ import annotations
 
 import dataclasses
-import functools
 from typing import Any, NamedTuple
 
 import jax
@@ -44,7 +43,8 @@ class OptState(NamedTuple):
     master: Any                # fp32 master weights (or () in low-mem mode)
 
 
-def init_opt_state(params, cfg: OptConfig = OptConfig()) -> OptState:
+def init_opt_state(params, cfg: OptConfig | None = None) -> OptState:
+    cfg = OptConfig() if cfg is None else cfg
     mdt = jnp.dtype(cfg.moments_dtype)
     zeros = jax.tree.map(lambda x: jnp.zeros(x.shape, mdt), params)
     master = (jax.tree.map(lambda x: x.astype(jnp.float32), params)

@@ -13,9 +13,6 @@ model's own remat policy handles the within-layer recompute.
 
 from __future__ import annotations
 
-import functools
-from typing import Any
-
 import jax
 import jax.numpy as jnp
 
@@ -91,7 +88,8 @@ def make_train_step(model, opt_cfg: OptConfig, *, microbatches: int = 1,
     return train_step
 
 
-def init_train_state(model, rng, opt_cfg: OptConfig = OptConfig()):
+def init_train_state(model, rng, opt_cfg: OptConfig | None = None):
     """→ (params, axes, opt_state)."""
+    opt_cfg = OptConfig() if opt_cfg is None else opt_cfg
     params, axes = model.init(rng)
     return params, axes, init_opt_state(params, opt_cfg)

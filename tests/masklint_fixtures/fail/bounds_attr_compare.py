@@ -1,0 +1,6 @@
+"""MUST TRIGGER bounds-soundness: attribute-carried bounds compared
+directly."""
+
+
+def prune(candidates, tau):
+    return [c for c in candidates if c.cp_ub >= tau]  # raw ub compare

@@ -1,0 +1,6 @@
+"""MUST TRIGGER bounds-edge: searchsorted over a local edges array."""
+import numpy as np
+
+
+def k_for(edges, t):
+    return edges.searchsorted(np.float32(t))

@@ -1,0 +1,7 @@
+"""MUST TRIGGER bounds-edge: ad-hoc threshold-to-bin mapping over CHI
+edges (drops the nextafter32 strict-threshold bump)."""
+import numpy as np
+
+
+def bin_of(cfg, threshold):
+    return int(np.searchsorted(cfg.edges, threshold))

@@ -1,0 +1,8 @@
+"""MUST TRIGGER bounds-soundness: raw comparisons standing in for the
+three-valued decision."""
+
+
+def accepted_ids(ids, lb, ub, threshold):
+    keep = ub > threshold      # "possible" used as "certain"
+    sure = lb >= threshold
+    return ids[keep], ids[sure]

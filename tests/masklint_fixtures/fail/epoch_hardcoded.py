@@ -1,0 +1,9 @@
+"""MUST TRIGGER epoch-discipline: a hardcoded epoch literal pins the
+cache to one store generation forever."""
+from repro.service.planner import bounds_key, result_key
+
+
+def keys(expr, plan, roi_sig):
+    rk = result_key(plan, roi_sig, "host", 0)            # literal epoch
+    bk = bounds_key(expr, plan, roi_sig, "host", epoch=7)  # literal epoch
+    return rk, bk

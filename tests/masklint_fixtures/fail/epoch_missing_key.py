@@ -1,0 +1,8 @@
+"""MUST TRIGGER epoch-discipline: key constructions without an epoch."""
+
+
+def lookup(planner, plan, roi_sig, backend):
+    payload = planner.cached_result(plan, roi_sig, backend)  # no epoch
+    if payload is None:
+        planner.store_result(plan, roi_sig, {"ids": []}, backend)
+    return payload

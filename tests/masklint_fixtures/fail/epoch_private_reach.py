@@ -1,0 +1,8 @@
+"""MUST TRIGGER epoch-snapshot: reaching around the snapshot into
+private store state."""
+
+
+def plan_loads(store):
+    if store._cache_map is not None:  # private reach-around
+        return "cached"
+    return "direct"

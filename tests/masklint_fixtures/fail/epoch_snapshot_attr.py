@@ -1,0 +1,10 @@
+"""MUST TRIGGER epoch-snapshot: a run object reading raw arrays through
+its pinned snapshot's private state."""
+
+
+class Run:
+    def __init__(self, store):
+        self.snap = store.snapshot()
+
+    def raw_rows(self, positions):
+        return self.snap._masks[positions]  # bypasses load()/staleness

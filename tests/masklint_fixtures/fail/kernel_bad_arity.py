@@ -1,0 +1,21 @@
+"""MUST TRIGGER kernel-constraints: index_map arity != grid rank."""
+import functools
+
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+
+def scale_kernel(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * 2.0
+
+
+def launch(x, bh):
+    b, h = x.shape
+    return pl.pallas_call(
+        functools.partial(scale_kernel),
+        grid=(b, h // bh),
+        in_specs=[pl.BlockSpec((1, bh), lambda i: (i, 0))],   # 1 arg, rank 2
+        out_specs=pl.BlockSpec((1, bh), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+    )(x)

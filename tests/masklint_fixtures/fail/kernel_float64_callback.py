@@ -1,0 +1,9 @@
+"""MUST TRIGGER kernel-constraints: float64 math and host callbacks
+inside the kernel body."""
+import jax.numpy as jnp
+
+
+def acc_kernel(x_ref, o_ref):
+    acc = x_ref[...].astype(jnp.float64)   # no f64 on TPU Pallas
+    print("acc", acc)                       # host callback stalls the pipe
+    o_ref[...] = acc

@@ -1,0 +1,9 @@
+"""MUST TRIGGER kernel-constraints: Python control flow on traced
+values inside the kernel body."""
+
+
+def gate_kernel(x_ref, o_ref):
+    if x_ref[0, 0] > 0:          # traced value in Python `if`
+        o_ref[...] = x_ref[...]
+    while x_ref[0, 0] > 0:       # and a traced `while`
+        break

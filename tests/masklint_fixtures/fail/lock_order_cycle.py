@@ -1,0 +1,23 @@
+"""MUST TRIGGER lock-order: A and B take each other's locks while
+holding their own."""
+import threading
+
+
+class Alpha:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.beta = Beta(self)
+
+    def poke(self):
+        with self._lock:
+            self.beta.poke_back()
+
+
+class Beta:
+    def __init__(self, alpha):
+        self._lock = threading.Lock()
+        self.alpha = Alpha()
+
+    def poke_back(self):
+        with self._lock:
+            self.alpha.poke()

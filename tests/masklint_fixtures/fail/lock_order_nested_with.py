@@ -1,0 +1,25 @@
+"""MUST TRIGGER lock-order: opposite nesting of two locks via nested
+`with` statements."""
+import threading
+
+
+class Outer:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.inner = Inner(self)
+
+    def forward(self):
+        with self._lock:
+            with self.inner._lock:
+                pass
+
+
+class Inner:
+    def __init__(self, outer):
+        self._lock = threading.Lock()
+        self.outer = Outer()
+
+    def backward(self):
+        with self._lock:
+            with self.outer._lock:
+                pass

@@ -1,0 +1,21 @@
+"""MUST TRIGGER lock-discipline: the second write escapes the locked
+region, and a private helper is called from an unlocked site."""
+import threading
+
+
+class Ledger:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.entries = {}
+        self.total = 0
+
+    def add(self, key, amount):
+        with self._lock:
+            self.entries[key] = amount
+        self.total += amount  # fell out of the with-block
+
+    def audit(self):
+        self._rebuild()  # unlocked call site -> helper not in closure
+
+    def _rebuild(self):
+        self.total = sum(self.entries.values())

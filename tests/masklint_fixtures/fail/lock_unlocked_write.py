@@ -1,0 +1,11 @@
+"""MUST TRIGGER lock-discipline: unlocked write in a lock-owning class."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0
+
+    def bump(self):
+        self.value += 1  # write outside `with self._lock`

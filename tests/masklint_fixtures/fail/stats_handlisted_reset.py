@@ -1,0 +1,20 @@
+"""MUST TRIGGER stats-drift: hand-listed reset/merge and an as_dict
+that omits a field — all three drift when a field is added."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class ScanStats:
+    rows: int = 0
+    bytes_read: int = 0
+
+    def reset(self):
+        self.rows = 0
+        self.bytes_read = 0
+
+    def merge(self, other):
+        self.rows += other.rows
+        self.bytes_read += other.bytes_read
+
+    def as_dict(self):
+        return {"rows": self.rows}

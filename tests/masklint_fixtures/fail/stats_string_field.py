@@ -1,0 +1,10 @@
+"""MUST TRIGGER stats-drift: a non-numeric field silently vanishes from
+the reflection samplers, and a default-less field breaks reset()."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class IngestStats:
+    source: str            # not int/float -> dropped from /metrics
+    rows: int = 0
+    wall_s: float = 0.0

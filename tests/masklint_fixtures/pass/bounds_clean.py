@@ -1,0 +1,11 @@
+"""MUST STAY CLEAN: bound decisions via cmp_decide; searchsorted over
+non-edge arrays is ordinary numpy."""
+import numpy as np
+
+from repro.core.exprs import cmp_decide
+
+
+def split(op, lb, ub, threshold, positions, all_pos):
+    accept, reject = cmp_decide(op, lb, ub, threshold)
+    slots = np.searchsorted(all_pos, positions)   # positions, not edges
+    return accept, reject, slots

@@ -1,0 +1,13 @@
+"""MUST STAY CLEAN: keys thread the epoch; store access stays public."""
+
+
+def lookup(planner, plan, roi_sig, backend, store):
+    payload = planner.cached_result(plan, roi_sig, backend,
+                                    epoch=store.epoch)
+    if payload is None:
+        planner.store_result(plan, roi_sig, {"ids": []}, backend,
+                             store.epoch)
+    snap = store.snapshot()
+    if snap.cache_enabled and snap.can_serve([0, 1]):
+        return snap.load([0, 1])
+    return payload

@@ -1,0 +1,26 @@
+"""MUST STAY CLEAN: arity-correct index maps, static range unroll,
+f32 accumulation — the shape of the real kernels."""
+import functools
+
+import jax
+import jax.experimental.pallas as pl
+import jax.numpy as jnp
+
+
+def sum_kernel(x_ref, o_ref, *, nb):
+    acc = jnp.zeros_like(o_ref)
+    for k in range(nb):               # static unroll via partial kwarg
+        acc = acc + x_ref[k]
+    o_ref[...] = acc.astype(jnp.float32)
+
+
+def launch(x, bh):
+    b, h = x.shape
+    grid = (b, h // bh)
+    return pl.pallas_call(
+        functools.partial(sum_kernel, nb=4),
+        grid=grid,
+        in_specs=[pl.BlockSpec((1, bh), lambda i, j: (i, j))],
+        out_specs=pl.BlockSpec((1, bh), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct(x.shape, jnp.float32),
+    )(x)

@@ -1,0 +1,28 @@
+"""MUST STAY CLEAN: writes under the lock, construction-time writes,
+and a private helper called only from locked regions."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0
+        self.history = []
+
+    def bump(self, amount):
+        with self._lock:
+            self.value += amount
+            self._note(amount)
+
+    def reset(self):
+        with self._lock:
+            self.value = 0
+            self.history = []
+
+    def _note(self, amount):
+        # only ever called under the lock (closure rule)
+        self.history.append(amount)
+        self.value = max(self.value, 0)
+
+    def read(self):
+        return self.value   # unlocked *read*: tolerated by design

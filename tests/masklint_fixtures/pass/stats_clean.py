@@ -1,0 +1,21 @@
+"""MUST STAY CLEAN: numeric defaulted fields, reflection reset/merge,
+asdict-based export — the ExecStats/IOStats shape."""
+import dataclasses
+
+
+@dataclasses.dataclass
+class ProbeStats:
+    rows: int = 0
+    bytes_read: int = 0
+    wall_s: float = 0.0
+
+    def reset(self):
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, f.default)
+
+    def merge(self, other):
+        for f in dataclasses.fields(self):
+            setattr(self, f.name, getattr(self, f.name) + getattr(other, f.name))
+
+    def as_dict(self):
+        return dataclasses.asdict(self)

@@ -4,7 +4,6 @@ runnability).  Determinism: save→restore→train ≡ uninterrupted train."""
 import os
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -12,7 +11,7 @@ from repro.configs import load_smoke
 from repro.data.pipeline import SyntheticLMData
 from repro.models import build_model
 from repro.train import checkpoint as ckpt
-from repro.train.fault import PreemptionGuard, elastic_restore
+from repro.train.fault import PreemptionGuard
 from repro.train.optimizer import OptConfig
 from repro.train.train_loop import init_train_state, make_train_step
 

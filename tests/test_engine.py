@@ -1,7 +1,5 @@
 """Unit tests: engine semantics, SQL front-end, store tiers, multi-query."""
 
-import os
-
 import numpy as np
 import pytest
 

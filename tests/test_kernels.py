@@ -1,7 +1,6 @@
 """Per-kernel validation: Pallas (interpret=True on CPU) vs pure-jnp oracle,
 swept over shapes and dtypes.  Counts are integers → exact equality."""
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest

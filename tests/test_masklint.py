@@ -1,0 +1,170 @@
+"""masklint (repro.analysis) — fixture corpus, suppression semantics,
+CLI surface, and the meta-test that the committed repo is clean."""
+
+import json
+import os
+import subprocess
+import sys
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import all_rules, run_paths
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = REPO / "tests" / "masklint_fixtures"
+
+# filename prefix -> the rule its findings must include
+_EXPECTED_RULE = {
+    "lock_order": "lock-order",
+    "lock": "lock-discipline",
+    "epoch_missing": "epoch-discipline",
+    "epoch_hardcoded": "epoch-discipline",
+    "epoch": "epoch-snapshot",
+    "bounds_edge": "bounds-edge",
+    "bounds": "bounds-soundness",
+    "kernel": "kernel-constraints",
+    "stats": "stats-drift",
+}
+
+
+def _expected_rule(name: str) -> str:
+    for prefix in sorted(_EXPECTED_RULE, key=len, reverse=True):
+        if name.startswith(prefix):
+            return _EXPECTED_RULE[prefix]
+    raise AssertionError(f"fixture {name} matches no expected-rule prefix")
+
+
+def _run(paths, **kw):
+    kw.setdefault("suppressions_path", str(REPO / "masklint-suppressions.json"))
+    return run_paths([str(p) for p in paths], root=str(REPO), **kw)
+
+
+FAIL_FIXTURES = sorted((FIXTURES / "fail").glob("*.py"))
+PASS_FIXTURES = sorted((FIXTURES / "pass").glob("*.py"))
+
+
+def test_corpus_present_and_balanced():
+    """ISSUE 7 acceptance: >=2 trigger and >=1 near-miss fixture per
+    rule family (lock, epoch, bounds, kernel, stats)."""
+    fams = ("lock", "epoch", "bounds", "kernel", "stats")
+    for fam in fams:
+        triggers = [p for p in FAIL_FIXTURES if p.name.startswith(fam)]
+        clean = [p for p in PASS_FIXTURES if p.name.startswith(fam)]
+        assert len(triggers) >= 2, f"{fam}: need >=2 must-fail fixtures"
+        assert len(clean) >= 1, f"{fam}: need >=1 near-miss fixture"
+
+
+@pytest.mark.parametrize("path", FAIL_FIXTURES, ids=lambda p: p.stem)
+def test_fail_fixture_triggers_its_rule(path):
+    result = _run([path])
+    assert result.findings, f"{path.name} produced no findings"
+    rules = {f.rule for f in result.findings}
+    assert _expected_rule(path.name) in rules, \
+        f"{path.name}: expected {_expected_rule(path.name)}, got {rules}"
+
+
+@pytest.mark.parametrize("path", PASS_FIXTURES, ids=lambda p: p.stem)
+def test_pass_fixture_stays_clean(path):
+    result = _run([path])
+    assert not result.findings, \
+        f"{path.name}: {[f.format() for f in result.findings]}"
+
+
+def test_repo_as_committed_is_clean():
+    """The CI gate: `python -m repro.analysis` exits 0 at the repo root."""
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    proc = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--format", "json"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=120)
+    payload = json.loads(proc.stdout)
+    assert proc.returncode == 0, payload
+    assert payload["ok"] and not payload["findings"], payload
+    assert payload["files_scanned"] > 50
+
+
+def test_cli_explain_and_list():
+    env = dict(os.environ, PYTHONPATH=str(REPO / "src"))
+    listing = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--list"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=60)
+    assert listing.returncode == 0
+    names = {line.split()[0] for line in listing.stdout.splitlines()}
+    assert {"lock-discipline", "lock-order", "epoch-discipline",
+            "epoch-snapshot", "bounds-soundness", "bounds-edge",
+            "kernel-constraints", "stats-drift"} <= names
+    for rule in sorted(names):
+        doc = subprocess.run(
+            [sys.executable, "-m", "repro.analysis", "--explain", rule],
+            cwd=REPO, env=env, capture_output=True, text=True, timeout=60)
+        assert doc.returncode == 0 and "Invariant" in doc.stdout, rule
+    bad = subprocess.run(
+        [sys.executable, "-m", "repro.analysis", "--explain", "nope"],
+        cwd=REPO, env=env, capture_output=True, text=True, timeout=60)
+    assert bad.returncode == 2
+
+
+def test_every_rule_documented():
+    for name, cls in all_rules().items():
+        assert cls.summary, name
+        assert "Invariant" in cls.doc and "Violation" in cls.doc, name
+
+
+def test_inline_suppression_requires_reason(tmp_path):
+    src = FIXTURES / "fail" / "bounds_raw_compare.py"
+    text = src.read_text()
+    # a bare ignore (no reason) must NOT suppress
+    bare = text.replace("keep = ub > threshold      ",
+                        "keep = (ub > threshold)  # masklint: ignore[all]")
+    f1 = tmp_path / "bare.py"
+    f1.write_text(bare)
+    r1 = _run([f1])
+    assert any(f.rule == "bounds-soundness" and "reason" in f.message
+               for f in r1.findings)
+    # with a reason it suppresses
+    withreason = text.replace(
+        "keep = ub > threshold      ",
+        "keep = (ub > threshold)  # masklint: ignore[all] -- test reason")
+    f2 = tmp_path / "reasoned.py"
+    f2.write_text(withreason)
+    r2 = _run([f2])
+    # the `keep` line is suppressed; the fixture's other raw compare
+    # (`sure = lb >= threshold`) still fires
+    kept_lines = [f.line for f in r2.findings
+                  if f.rule == "bounds-soundness"]
+    assert len(kept_lines) == 1 and r2.n_suppressed >= 1
+
+
+def test_suppression_file_entries(tmp_path):
+    target = FIXTURES / "fail" / "epoch_private_reach.py"
+    rel = target.relative_to(REPO).as_posix()
+    sup = tmp_path / "sup.json"
+    sup.write_text(json.dumps({"suppressions": [
+        {"rule": "epoch-snapshot", "path": rel, "reason": "test entry"}]}))
+    r = _run([target], suppressions_path=str(sup))
+    assert not r.findings and r.n_suppressed >= 1
+    # entries without a reason are themselves findings
+    sup.write_text(json.dumps({"suppressions": [
+        {"rule": "epoch-snapshot", "path": rel}]}))
+    r2 = _run([target], suppressions_path=str(sup))
+    assert any(f.rule == "suppression-file" for f in r2.findings)
+
+
+def test_shipped_suppression_file_is_empty():
+    data = json.loads((REPO / "masklint-suppressions.json").read_text())
+    assert data == {"suppressions": []}
+
+
+def test_parse_error_is_reported(tmp_path):
+    bad = tmp_path / "broken.py"
+    bad.write_text("def f(:\n")
+    r = _run([bad])
+    assert any(f.rule == "parse-error" for f in r.findings)
+
+
+def test_rule_subset_selection(tmp_path):
+    r = _run([FIXTURES / "fail" / "lock_unlocked_write.py"],
+             rule_names=["stats-drift"])
+    assert not r.findings     # lock rule not selected
+    with pytest.raises(KeyError):
+        _run([FIXTURES], rule_names=["no-such-rule"])

@@ -17,7 +17,7 @@ import pytest
 from repro.core import CHIConfig, MaskStore, engine, queries
 from repro.core.engine import (FilteredTopKRun, FilterRun, MinMaxAggRun,
                                ScalarAggRun, TopKRun)
-from repro.core.exprs import (And, BinOp, Cmp, Const, CP, MaskEvalContext,
+from repro.core.exprs import (And, BinOp, Cmp, CP, MaskEvalContext,
                               Not, Or, RoiArea, TypeIn)
 from repro.core.plan import LogicalPlan, compile_plan, run_plan, \
     simplify_predicate
