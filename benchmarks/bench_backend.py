@@ -135,6 +135,77 @@ def bench_e2e(store, rois, backends, record):
             "latency_s": t, "n_verified": int(stats.n_verified)}
 
 
+def bench_packed(n_masks, size, record):
+    """Bitpacked binary tier vs float tier on the same binary masks — the
+    ISSUE 8 acceptance numbers: ids bit-identical, ``bytes_ratio`` ≥ 8
+    (words are 1/32 the float bytes; both stores verify the same residue),
+    and exactly one fused bounds+verify megakernel launch per round."""
+    from repro.core import CHIConfig, MaskStore
+    from repro.core.exprs import CP
+    from repro.core.plan import LogicalPlan, run_plan
+    from repro.core.store import MASK_META_DTYPE
+    from repro.data.masks import object_boxes, saliency_masks
+    from repro.obs import REGISTRY
+
+    boxes = object_boxes(n_masks, size, size, seed=1)
+    m, _ = saliency_masks(n_masks, size, size, seed=7,
+                          attacked_fraction=0.2, boxes=boxes,
+                          in_box_fraction=0.9)
+    masks = (m > 0.5).astype(np.float32)
+    meta = np.zeros(n_masks, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(n_masks)
+    meta["image_id"] = np.arange(n_masks) // 2
+    meta["mask_type"] = np.arange(n_masks) % 2 + 1
+    cfg = CHIConfig(grid=16, num_bins=16, height=size, width=size)
+    stores = {
+        "float": MaskStore.create_memory(masks, meta, cfg),
+        "packed": MaskStore.create_memory(masks, meta.copy(), cfg,
+                                          packed=True),
+    }
+    # grid-misaligned ROI so CHI bounds leave a residue to verify
+    roi = (3, 5, size - 3, size - 1)
+    plan = LogicalPlan(order_by=CP(roi, 0.5, 1.5), k=25)
+
+    def launches():
+        snap = REGISTRY.snapshot().get(
+            "masksearch_kernel_launches_total", {})
+        return snap.get("kernel=fused_bounds_verify", 0.0)
+
+    out = {}
+    ref_ids = None
+    for name, store in stores.items():
+        payload = {}
+
+        def once(store=store, payload=payload):
+            payload["out"] = run_plan(store, plan, verify_batch=256)
+
+        n0 = launches()
+        t = _time(once, repeat=3)
+        n_launch = launches() - n0
+        (ids, _), stats = payload["out"]
+        if ref_ids is None:
+            ref_ids = list(ids)
+        assert list(ids) == ref_ids, "packed tier diverged from float"
+        out[name] = {"latency_s": t,
+                     "bytes_loaded": int(stats.bytes_loaded),
+                     "n_verified": int(stats.n_verified),
+                     "n_rounds": int(stats.n_rounds)}
+        derived = (f"bytes={stats.bytes_loaded};"
+                   f"verified={stats.n_verified}/{stats.n_candidates}")
+        if name == "packed":
+            # 4 timed runs (warmup + 3): launches divide evenly per round
+            out[name]["megakernel_launches_per_round"] = (
+                n_launch / max(4 * stats.n_rounds, 1))
+            derived += f";megakernel_per_round=" \
+                       f"{out[name]['megakernel_launches_per_round']:.2f}"
+        _row(f"backend_packed_{name}", t, derived)
+    out["bytes_ratio"] = (out["float"]["bytes_loaded"]
+                          / max(out["packed"]["bytes_loaded"], 1))
+    out["latency_ratio"] = (out["float"]["latency_s"]
+                            / max(out["packed"]["latency_s"], 1e-9))
+    record["packed"] = {"e2e_topk": out}
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-masks", type=int, default=2000)
@@ -158,6 +229,7 @@ def main():
     bench_bounds(store, rois, backends, record)
     bench_verify(store, rois, backends, record)
     bench_e2e(store, rois, backends, record)
+    bench_packed(args.n_masks, args.size, record)
     if args.json:
         with open(args.json, "w") as f:
             json.dump(record, f, indent=2)

@@ -110,12 +110,69 @@ DIFF_FILTER = ("SELECT image_id FROM MasksDatabaseView "
                "WHERE PAIR_DIFF(saliency, attention, 0.6, 0.6) > 600;")
 
 
+def _setup_binary(n_images: int, size: int, tmpdir: str, packed: bool) -> str:
+    """Binarized variant of ``_setup``: same planted misalignment, values
+    thresholded to {0, 1} so both the float and the packed disk tier can
+    ingest them (the 0.6 thresholds in the SQL then select the set bits)."""
+    from repro.core import CHIConfig, MaskStore
+    from repro.core.store import MASK_META_DTYPE
+    from repro.data.masks import object_boxes, saliency_masks
+
+    rng = np.random.default_rng(3)
+    boxes = object_boxes(n_images, size, size, seed=4)
+    model, _ = saliency_masks(n_images, size, size, seed=5, boxes=boxes,
+                              in_box_fraction=1.0)
+    misaligned = rng.random(n_images) < 0.08
+    off, _ = saliency_masks(n_images, size, size, seed=7, boxes=None)
+    human = np.where(misaligned[:, None, None], off, model)
+    masks = (np.stack([model, human], axis=1).reshape(-1, size, size)
+             > 0.5).astype(np.float32)
+    n = len(masks)
+    meta = np.zeros(n, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(n)
+    meta["image_id"] = np.arange(n) // 2
+    meta["mask_type"] = np.arange(n) % 2 + 1
+    cfg = CHIConfig(grid=16, num_bins=16, height=size, width=size)
+    root = os.path.join(tmpdir, "pdb" if packed else "fdb")
+    MaskStore.create_disk(root, masks, meta, cfg, packed=packed)
+    return root
+
+
+def bench_packed(n_images, size, tmpdir, record):
+    """Packed vs float disk tier on identical binary pair data: ids must
+    match bit-for-bit and the packed leg's metered bytes are the headline
+    (``bytes_ratio`` = float bytes / packed bytes, acceptance ≥ 8×)."""
+    out = {"sql": IOU_TOPK}
+    ids_by_tier = {}
+    for tier, packed in (("float", False), ("packed", True)):
+        root = _setup_binary(n_images, size, tmpdir, packed)
+        payload, stats, nbytes, t = _run_pair(root, IOU_TOPK)
+        ids_by_tier[tier] = list(payload[0] if isinstance(payload, tuple)
+                                 else payload)
+        _row(f"pair_packed_{tier}", t,
+             f"bytes={nbytes};verified={stats.n_verified}/"
+             f"{stats.n_candidates}")
+        out[tier] = {"latency_s": t, "bytes_loaded": int(nbytes),
+                     "n_verified": int(stats.n_verified),
+                     "n_decided_by_bounds": int(stats.n_decided_by_bounds)}
+    assert ids_by_tier["packed"] == ids_by_tier["float"], \
+        "packed pair tier diverged from float"
+    out["bytes_ratio"] = (out["float"]["bytes_loaded"]
+                          / max(out["packed"]["bytes_loaded"], 1))
+    out["latency_ratio"] = (out["float"]["latency_s"]
+                            / max(out["packed"]["latency_s"], 1e-9))
+    record["pair_packed"] = out
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--n-images", type=int, default=1000)
     ap.add_argument("--size", type=int, default=128)
     ap.add_argument("--json", default=None,
                     help="also write a JSON record to this path")
+    ap.add_argument("--packed", action="store_true",
+                    help="also bench the bitpacked binary tier vs the "
+                         "float tier on binarized pair data")
     args = ap.parse_args()
 
     import jax
@@ -132,6 +189,8 @@ def main():
              f"n_pairs={args.n_images};size={args.size}")
         bench_query(root, "pair_iou_topk", IOU_TOPK, record)
         bench_query(root, "pair_filter", DIFF_FILTER, record)
+        if args.packed:
+            bench_packed(args.n_images, args.size, tmpdir, record)
     finally:
         shutil.rmtree(tmpdir, ignore_errors=True)
     if args.json:

@@ -183,3 +183,76 @@ src/repro/kernels/cp_count.py, mask_agg.py, pair_count.py, chi_build.py.
                     f"has no f64 path; CHI count math is exact in "
                     f"int32/float32"))
         return findings
+
+
+_FLOAT_DTYPES = {"float64", "float32", "float16", "bfloat16", "float_",
+                 "double", "half"}
+
+
+@register
+class PopcountNoFloatRule(Rule):
+    name = "popcount-no-float"
+    summary = ("bitpacked popcount kernel bodies must stay integer-only — "
+               "no float dtypes or float literals")
+    doc = """\
+Invariant: a function named `*_popcount_kernel` (the bitpacked binary-mask
+tier's Pallas kernel bodies, kernels/popcount.py) mentions no float dtype
+(float16/32/64, bfloat16, ...) and no float literal anywhere in its body.
+
+Why it holds: the packed tier's entire win is that verification streams
+uint32 words at 1/32 the float bytes and answers counts with bitwise
+AND/OR + popcount in int32.  A float dtype inside the kernel body means
+someone unpacked words back into float lanes (re-paying the 32x traffic
+the tier exists to avoid) or routed the CP range / threshold compare into
+the kernel.  Value semantics are precomputed OUTSIDE the kernel: the
+wrappers collapse `[lv, uv)` on binary values to two int32 flags
+(`f1 = lv <= 1 < uv`, `f0 = lv <= 0 < uv`) and `value > t` to effective-
+word flags, so the traced body is pure integer math by construction —
+which is also what makes the packed path bit-identical to the float
+kernels.
+
+Violation example:
+
+    def _cp_popcount_kernel(roi_ref, lv_ref, mask_ref, out_ref, *, ...):
+        m = mask_ref[0].astype(jnp.float32)   # unpacked float load
+        out_ref[0] += jnp.sum((m >= lv_ref[0]).astype(jnp.int32))
+
+Fix: keep words uint32 end to end; compute range/threshold flags in the
+wrapper (popcount.py `_range_flags` / `_thresh_flags`) and pass them in as
+int32 operands; count with `_popcount32(word & span_mask)`.
+"""
+
+    def check_module(self, ctx: ModuleCtx) -> list[Finding]:
+        findings: list[Finding] = []
+        for fn in ast.walk(ctx.tree):
+            if not (isinstance(fn, ast.FunctionDef)
+                    and fn.name.endswith("_popcount_kernel")):
+                continue
+            for node in ast.walk(fn):
+                dtype = None
+                if isinstance(node, ast.Attribute) \
+                        and node.attr in _FLOAT_DTYPES:
+                    dtype = node.attr
+                elif isinstance(node, ast.Name) and node.id in _FLOAT_DTYPES:
+                    dtype = node.id
+                elif isinstance(node, ast.Constant) \
+                        and isinstance(node.value, str) \
+                        and node.value in _FLOAT_DTYPES:
+                    dtype = node.value
+                if dtype is not None:
+                    findings.append(ctx.finding(
+                        self.name, node,
+                        f"float dtype {dtype} inside popcount kernel body "
+                        f"{fn.name} — packed verification is integer-only; "
+                        f"unpacking to float lanes re-pays the 32x traffic "
+                        f"the bitpacked tier removes"))
+                elif isinstance(node, ast.Constant) \
+                        and isinstance(node.value, float):
+                    findings.append(ctx.finding(
+                        self.name, node,
+                        f"float literal {node.value!r} inside popcount "
+                        f"kernel body {fn.name} — value-range semantics "
+                        f"belong in the wrapper's int32 flags "
+                        f"(_range_flags/_thresh_flags), not the traced "
+                        f"body"))
+        return findings

@@ -61,10 +61,13 @@ import numpy as np
 from ..kernels import ops as kops
 from ..obs.metrics import REGISTRY as _REG
 from .distributed import (_bounds_from_corners, device_resolve,
-                          make_chi_bounds_step, make_cp_multi_step,
-                          make_mask_agg_step, make_mesh,
+                          make_chi_bounds_step, make_cp_multi_packed_step,
+                          make_cp_multi_step, make_fused_verify_step,
+                          make_mask_agg_packed_step, make_mask_agg_step,
+                          make_mesh, make_pair_counts_packed_step,
                           make_pair_counts_step, make_topk_select_step,
-                          make_verify_step, value_ks)
+                          make_verify_packed_step, make_verify_step,
+                          value_ks)
 
 F32_MAX = 3.4e38  # finite stand-in for +inf in float32 kernel compares
 _F32_MAX = F32_MAX
@@ -90,6 +93,37 @@ def spec_arrays(specs, dtype=np.float32):
     lvs = np.asarray([s[1] for s in specs], dtype)
     uvs = np.asarray([min(s[2], F32_MAX) for s in specs], dtype)
     return rois_q, lvs, uvs
+
+
+def is_packed(store) -> bool:
+    """Whether a store serves the bitpacked binary-mask tier (DESIGN.md §12).
+
+    ``getattr`` so snapshots, stores predating the tier, and test doubles
+    all read as float."""
+    return bool(getattr(store, "packed", False))
+
+
+def chi_verdicts(terms, batch: np.ndarray, bounds_of):
+    """Assemble the megakernel's CHI-verdict inputs from memoized bounds.
+
+    ``bounds_of(term) -> (lb, ub) | None`` is a *memo-only* getter: a term
+    whose filter-phase bounds were never computed returns None and is simply
+    treated as undecided everywhere — always correct, never an extra bounds
+    pass.  Returns ``decided`` (Q, B) int32 0/1 and ``lb`` (Q, B) int32
+    aligned with ``terms`` × ``batch``."""
+    q, b = len(terms), len(batch)
+    decided = np.zeros((q, b), np.int32)
+    lb_out = np.zeros((q, b), np.int32)
+    for i, t in enumerate(terms):
+        bnd = bounds_of(t) if bounds_of is not None else None
+        if bnd is None:
+            continue
+        tlb = np.asarray(bnd[0])[batch]
+        tub = np.asarray(bnd[1])[batch]
+        eq = tlb == tub
+        decided[i] = eq
+        lb_out[i] = np.where(eq, tlb, 0)
+    return decided, lb_out
 
 
 class ExecBackend:
@@ -125,6 +159,36 @@ class ExecBackend:
     def mask_agg_counts(self, gctx, node, gidx: np.ndarray) -> np.ndarray:
         """Exact MASK_AGG counts (thresholded intersect/union inside the
         ROI) for group indices ``gidx`` of a :class:`GroupEvalContext`."""
+        raise NotImplementedError
+
+    def fused_verify_counts(self, ctx, batch: np.ndarray, terms,
+                            bounds_of=None) -> dict:
+        """The bounds+verify megakernel route (packed stores, DESIGN.md
+        §12): one launch answers *every* CP descriptor of a verification
+        batch — CHI-decided (term, mask) entries (memoized lb == ub) pass
+        their bound straight through, the undecided remainder is counted
+        from the packed words.  ``bounds_of(term) -> (lb, ub) | None`` is a
+        memo-only getter over the run's filter-phase bounds; None →
+        undecided (always correct).  Float stores fall back to the classic
+        per-term :meth:`verify_counts` path, so drivers can call this
+        unconditionally."""
+        terms = list(terms)
+        if not is_packed(getattr(ctx, "store", None)):
+            return self.verify_counts(ctx, batch, terms)
+        batch = np.asarray(batch)
+        pos = ctx.positions[batch]
+        rois_q, lvs, uvs = spec_arrays(
+            [(ctx.resolve_rois(t.roi, pos), t.lv, t.uv) for t in terms])
+        decided, lb = chi_verdicts(terms, batch, bounds_of)
+        counts = self._fused_verify_batch(ctx, batch, pos, rois_q, lvs, uvs,
+                                          decided, lb)
+        return {t: np.asarray(counts[i], np.float64)
+                for i, t in enumerate(terms)}
+
+    def _fused_verify_batch(self, ctx, batch, pos, rois_q, lvs, uvs,
+                            decided, lb) -> np.ndarray:
+        """Physical megakernel dispatch: packed batch rows + assembled
+        descriptors/verdicts → (Q, B) int32 exact counts."""
         raise NotImplementedError
 
     def fused_counts(self, store, positions: np.ndarray,
@@ -206,17 +270,28 @@ class HostBackend(ExecBackend):
         s = gctx.groups.shape[1]
         flat_idx = (gidx[:, None] * s + np.arange(s)[None, :]).reshape(-1)
         masks = gctx._ctx.masks_for(flat_idx)
-        masks = masks.reshape(len(gidx), s, gctx.cfg.height, gctx.cfg.width)
+        # row shape is (H, W) float or (H, words) packed — keep it as-is
+        masks = masks.reshape((len(gidx), s) + masks.shape[1:])
         rois = gctx.resolve_group_rois(node.roi, gidx)
         # fused threshold+agg+count → Pallas mask_agg kernel on TPU
-        inter, union = kops.mask_agg_counts(
-            jnp.asarray(masks), jnp.asarray(rois),
-            jnp.asarray(node.thresh, masks.dtype))
+        if is_packed(gctx._ctx.store):
+            inter, union = kops.mask_agg_counts_packed(
+                jnp.asarray(masks), jnp.asarray(rois),
+                jnp.asarray(node.thresh, jnp.float32))
+        else:
+            inter, union = kops.mask_agg_counts(
+                jnp.asarray(masks), jnp.asarray(rois),
+                jnp.asarray(node.thresh, masks.dtype))
         counts = inter if node.agg == "intersect" else union
         return np.asarray(counts, np.float64)
 
     def fused_counts(self, store, positions, specs):
         masks = store.load(positions)
+        if is_packed(store):
+            rois_q, lvs, uvs = spec_arrays(specs)
+            return np.asarray(kops.cp_count_multi_packed(
+                jnp.asarray(masks), jnp.asarray(rois_q),
+                jnp.asarray(lvs), jnp.asarray(uvs)))
         rois_q, lvs, uvs = spec_arrays(specs, masks.dtype)
         return np.asarray(kops.cp_count_multi(
             jnp.asarray(masks), jnp.asarray(rois_q),
@@ -230,14 +305,25 @@ class HostBackend(ExecBackend):
         loaded = store.load(upos)
         a = jnp.asarray(loaded[np.searchsorted(upos, pos_a)])
         b = jnp.asarray(loaded[np.searchsorted(upos, pos_b)])
+        packed = is_packed(store)
+        kernel = kops.pair_counts_packed if packed else kops.pair_counts
+        tdt = jnp.float32 if packed else a.dtype
         out = np.empty((len(specs), 3, len(pos_a)), np.int64)
         for qi, (rois, ta, tb) in enumerate(specs):
-            trio = kops.pair_counts(a, b, jnp.asarray(rois, jnp.int32),
-                                    jnp.asarray(ta, a.dtype),
-                                    jnp.asarray(tb, a.dtype))
+            trio = kernel(a, b, jnp.asarray(rois, jnp.int32),
+                          jnp.asarray(ta, tdt), jnp.asarray(tb, tdt))
             for row, counts in enumerate(trio):
                 out[qi, row] = np.asarray(counts)
         return out
+
+    def _fused_verify_batch(self, ctx, batch, pos, rois_q, lvs, uvs,
+                            decided, lb):
+        # masks_for meters the load (in packed bytes) and shares rows with
+        # any other term touching the same candidates.
+        masks = ctx.masks_for(batch)
+        return np.asarray(kops.fused_bounds_verify(
+            jnp.asarray(masks), jnp.asarray(rois_q), jnp.asarray(lvs),
+            jnp.asarray(uvs), jnp.asarray(decided), jnp.asarray(lb)))
 
 
 # ---------------------------------------------------------------------------
@@ -273,6 +359,28 @@ def _device_group_counts(masks, flat_pos, rois, thresh, s):
     n = flat_pos.shape[0] // s
     grp = grp.reshape(n, s, masks.shape[1], masks.shape[2])
     return kops.mask_agg_counts(grp, rois, thresh)
+
+
+@jax.jit
+def _device_multi_counts_packed(packed, pos, rois_q, lvs, uvs):
+    """Packed-tier sibling of :func:`_device_multi_counts`."""
+    return kops.cp_count_multi_packed(packed[pos], rois_q, lvs, uvs)
+
+
+@functools.partial(jax.jit, static_argnames=("s",))
+def _device_group_counts_packed(packed, flat_pos, rois, thresh, s):
+    grp = packed[flat_pos]
+    n = flat_pos.shape[0] // s
+    grp = grp.reshape(n, s, packed.shape[1], packed.shape[2])
+    return kops.mask_agg_counts_packed(grp, rois, thresh)
+
+
+@jax.jit
+def _device_fused_verify(packed, pos, rois_q, lvs, uvs, decided, lb):
+    """Gather a verification batch from the resident packed words and run
+    the bounds+verify megakernel — one launch for the whole batch."""
+    return kops.fused_bounds_verify(packed[pos], rois_q, lvs, uvs,
+                                    decided, lb)
 
 
 class _KthValueMixin:
@@ -321,6 +429,7 @@ class DeviceBackend(_KthValueMixin, ExecBackend):
     def __init__(self, store):
         self.store = store
         self.cfg = store.cfg
+        self._packed = is_packed(store)   # resident array is uint32 words
         self._masks = store.device_masks()
         self._tables = store.chi_table
         self._epoch = getattr(store, "epoch", 0)
@@ -356,11 +465,20 @@ class DeviceBackend(_KthValueMixin, ExecBackend):
         pos = ctx.positions[batch]
         rois_q, lvs, uvs = spec_arrays(
             [(ctx.resolve_rois(t.roi, pos), t.lv, t.uv) for t in terms])
-        counts = np.asarray(_device_multi_counts(
+        multi = (_device_multi_counts_packed if self._packed
+                 else _device_multi_counts)
+        counts = np.asarray(multi(
             self._masks, jnp.asarray(pos), jnp.asarray(rois_q),
             jnp.asarray(lvs), jnp.asarray(uvs)))
         return {t: counts[i].astype(np.float64)
                 for i, t in enumerate(terms)}
+
+    def _fused_verify_batch(self, ctx, batch, pos, rois_q, lvs, uvs,
+                            decided, lb):
+        return np.asarray(_device_fused_verify(
+            self._masks, jnp.asarray(np.asarray(pos)), jnp.asarray(rois_q),
+            jnp.asarray(lvs), jnp.asarray(uvs), jnp.asarray(decided),
+            jnp.asarray(lb)))
 
     def topk_candidates(self, lb, ub, k, desc, definite, possible):
         if k <= 0 or int(np.count_nonzero(definite)) < k:
@@ -376,15 +494,22 @@ class DeviceBackend(_KthValueMixin, ExecBackend):
         s = gctx.groups.shape[1]
         flat = gctx.groups[gidx].reshape(-1)
         rois = gctx.resolve_group_rois(node.roi, gidx)
-        inter, union = _device_group_counts(
-            self._masks, jnp.asarray(flat), jnp.asarray(rois, jnp.int32),
-            jnp.asarray(node.thresh, self._masks.dtype), s=int(s))
+        if self._packed:
+            inter, union = _device_group_counts_packed(
+                self._masks, jnp.asarray(flat), jnp.asarray(rois, jnp.int32),
+                jnp.asarray(node.thresh, jnp.float32), s=int(s))
+        else:
+            inter, union = _device_group_counts(
+                self._masks, jnp.asarray(flat), jnp.asarray(rois, jnp.int32),
+                jnp.asarray(node.thresh, self._masks.dtype), s=int(s))
         counts = inter if node.agg == "intersect" else union
         return np.asarray(counts, np.float64)
 
     def fused_counts(self, store, positions, specs):
         rois_q, lvs, uvs = spec_arrays(specs)
-        return np.asarray(_device_multi_counts(
+        multi = (_device_multi_counts_packed if self._packed
+                 else _device_multi_counts)
+        return np.asarray(multi(
             self._masks, jnp.asarray(np.asarray(positions)),
             jnp.asarray(rois_q), jnp.asarray(lvs), jnp.asarray(uvs)))
 
@@ -394,11 +519,13 @@ class DeviceBackend(_KthValueMixin, ExecBackend):
         # batch — zero metered bytes, 2 gathers regardless of Q.
         a = self._masks[jnp.asarray(np.asarray(pos_a))]
         b = self._masks[jnp.asarray(np.asarray(pos_b))]
+        kernel = kops.pair_counts_packed if self._packed else kops.pair_counts
+        tdt = jnp.float32 if self._packed else a.dtype
         out = np.empty((len(specs), 3, len(pos_a)), np.int64)
         for qi, (rois, ta, tb) in enumerate(specs):
-            trio = kops.pair_counts(
+            trio = kernel(
                 a, b, jnp.asarray(np.asarray(rois), jnp.int32),
-                jnp.asarray(ta, a.dtype), jnp.asarray(tb, a.dtype))
+                jnp.asarray(ta, tdt), jnp.asarray(tb, tdt))
             for row, counts in enumerate(trio):
                 out[qi, row] = np.asarray(counts)
         return out
@@ -431,10 +558,22 @@ class MeshBackend(_KthValueMixin, ExecBackend):
         self._rb = jnp.asarray(self.cfg.row_bounds, jnp.int32)
         self._cb = jnp.asarray(self.cfg.col_bounds, jnp.int32)
         self._bounds_step = make_chi_bounds_step(mesh)
-        self._verify_step = make_verify_step(mesh)
-        self._agg_step = make_mask_agg_step(mesh)
-        self._multi_step = make_cp_multi_step(mesh)
-        self._pair_step = make_pair_counts_step(mesh)
+        self._packed = is_packed(store)
+        # Packed steps share the float steps' call signatures and shardings
+        # (words axis for pixel-column axis), so every call site below is
+        # representation-agnostic once the right step is pinned here.
+        if self._packed:
+            self._verify_step = make_verify_packed_step(mesh)
+            self._agg_step = make_mask_agg_packed_step(mesh)
+            self._multi_step = make_cp_multi_packed_step(mesh)
+            self._pair_step = make_pair_counts_packed_step(mesh)
+            self._fused_verify_step = make_fused_verify_step(mesh)
+        else:
+            self._verify_step = make_verify_step(mesh)
+            self._agg_step = make_mask_agg_step(mesh)
+            self._multi_step = make_cp_multi_step(mesh)
+            self._pair_step = make_pair_counts_step(mesh)
+            self._fused_verify_step = None
         self._select_steps: dict = {}
 
     def sync(self):
@@ -494,6 +633,19 @@ class MeshBackend(_KthValueMixin, ExecBackend):
         return {t: counts[i, :n].astype(np.float64)
                 for i, t in enumerate(terms)}
 
+    def _fused_verify_batch(self, ctx, batch, pos, rois_q, lvs, uvs,
+                            decided, lb):
+        masks_p, n = self._pad(self._masks[pos])
+        pad = len(masks_p) - n
+        if pad:
+            # padded rows: empty ROI (zero area) + undecided → count 0
+            rois_q = np.pad(rois_q, ((0, 0), (0, pad), (0, 0)))
+            decided = np.pad(decided, ((0, 0), (0, pad)))
+            lb = np.pad(lb, ((0, 0), (0, pad)))
+        counts = self._fused_verify_step(masks_p, rois_q, lvs, uvs,
+                                         decided, lb)
+        return np.asarray(counts)[:, :n]
+
     def topk_candidates(self, lb, ub, k, desc, definite, possible):
         if k <= 0 or int(np.count_nonzero(definite)) < k:
             return possible.copy()
@@ -512,12 +664,14 @@ class MeshBackend(_KthValueMixin, ExecBackend):
         gidx = np.asarray(gidx)
         s = gctx.groups.shape[1]
         grp = self._masks[gctx.groups[gidx].reshape(-1)]
-        grp = grp.reshape(len(gidx), s, self.cfg.height, self.cfg.width)
+        # row shape is (H, W) float or (H, words) packed
+        grp = grp.reshape((len(gidx), s) + self._masks.shape[1:])
         rois = gctx.resolve_group_rois(node.roi, gidx).astype(np.int32)
         grp_p, n = self._pad(grp)
         rois_p, _ = self._pad(rois)
+        tdt = jnp.float32 if self._packed else grp.dtype
         inter, union = self._agg_step(grp_p, rois_p,
-                                      jnp.asarray(node.thresh, grp.dtype))
+                                      jnp.asarray(node.thresh, tdt))
         counts = inter if node.agg == "intersect" else union
         return np.asarray(counts)[:n].astype(np.float64)
 
@@ -587,4 +741,5 @@ def get_backend(store, backend=None) -> ExecBackend:
 
 
 __all__ = ["ExecBackend", "HostBackend", "DeviceBackend", "MeshBackend",
-           "F32_MAX", "get_backend", "host_backend", "spec_arrays"]
+           "F32_MAX", "chi_verdicts", "get_backend", "host_backend",
+           "is_packed", "spec_arrays"]

@@ -367,6 +367,123 @@ def make_pair_counts_step(mesh: Mesh):
     )
 
 
+# -- bitpacked binary-mask tier (DESIGN.md §12) -----------------------------
+# Packed variants of the verification steps: identical shardings (the word
+# axis replaces the pixel-column axis, rank for rank), kernel dispatch
+# swapped for the popcount family.  Pair/agg thresholds are float32 — the
+# packed wrappers derive integer flags from them; the uint32 words never
+# meet a float lane.
+
+
+def make_verify_packed_step(mesh: Mesh):
+    """``make_verify_step`` over packed words.
+
+    Signature: (packed (V,H,words) uint32, rois (V,4), lv (), uv ())
+      → counts (V,) int32.
+    """
+    axes = db_axes(mesh)
+
+    def step(packed, rois, lv, uv):
+        return kops.cp_count_packed(packed, rois, lv, uv)
+
+    return jax.jit(
+        step,
+        in_shardings=(NamedSharding(mesh, P(axes, None, None)),
+                      NamedSharding(mesh, P(axes, None)),
+                      replicated(mesh), replicated(mesh)),
+        out_shardings=NamedSharding(mesh, P(axes)),
+    )
+
+
+def make_cp_multi_packed_step(mesh: Mesh):
+    """``make_cp_multi_step`` over packed words.
+
+    Signature: (packed (B,H,words), rois (Q,B,4), lvs (Q,), uvs (Q,))
+      → counts (Q,B) int32.
+    """
+    axes = db_axes(mesh)
+
+    def step(packed, rois, lvs, uvs):
+        return kops.cp_count_multi_packed(packed, rois, lvs, uvs)
+
+    return jax.jit(
+        step,
+        in_shardings=(NamedSharding(mesh, P(axes, None, None)),
+                      NamedSharding(mesh, P(None, axes, None)),
+                      replicated(mesh), replicated(mesh)),
+        out_shardings=NamedSharding(mesh, P(None, axes)),
+    )
+
+
+def make_mask_agg_packed_step(mesh: Mesh):
+    """``make_mask_agg_step`` over packed words.
+
+    Signature: (group_packed (G,S,H,words), rois (G,4), thresh () f32)
+      → (inter (G,), union (G,)) int32.
+    """
+    axes = db_axes(mesh)
+
+    def step(group_packed, rois, thresh):
+        return kops.mask_agg_counts_packed(group_packed, rois, thresh)
+
+    row = NamedSharding(mesh, P(axes))
+    return jax.jit(
+        step,
+        in_shardings=(NamedSharding(mesh, P(axes, None, None, None)),
+                      NamedSharding(mesh, P(axes, None)), replicated(mesh)),
+        out_shardings=(row, row),
+    )
+
+
+def make_pair_counts_packed_step(mesh: Mesh):
+    """``make_pair_counts_step`` over packed words.
+
+    Signature: (packed_a (B,H,words), packed_b (B,H,words), rois (B,4),
+                ta () f32, tb () f32)
+      → (inter (B,), union (B,), diff (B,)) int32.
+    """
+    axes = db_axes(mesh)
+
+    def step(packed_a, packed_b, rois, ta, tb):
+        return kops.pair_counts_packed(packed_a, packed_b, rois, ta, tb)
+
+    row = NamedSharding(mesh, P(axes))
+    rep = replicated(mesh)
+    return jax.jit(
+        step,
+        in_shardings=(NamedSharding(mesh, P(axes, None, None)),
+                      NamedSharding(mesh, P(axes, None, None)),
+                      NamedSharding(mesh, P(axes, None)), rep, rep),
+        out_shardings=(row, row, row),
+    )
+
+
+def make_fused_verify_step(mesh: Mesh):
+    """The bounds+verify megakernel on the mesh: batch rows shard over all
+    devices, the Q descriptor axis (rois/decided/lb) shards with them on
+    the batch dimension, and every shard answers its rows collective-free
+    in one launch.
+
+    Signature: (packed (B,H,words), rois (Q,B,4), lvs (Q,), uvs (Q,),
+                decided (Q,B) int32, lb (Q,B) int32)
+      → counts (Q,B) int32.
+    """
+    axes = db_axes(mesh)
+
+    def step(packed, rois, lvs, uvs, decided, lb):
+        return kops.fused_bounds_verify(packed, rois, lvs, uvs, decided, lb)
+
+    rep = replicated(mesh)
+    qb = NamedSharding(mesh, P(None, axes))
+    return jax.jit(
+        step,
+        in_shardings=(NamedSharding(mesh, P(axes, None, None)),
+                      NamedSharding(mesh, P(None, axes, None)),
+                      rep, rep, qb, qb),
+        out_shardings=qb,
+    )
+
+
 def make_iou_agg_step(mesh: Mesh):
     """Fused group IoU: masks (Ngroups, n_types, H, W) → IoU scores.
 

@@ -303,6 +303,14 @@ class _VerifyRun:
         if not isinstance(self.ctx, MaskEvalContext):
             return None
         if terms and all(isinstance(t, CP) for t in terms):
+            if getattr(self.store, "packed", False):
+                # Packed tier: the bounds+verify megakernel answers every
+                # term of the batch in ONE launch, passing CHI-decided
+                # entries through from the run's memoized bounds (a term
+                # whose expression-level bounds were never memoized is just
+                # treated as undecided — no extra bounds pass).
+                return self.backend.fused_verify_counts(
+                    self.ctx, batch, terms, self._bounds_memo.get)
             return self.backend.verify_counts(self.ctx, batch, terms)
         return None
 

@@ -621,10 +621,18 @@ class MaskEvalContext:
         buf, heights = self.store.load_rows(self.positions[idx], spans)
         local = np.stack([np.zeros(len(idx), np.int64), rois[:, 1],
                           heights.astype(np.int64), rois[:, 3]], axis=1)
-        counts = kops.cp_count(jnp.asarray(buf),
-                               jnp.asarray(local, jnp.int32),
-                               jnp.asarray(node.lv, buf.dtype),
-                               jnp.asarray(min(node.uv, 3.4e38), buf.dtype))
+        if getattr(self.store, "packed", False):
+            # buf rows are uint32 words; column coords are unchanged (the
+            # packed layout is per-row, so a row span packs identically).
+            counts = kops.cp_count_packed(
+                jnp.asarray(buf), jnp.asarray(local, jnp.int32),
+                jnp.asarray(node.lv, jnp.float32),
+                jnp.asarray(min(node.uv, 3.4e38), jnp.float32))
+        else:
+            counts = kops.cp_count(
+                jnp.asarray(buf), jnp.asarray(local, jnp.int32),
+                jnp.asarray(node.lv, buf.dtype),
+                jnp.asarray(min(node.uv, 3.4e38), buf.dtype))
         return np.asarray(counts, np.float64)
 
     def _eval_tree(self, node: Node, idx: np.ndarray, cp_eval) -> np.ndarray:
@@ -653,9 +661,16 @@ class MaskEvalContext:
         rois = _as_rois(node.roi, self.positions[idx], self.provided_rois,
                         self.cfg)
         # verification hot path → Pallas cp_count on TPU, jnp ref on CPU
-        counts = kops.cp_count(jnp.asarray(masks), jnp.asarray(rois),
-                               jnp.asarray(node.lv, masks.dtype),
-                               jnp.asarray(min(node.uv, 3.4e38), masks.dtype))
+        if getattr(self.store, "packed", False):
+            counts = kops.cp_count_packed(
+                jnp.asarray(masks), jnp.asarray(rois),
+                jnp.asarray(node.lv, jnp.float32),
+                jnp.asarray(min(node.uv, 3.4e38), jnp.float32))
+        else:
+            counts = kops.cp_count(
+                jnp.asarray(masks), jnp.asarray(rois),
+                jnp.asarray(node.lv, masks.dtype),
+                jnp.asarray(min(node.uv, 3.4e38), masks.dtype))
         return np.asarray(counts, np.float64)
 
     def _exact_node(self, node: Node, idx: np.ndarray) -> np.ndarray:

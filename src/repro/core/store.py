@@ -46,6 +46,7 @@ from typing import Sequence
 import jax.numpy as jnp
 import numpy as np
 
+from . import packing
 from .chi import CHIConfig, build_chi_delta, build_chi_np
 
 # Paper's EBS gp3 provisioning (§4): 125 MiB/s, 3000 IOPS.
@@ -165,16 +166,24 @@ def _select(meta: np.ndarray, conds: dict) -> np.ndarray:
 
 
 def _load_row_spans(cfg: CHIConfig, io: IOStats, meta: np.ndarray, masks,
-                    path_of, positions: np.ndarray, spans: np.ndarray):
+                    path_of, positions: np.ndarray, spans: np.ndarray,
+                    row_width: int | None = None, dtype=np.float32):
     """Shared partial-row load loop (live store + epoch-pinned snapshot):
     read only each mask's ROI row span — from the resident array when one
     exists, else by npy memmap slice — metering rows read plus a 4 KiB
-    header/page floor per file under the EBS model's granularity."""
+    header/page floor per file under the EBS model's granularity.
+
+    ``row_width``/``dtype`` describe the stored representation of one mask
+    row (``cfg.width`` float32 on the float tier, ``words_for(width)``
+    uint32 on the packed tier) so metered bytes match what the tier
+    actually moves."""
     positions = np.asarray(positions, dtype=np.int64)
     spans = np.asarray(spans, dtype=np.int64)
     heights = np.maximum(spans[:, 1] - spans[:, 0], 0)
     max_span = max(int(heights.max()) if len(heights) else 0, 1)
-    buf = np.zeros((len(positions), max_span, cfg.width), np.float32)
+    if row_width is None:
+        row_width = cfg.width
+    buf = np.zeros((len(positions), max_span, row_width), dtype)
     t0 = time.perf_counter()
     nbytes = 0
     for i, p in enumerate(positions):
@@ -200,13 +209,19 @@ class MaskStore:
     def __init__(self, cfg: CHIConfig, meta: np.ndarray, *, tier: str,
                  root: str | None = None, masks: np.ndarray | None = None,
                  chi_table: np.ndarray | None = None,
-                 chi_chunks: list | None = None, epoch: int = 0):
+                 chi_chunks: list | None = None, epoch: int = 0,
+                 packed: bool = False):
         if meta.dtype != MASK_META_DTYPE:
             raise ValueError("meta must use MASK_META_DTYPE")
         self.cfg = cfg
         self.meta = meta
         self.tier = tier
         self.root = root
+        # Bitpacked binary tier (DESIGN.md §12): mask rows live as
+        # little-endian uint32 words, 1 bit/pixel.  `masks` (and every
+        # load/resident/device surface) then carries (…, H, words) uint32.
+        self.packed = bool(packed)
+        self.words = packing.words_for(cfg.width)
         self._masks = masks
         # Spare-capacity buffer behind self._masks (memory tier): appends
         # write into the tail so existing epoch views never move.
@@ -240,6 +255,11 @@ class MaskStore:
         elif chi_table is not None:
             self._chi_chunks = [np.asarray(chi_table, np.int32)]
         elif masks is not None:
+            if self.packed:
+                # CHI is built from pixel values; packed constructors
+                # (create_memory/create_disk) index the float input before
+                # packing and pass the table in.
+                raise ValueError("packed stores need a prebuilt CHI table")
             self._chi_chunks = [build_chi_np(np.asarray(masks), cfg)]
         else:
             self._chi_chunks = None
@@ -251,24 +271,40 @@ class MaskStore:
 
     @classmethod
     def create_memory(cls, masks: np.ndarray, meta: np.ndarray, cfg: CHIConfig,
-                      chi_table: np.ndarray | None = None) -> "MaskStore":
-        return cls(cfg, meta, tier="memory", masks=np.asarray(masks),
-                   chi_table=chi_table)
+                      chi_table: np.ndarray | None = None,
+                      packed: bool = False) -> "MaskStore":
+        """``packed=True`` declares the mask type binary at ingest: values
+        are validated to be exactly {0, 1}, indexed from the float input,
+        then stored 1 bit/pixel (DESIGN.md §12)."""
+        masks = np.asarray(masks)
+        if packed:
+            packing.validate_binary(masks)
+            if chi_table is None:
+                chi_table = build_chi_np(np.asarray(masks, np.float32), cfg)
+            masks = packing.pack_masks(masks)
+        return cls(cfg, meta, tier="memory", masks=masks,
+                   chi_table=chi_table, packed=packed)
 
     @classmethod
     def create_disk(cls, root: str, masks: np.ndarray, meta: np.ndarray,
-                    cfg: CHIConfig, chi_table: np.ndarray | None = None
-                    ) -> "MaskStore":
-        """Ingest: write one .npy per mask + persist CHI and metadata."""
+                    cfg: CHIConfig, chi_table: np.ndarray | None = None,
+                    packed: bool = False) -> "MaskStore":
+        """Ingest: write one .npy per mask + persist CHI and metadata.
+        With ``packed=True`` the per-mask files hold uint32 words (the CHI
+        is still built from the float input before packing)."""
         os.makedirs(os.path.join(root, "masks"), exist_ok=True)
         masks = np.asarray(masks, dtype=np.float32)
-        for row, m in zip(meta, masks):
-            np.save(os.path.join(root, "masks", f"{int(row['mask_id'])}.npy"), m)
         if chi_table is None:
             chi_table = build_chi_np(masks, cfg)
+        if packed:
+            packing.validate_binary(masks)
+            masks = packing.pack_masks(masks)
+        for row, m in zip(meta, masks):
+            np.save(os.path.join(root, "masks", f"{int(row['mask_id'])}.npy"), m)
         np.save(os.path.join(root, "chi.npy"), np.asarray(chi_table))
         np.save(os.path.join(root, "meta.npy"), meta)
-        store = cls(cfg, meta, tier="disk", root=root, chi_table=chi_table)
+        store = cls(cfg, meta, tier="disk", root=root, chi_table=chi_table,
+                    packed=packed)
         store._chunk_files = ["chi.npy"]
         store._write_config()
         return store
@@ -285,7 +321,8 @@ class MaskStore:
         chunk_files = raw.get("chi_chunks", ["chi.npy"])
         chunks = [np.load(os.path.join(root, f)) for f in chunk_files]
         store = cls(cfg, meta, tier="disk", root=root, chi_chunks=chunks,
-                    epoch=raw.get("epoch", 0))
+                    epoch=raw.get("epoch", 0),
+                    packed=raw.get("packed", False))
         store._chunk_files = list(chunk_files)
         return store
 
@@ -299,6 +336,7 @@ class MaskStore:
                 else list(cfg.thresholds),
                 "epoch": self.epoch,
                 "chi_chunks": self._chunk_files,
+                "packed": self.packed,
             }, f)
 
     def _mask_path(self, mask_id: int) -> str:
@@ -308,6 +346,24 @@ class MaskStore:
 
     def __len__(self) -> int:
         return len(self.meta)
+
+    @property
+    def row_shape(self) -> tuple:
+        """Stored shape of one mask: (H, W) float or (H, words) packed."""
+        if self.packed:
+            return (self.cfg.height, self.words)
+        return (self.cfg.height, self.cfg.width)
+
+    @property
+    def row_dtype(self):
+        return np.uint32 if self.packed else np.float32
+
+    @property
+    def row_nbytes(self) -> int:
+        """Bytes one stored mask actually occupies — what the shared-load
+        cache budget and ``bytes_saved`` accounting are denominated in."""
+        h, w = self.row_shape
+        return h * w * np.dtype(self.row_dtype).itemsize
 
     @property
     def chi_table(self):
@@ -470,23 +526,26 @@ class MaskStore:
                 np.isin(new_ids, self.meta["mask_id"]).any():
             raise ValueError("append mask_ids must be unique and not "
                              "already present (use update to replace)")
-        chunk = build_chi_delta(masks, self.cfg)
+        if self.packed:
+            packing.validate_binary(masks)
+        chunk = build_chi_delta(masks, self.cfg)    # CHI from pixel values
+        stored = packing.pack_masks(masks) if self.packed else masks
         # mask bytes
         if self.tier == "memory":
-            self._append_memory_rows(masks)
+            self._append_memory_rows(stored)
         else:
-            for row, m in zip(meta, masks):
+            for row, m in zip(meta, stored):
                 np.save(self._mask_path(row["mask_id"]), m)
         # resident / device mirrors: extend incrementally when materialized
         if self._resident is not None:
             if self.tier == "memory":
                 self._resident = None        # re-derived as a cheap view
             else:
-                self._resident = np.concatenate([self._resident, masks])
+                self._resident = np.concatenate([self._resident, stored])
         if self._device_masks is not None:
             self._device_masks = jnp.concatenate(
                 [self._device_masks,
-                 jnp.asarray(masks, self._device_masks.dtype)])
+                 jnp.asarray(stored, self._device_masks.dtype)])
         # CHI: new chunk; no existing rows are copied
         self._chi_chunks.append(chunk)
         if self._chi_dev is not None:
@@ -537,7 +596,10 @@ class MaskStore:
                              f"got {masks.shape}")
         if len(positions) == 0:
             return self.epoch
+        if self.packed:
+            packing.validate_binary(masks)
         new_rows = build_chi_delta(masks, self.cfg)
+        stored = packing.pack_masks(masks) if self.packed else masks
         # patch CHI rows inside their owning chunks (copy-on-write per chunk)
         starts, cid = self._chunk_of(positions)
         touched_chunks = np.unique(cid)
@@ -556,20 +618,20 @@ class MaskStore:
         if self.tier == "memory":
             self._masks_buf = self._cow_masks_buf(self._masks)
             self._masks = self._masks_buf[:len(self.meta)]
-            self._masks[positions] = masks.astype(self._masks.dtype,
-                                                  copy=False)
+            self._masks[positions] = stored.astype(self._masks.dtype,
+                                                   copy=False)
             self._resident = None
         else:
-            for mid, m in zip(mask_ids, masks):
+            for mid, m in zip(mask_ids, stored):
                 np.save(self._mask_path(mid), m)
             if self._resident is not None:
                 res = self._resident.copy()
-                res[positions] = masks
+                res[positions] = stored
                 self._resident = res
         if self._device_masks is not None:
             self._device_masks = self._device_masks.at[
                 jnp.asarray(positions)].set(
-                jnp.asarray(masks, self._device_masks.dtype))
+                jnp.asarray(stored, self._device_masks.dtype))
         # shared-load cache: the bytes at these positions changed
         if self._cache_map is not None:
             rows = self._cache_map[positions]
@@ -681,10 +743,10 @@ class MaskStore:
         updates patch a copy, deletes compact)."""
         if self._resident is None:
             if self._masks is not None:
-                self._resident = np.asarray(self._masks, np.float32)
+                self._resident = np.asarray(self._masks, self.row_dtype)
             else:
-                out = np.empty((len(self.meta), self.cfg.height,
-                                self.cfg.width), np.float32)
+                out = np.empty((len(self.meta),) + self.row_shape,
+                               self.row_dtype)
                 for i in range(len(self.meta)):
                     out[i] = np.load(self._mask_path(self.meta["mask_id"][i]))
                 self._resident = out
@@ -718,8 +780,9 @@ class MaskStore:
             return False
         cap_bytes = DEFAULT_CACHE_BYTES if capacity_bytes is None \
             else int(capacity_bytes)
-        row_bytes = self.cfg.height * self.cfg.width * 4
-        self._cache_cap = max(cap_bytes // row_bytes, 1)
+        # Capacity in *stored-representation* rows: a packed store's rows
+        # are ~32× smaller, so the same byte budget holds ~32× more masks.
+        self._cache_cap = max(cap_bytes // self.row_nbytes, 1)
         self._cache_map = np.full(len(self.meta), -1, dtype=np.int64)
         self._cache_arr = None
         self._cache_pos = np.full(self._cache_cap, -1, dtype=np.int64)
@@ -738,8 +801,8 @@ class MaskStore:
 
     def _read_files(self, mask_ids: np.ndarray) -> np.ndarray:
         """Metered disk-tier read of whole masks by id."""
-        loaded = np.empty((len(mask_ids), self.cfg.height, self.cfg.width),
-                          dtype=np.float32)
+        loaded = np.empty((len(mask_ids),) + self.row_shape,
+                          dtype=self.row_dtype)
         t0 = time.perf_counter()
         nbytes = 0
         for i, mid in enumerate(mask_ids):
@@ -777,8 +840,7 @@ class MaskStore:
             if arr is None or need > len(arr):
                 grow = min(cap, max(need, 2 * (len(arr) if arr is not None
                                                else 128)))
-                grown = np.empty((grow, self.cfg.height, self.cfg.width),
-                                 np.float32)
+                grown = np.empty((grow,) + self.row_shape, self.row_dtype)
                 if arr is not None:
                     grown[:self._cache_used] = arr[:self._cache_used]
                 self._cache_arr = arr = grown
@@ -810,22 +872,20 @@ class MaskStore:
         rows = self._cache_map[positions]
         miss = rows < 0
         n_hit = int(np.count_nonzero(~miss))
-        itemsize = (self._masks.dtype.itemsize if self._masks is not None
-                    else 4)                      # disk tier stores float32
         self.cache_stats.hits += n_hit
-        self.cache_stats.bytes_saved += (
-            n_hit * self.cfg.height * self.cfg.width * itemsize)
+        # bytes_saved in *stored-representation* bytes — exact for float
+        # and packed tiers alike (satellite: packed byte metering).
+        self.cache_stats.bytes_saved += n_hit * self.row_nbytes
         if not np.any(miss):
             return self._cache_arr[rows]
         miss_pos = np.unique(positions[miss])
         self.cache_stats.misses += len(miss_pos)
         loaded = self._read_tier(miss_pos)
-        out = np.empty((len(positions), self.cfg.height, self.cfg.width),
-                       np.float32)
+        out = np.empty((len(positions),) + self.row_shape, self.row_dtype)
         if n_hit:
             out[~miss] = self._cache_arr[rows[~miss]]
         out[miss] = loaded[np.searchsorted(miss_pos, positions[miss])]
-        self._cache_insert(miss_pos, np.asarray(loaded, np.float32))
+        self._cache_insert(miss_pos, np.asarray(loaded, self.row_dtype))
         return out
 
     def load_all(self) -> np.ndarray:
@@ -840,14 +900,17 @@ class MaskStore:
           positions: (n,) row positions.
           spans: (n, 2) [row_start, row_end) per mask.
         Returns:
-          (buf (n, max_span, W) float32 — rows beyond a mask's span are 0,
-           heights (n,) int32).
+          (buf (n, max_span, row_width) in the stored representation —
+           float32 pixel rows, or uint32 words on the packed tier; rows
+           beyond a mask's span are 0 — and heights (n,) int32).
         Metered: bytes = rows actually read (+4 KiB header/IO floor per
         file under the EBS model's page granularity).
         """
         masks = self._masks if self.tier in ("memory", "device") else None
         return _load_row_spans(self.cfg, self.io, self.meta, masks,
-                               self._mask_path, positions, spans)
+                               self._mask_path, positions, spans,
+                               row_width=self.row_shape[1],
+                               dtype=self.row_dtype)
 
 
 class StoreSnapshot:
@@ -875,6 +938,13 @@ class StoreSnapshot:
         self.root = store.root
         self.meta = store.meta
         self._masks = store._masks
+        # Representation is construction-time state — it never changes
+        # across epochs, so the pinned values stay valid forever.
+        self.packed = store.packed
+        self.words = store.words
+        self.row_shape = store.row_shape
+        self.row_dtype = store.row_dtype
+        self.row_nbytes = store.row_nbytes
 
     @property
     def fresh(self) -> bool:
@@ -989,4 +1059,6 @@ class StoreSnapshot:
         if self._masks is None:
             self._require_clean(positions)
         return _load_row_spans(self.cfg, self.io, self.meta, self._masks,
-                               self._store._mask_path, positions, spans)
+                               self._store._mask_path, positions, spans,
+                               row_width=self.row_shape[1],
+                               dtype=self.row_dtype)

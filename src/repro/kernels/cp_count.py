@@ -29,9 +29,15 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 
 
-def _pick_bh(h: int, w: int, budget_bytes: int = 2 * 1024 * 1024) -> int:
-    """Largest row-tile height that divides H and fits the VMEM budget."""
-    max_rows = max(budget_bytes // max(w * 4, 1), 1)
+def _pick_bh(h: int, w: int, itemsize: int = 4,
+             budget_bytes: int = 2 * 1024 * 1024) -> int:
+    """Largest row-tile height that divides H and fits the VMEM budget.
+
+    ``itemsize`` is the element byte width of the streamed tiles (float32
+    masks and packed uint32 words are both 4, but the packed tier's ``w``
+    is a *word* count — callers pass ``arr.dtype.itemsize`` so the budget
+    math holds for any representation)."""
+    max_rows = max(budget_bytes // max(w * max(itemsize, 1), 1), 1)
     bh = min(h, max_rows)
     while h % bh:
         bh -= 1
@@ -60,7 +66,7 @@ def cp_count_pallas(masks: jax.Array, rois: jax.Array, lv, uv, *,
                     interpret: bool = False) -> jax.Array:
     """(B, H, W), (B, 4) → (B,) int32.  See module docstring."""
     b, h, w = masks.shape
-    bh = _pick_bh(h, w)
+    bh = _pick_bh(h, w, masks.dtype.itemsize)
     grid = (b, h // bh)
     lv = jnp.asarray(lv, masks.dtype).reshape(1)
     uv = jnp.asarray(uv, masks.dtype).reshape(1)
@@ -105,7 +111,7 @@ def cp_count_multi_pallas(masks: jax.Array, rois: jax.Array,
     """(B,H,W), (Q,B,4), (Q,), (Q,) → (Q,B) int32 — Q descriptors per tile load."""
     b, h, w = masks.shape
     q = rois.shape[0]
-    bh = _pick_bh(h, w)
+    bh = _pick_bh(h, w, masks.dtype.itemsize)
     grid = (b, h // bh)
     kernel = functools.partial(_cp_multi_kernel, bh=bh, w=w, q=q)
     return pl.pallas_call(

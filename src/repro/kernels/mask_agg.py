@@ -48,7 +48,8 @@ def mask_agg_counts_pallas(group_masks: jax.Array, rois: jax.Array, thresh, *,
                            interpret: bool = False):
     """(N, S, H, W), (N, 4), scalar → (inter (N,), union (N,)) int32."""
     n, s, h, w = group_masks.shape
-    bh = _pick_bh(h, w, budget_bytes=2 * 1024 * 1024 // max(s, 1))
+    bh = _pick_bh(h, w, group_masks.dtype.itemsize,
+                  budget_bytes=2 * 1024 * 1024 // max(s, 1))
     grid = (n, h // bh)
     thresh = jnp.asarray(thresh, group_masks.dtype).reshape(1)
     kernel = functools.partial(_agg_kernel, bh=bh, w=w)

@@ -24,7 +24,7 @@ import jax
 import jax.numpy as jnp
 
 from ..obs.metrics import REGISTRY as _REG
-from . import ref
+from . import popcount, ref
 from .chi_build import chi_cell_hist_pallas
 from .cp_count import cp_count_multi_pallas, cp_count_pallas
 from .mask_agg import mask_agg_counts_pallas
@@ -152,11 +152,89 @@ def pair_counts(masks_a, masks_b, rois, ta, tb, *,
     return ref.pair_counts_ref(masks_a, masks_b, rois, ta, tb)
 
 
+# -- bitpacked binary-mask tier (DESIGN.md §12) -----------------------------
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def cp_count_packed(packed, rois, lv, uv, *, use_pallas: bool | None = None,
+                    interpret: bool = False):
+    """Batched exact CP on packed words — (B,H,words) uint32, (B,4) →
+    (B,) int32, bit-identical to ``cp_count`` on the same binary masks."""
+    pallas, interpret = _dispatch(use_pallas, interpret)
+    if pallas or interpret:
+        return popcount.cp_count_packed_pallas(
+            packed, rois, lv, uv, interpret=interpret or not _on_tpu())
+    return popcount.cp_count_packed_ref(packed, rois, lv, uv)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def cp_count_multi_packed(packed, rois, lvs, uvs, *,
+                          use_pallas: bool | None = None,
+                          interpret: bool = False):
+    """Multi-query CP on packed words — (B,H,words), (Q,B,4) → (Q,B)."""
+    pallas, interpret = _dispatch(use_pallas, interpret)
+    if pallas or interpret:
+        return popcount.cp_count_multi_packed_pallas(
+            packed, rois, lvs, uvs, interpret=interpret or not _on_tpu())
+    return popcount.cp_count_multi_packed_ref(packed, rois, lvs, uvs)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def mask_agg_counts_packed(group_packed, rois, thresh, *,
+                           use_pallas: bool | None = None,
+                           interpret: bool = False):
+    """Fused MASK_AGG counts on packed words — (N,S,H,words), (N,4) →
+    (inter, union) int32."""
+    pallas, interpret = _dispatch(use_pallas, interpret)
+    if pallas or interpret:
+        return popcount.mask_agg_counts_packed_pallas(
+            group_packed, rois, thresh, interpret=interpret or not _on_tpu())
+    return popcount.mask_agg_counts_packed_ref(group_packed, rois, thresh)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def pair_counts_packed(packed_a, packed_b, rois, ta, tb, *,
+                       use_pallas: bool | None = None,
+                       interpret: bool = False):
+    """Fused dual-mask counts on packed words — (B,H,words)×2, (B,4) →
+    (inter, union, diff), each (B,) int32."""
+    pallas, interpret = _dispatch(use_pallas, interpret)
+    if pallas or interpret:
+        return popcount.pair_counts_packed_pallas(
+            packed_a, packed_b, rois, ta, tb,
+            interpret=interpret or not _on_tpu())
+    return popcount.pair_counts_packed_ref(packed_a, packed_b, rois, ta, tb)
+
+
+@functools.partial(jax.jit, static_argnames=("use_pallas", "interpret"))
+def fused_bounds_verify(packed, rois, lvs, uvs, decided, lb, *,
+                        use_pallas: bool | None = None,
+                        interpret: bool = False):
+    """Bounds+verify megakernel — one launch answers every CP descriptor
+    of a verification batch, passing CHI-decided entries through and
+    counting the undecided remainder from the packed words.  (B,H,words),
+    (Q,B,4), (Q,), (Q,), (Q,B), (Q,B) → (Q,B) int32."""
+    pallas, interpret = _dispatch(use_pallas, interpret)
+    if pallas or interpret:
+        return popcount.fused_verify_packed_pallas(
+            packed, rois, lvs, uvs, decided, lb,
+            interpret=interpret or not _on_tpu())
+    return popcount.fused_verify_packed_ref(packed, rois, lvs, uvs,
+                                            decided, lb)
+
+
 cp_count = _instrument("cp_count", cp_count)
 cp_count_multi = _instrument("cp_count_multi", cp_count_multi)
 chi_cell_hist = _instrument("chi_cell_hist", chi_cell_hist)
 mask_agg_counts = _instrument("mask_agg_counts", mask_agg_counts)
 pair_counts = _instrument("pair_counts", pair_counts)
+cp_count_packed = _instrument("cp_count_packed", cp_count_packed)
+cp_count_multi_packed = _instrument("cp_count_multi_packed",
+                                    cp_count_multi_packed)
+mask_agg_counts_packed = _instrument("mask_agg_counts_packed",
+                                     mask_agg_counts_packed)
+pair_counts_packed = _instrument("pair_counts_packed", pair_counts_packed)
+fused_bounds_verify = _instrument("fused_bounds_verify", fused_bounds_verify)
 
 
 def mask_agg_iou(group_masks, rois, thresh, **kw):

@@ -58,7 +58,7 @@ def pair_counts_pallas(masks_a: jax.Array, masks_b: jax.Array,
     swapped (the expression layer normalizes that at parse time).
     """
     b, h, w = masks_a.shape
-    bh = _pick_bh(h, w)
+    bh = _pick_bh(h, w, masks_a.dtype.itemsize)
     grid = (b, h // bh)
     ta = jnp.asarray(ta, masks_a.dtype).reshape(1)
     tb = jnp.asarray(tb, masks_b.dtype).reshape(1)

@@ -163,7 +163,9 @@ def analyzed_tree(plan: LogicalPlan, run, trace_root=None) -> dict:
                      "candidates": int(s.n_candidates),
                      "mask_types": (None if plan.mask_types is None
                                     else list(plan.mask_types)),
-                     "dropped_masks": int(s.n_dropped_masks)})
+                     "dropped_masks": int(s.n_dropped_masks),
+                     "packed": bool(getattr(run.ctx.store, "packed",
+                                            False))})
     root["children"] = children
     return root
 

@@ -31,7 +31,7 @@ from typing import Optional, Sequence
 import numpy as np
 
 from .. import lockcheck
-from ..core.backend import get_backend
+from ..core.backend import get_backend, is_packed
 from ..core.engine import ExecStats
 from ..core.plan import LogicalPlan, compile_plan
 from ..core.queries import Query, parse
@@ -73,6 +73,9 @@ class MaskSearchService:
         # The physical execution layer every plan compiles onto: host
         # (default), the HBM-resident device tier, or the shard_map mesh.
         self.backend = get_backend(store, backend)
+        # Representation tag folded into every planner cache key: a packed
+        # store must never serve (or be served) float-era entries.
+        self._packed = is_packed(store)
         self.default_rois = provided_rois
         # Hash the default ROI array once — per-query hashing of a large
         # per-mask box array would serialize O(n) work behind the lock.
@@ -225,7 +228,8 @@ class MaskSearchService:
                 self.store, plan, provided_rois=rois,
                 backend=self.backend, verify_batch=self.verify_batch,
                 bounds_hook=self.planner.bounds_hook(
-                    plan, roi_sig, self.backend.name, self.store.epoch),
+                    plan, roi_sig, self.backend.name, self.store.epoch,
+                    packed=self._packed),
                 tracer=self.tracer,
                 label=sql if isinstance(sql, str) else plan.signature())
         report["explain"] = mode
@@ -248,7 +252,7 @@ class MaskSearchService:
                             backend=self.backend,
                             bounds_hook=self.planner.bounds_hook(
                                 plan, roi_sig, self.backend.name,
-                                self.store.epoch))
+                                self.store.epoch, packed=self._packed))
 
     def _finish_payload(self, plan: LogicalPlan, run, *,
                         cache_hit: bool = False,
@@ -321,7 +325,8 @@ class MaskSearchService:
 
             cached = self.planner.cached_result(plan, roi_sig,
                                                 self.backend.name,
-                                                self.store.epoch)
+                                                self.store.epoch,
+                                                packed=self._packed)
             if cached is not None:
                 payload = self._cache_hit_payload(cached)
                 self._observe_phases(parse_s, 0.0, None, plan.kind,
@@ -337,7 +342,8 @@ class MaskSearchService:
             if root is not None:
                 payload["query_id"] = root.attrs.get("query_id")
             self.planner.store_result(plan, roi_sig, copy.deepcopy(payload),
-                                      self.backend.name, self.store.epoch)
+                                      self.backend.name, self.store.epoch,
+                                      packed=self._packed)
             self._observe_phases(parse_s, build_s, run, plan.kind,
                                  time.perf_counter() - t_start)
             return payload
@@ -359,7 +365,8 @@ class MaskSearchService:
                 self._counts[plan.kind] = self._counts.get(plan.kind, 0) + 1
                 cached = self.planner.cached_result(plan, roi_sig,
                                                     self.backend.name,
-                                                    self.store.epoch)
+                                                    self.store.epoch,
+                                                    packed=self._packed)
                 if cached is not None:
                     entries.append((plan, None, self._cache_hit_payload(cached)))
                     continue
@@ -380,7 +387,8 @@ class MaskSearchService:
                     self.planner.store_result(plan, roi_sig,
                                               copy.deepcopy(payload),
                                               self.backend.name,
-                                              self.store.epoch)
+                                              self.store.epoch,
+                                              packed=self._packed)
                 results.append(payload)
             return results
 

@@ -61,14 +61,23 @@ def roi_signature(rois: Optional[np.ndarray]) -> str:
     return hashlib.sha1(arr.tobytes() + str(arr.shape).encode()).hexdigest()[:16]
 
 
+def _backend_tag(backend: str, packed: bool) -> str:
+    """Fold the store's mask representation into the backend key component
+    (NOT a trailing component — ``evict_dead_epochs`` parses the epoch off
+    the end).  A store re-ingested packed at the same epoch counter must
+    never serve float-era cache entries, and vice versa."""
+    return f"{backend}+packed" if packed else backend
+
+
 def result_key(plan_or_query, roi_sig: str, backend: str = "host",
-               epoch: int = 0) -> str:
-    return "|".join([_as_plan(plan_or_query).signature(), roi_sig, backend,
-                     f"e{int(epoch)}"])
+               epoch: int = 0, packed: bool = False) -> str:
+    return "|".join([_as_plan(plan_or_query).signature(), roi_sig,
+                     _backend_tag(backend, packed), f"e{int(epoch)}"])
 
 
 def bounds_key(expr: Node, plan_or_query, roi_sig: str,
-               backend: str = "host", epoch: int = 0) -> str:
+               backend: str = "host", epoch: int = 0,
+               packed: bool = False) -> str:
     """One *value expression*'s bounds-cache key: everything that pins the
     candidate set + its CHI pass — NOT op/threshold/k or the rest of the
     plan, so refined and restructured queries hit the same entries.
@@ -76,13 +85,15 @@ def bounds_key(expr: Node, plan_or_query, roi_sig: str,
     identical across backends, but entries stay attributable (and a
     service switching backends never serves stale placement decisions).
     They also carry the store epoch, so a mutation makes every pre-epoch
-    bounds pass unreachable."""
+    bounds pass unreachable, and the packed-representation tag, so a
+    float-era entry never answers for a packed store (or vice versa)."""
     plan = _as_plan(plan_or_query)
     return "|".join([
         expr_signature(expr),
         str(None if plan.mask_types is None
             else tuple(sorted(plan.mask_types))),
-        str(plan.grouped), roi_sig, backend, f"e{int(epoch)}",
+        str(plan.grouped), roi_sig, _backend_tag(backend, packed),
+        f"e{int(epoch)}",
     ])
 
 
@@ -159,22 +170,24 @@ class _PlanBoundsHook:
     that pins the candidate set."""
 
     def __init__(self, cache: LRUCache, plan: LogicalPlan, roi_sig: str,
-                 backend: str = "host", epoch: int = 0):
+                 backend: str = "host", epoch: int = 0,
+                 packed: bool = False):
         self._cache = cache
         self._plan = plan
         self._roi_sig = roi_sig
         self._backend = backend
         self._epoch = epoch
+        self._packed = packed
 
     def get(self, expr: Node):
         return self._cache.get(
             bounds_key(expr, self._plan, self._roi_sig, self._backend,
-                       self._epoch))
+                       self._epoch, self._packed))
 
     def put(self, expr: Node, lb: np.ndarray, ub: np.ndarray) -> None:
         self._cache.put(
             bounds_key(expr, self._plan, self._roi_sig, self._backend,
-                       self._epoch),
+                       self._epoch, self._packed),
             (lb, ub))
 
 
@@ -188,23 +201,27 @@ class Planner:
 
     # -- result tier ------------------------------------------------------
     def cached_result(self, plan_or_query, roi_sig: str,
-                      backend: str = "host", epoch: int = 0):
+                      backend: str = "host", epoch: int = 0,
+                      packed: bool = False):
         return self.result_cache.get(
-            result_key(plan_or_query, roi_sig, backend, epoch))
+            result_key(plan_or_query, roi_sig, backend, epoch, packed))
 
     def store_result(self, plan_or_query, roi_sig: str, payload,
-                     backend: str = "host", epoch: int = 0) -> None:
+                     backend: str = "host", epoch: int = 0,
+                     packed: bool = False) -> None:
         self.result_cache.put(
-            result_key(plan_or_query, roi_sig, backend, epoch), payload)
+            result_key(plan_or_query, roi_sig, backend, epoch, packed),
+            payload)
 
     # -- bounds tier ------------------------------------------------------
     def bounds_hook(self, plan_or_query, roi_sig: str,
-                    backend: str = "host", epoch: int = 0) -> _PlanBoundsHook:
+                    backend: str = "host", epoch: int = 0,
+                    packed: bool = False) -> _PlanBoundsHook:
         """The per-expression bounds cache, scoped to one plan's candidate
         set at one store epoch — hand this to
         :func:`repro.core.plan.compile_plan`."""
         return _PlanBoundsHook(self.bounds_cache, _as_plan(plan_or_query),
-                               roi_sig, backend, epoch)
+                               roi_sig, backend, epoch, packed)
 
     def evict_dead_epochs(self, epoch: int) -> int:
         """Drop every result/bounds entry keyed to an epoch other than

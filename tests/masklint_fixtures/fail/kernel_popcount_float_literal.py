@@ -1,0 +1,9 @@
+"""MUST TRIGGER popcount-no-float: range semantics (float threshold
+compare) routed into the popcount kernel body instead of the wrapper's
+int32 flags."""
+import jax.numpy as jnp
+
+
+def _bad_range_popcount_kernel(f_ref, mask_ref, out_ref):
+    ones = jnp.sum(mask_ref[0] & jnp.uint32(1))
+    out_ref[0] += jnp.where(f_ref[0] > 0.5, ones, 0)   # float literal

@@ -1,0 +1,9 @@
+"""MUST TRIGGER popcount-no-float: unpacking words to float lanes inside
+a popcount kernel body (re-pays the 32x HBM traffic the packed tier
+removes)."""
+import jax.numpy as jnp
+
+
+def _bad_cp_popcount_kernel(roi_ref, lv_ref, mask_ref, out_ref):
+    m = mask_ref[0].astype(jnp.float32)            # unpacked float load
+    out_ref[0] += jnp.sum((m >= lv_ref[0]).astype(jnp.int32))

@@ -1,0 +1,27 @@
+"""NEAR MISS, must stay clean: integer-only popcount kernel body; the
+float range math lives in the wrapper (outside the traced body), which is
+exactly the intended split."""
+import jax.numpy as jnp
+
+
+def _popcount32(x):
+    x = x.astype(jnp.uint32)
+    x = x - ((x >> 1) & jnp.uint32(0x55555555))
+    x = (x & jnp.uint32(0x33333333)) + ((x >> 2) & jnp.uint32(0x33333333))
+    x = (x + (x >> 4)) & jnp.uint32(0x0F0F0F0F)
+    return ((x * jnp.uint32(0x01010101)) >> 24).astype(jnp.int32)
+
+
+def _ok_cp_popcount_kernel(f1_ref, f0_ref, mask_ref, out_ref):
+    ones = jnp.sum(_popcount32(mask_ref[0]))
+    out_ref[0] += f1_ref[0] * ones + f0_ref[0] * (32 - ones)
+
+
+def launch_flags(lv, uv):
+    # float compares are fine OUT HERE: the wrapper collapses [lv, uv) on
+    # binary values to two int32 flags before tracing the kernel.
+    lv = jnp.asarray(lv, jnp.float32)
+    uv = jnp.asarray(uv, jnp.float32)
+    f1 = ((lv <= 1.0) & (1.0 < uv)).astype(jnp.int32)
+    f0 = ((lv <= 0.0) & (0.0 < uv)).astype(jnp.int32)
+    return f1, f0

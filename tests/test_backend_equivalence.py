@@ -318,3 +318,79 @@ def test_mesh_reaches_distributed_steps(db):
         be._verify_step = original
     assert calls, "mesh execution must verify through distributed steps"
     assert dist.make_verify_step is not None
+
+
+# -- bitpacked binary-mask tier (DESIGN.md §12) ------------------------------
+
+
+@pytest.fixture(scope="module")
+def packed_db():
+    """The same binary masks twice: a float store and a packed store.
+    Equality across the pair AND across backends pins the packed tier to
+    the float tier's exact semantics."""
+    rois = object_boxes(B, H, W, seed=5)
+    m, _ = saliency_masks(B, H, W, seed=4, attacked_fraction=0.25, boxes=rois)
+    masks = (m > 0.5).astype(np.float32)
+    meta = np.zeros(B, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(B)
+    meta["image_id"] = np.arange(B) // 2
+    meta["mask_type"] = np.arange(B) % 3 + 1
+    cfg = CHIConfig(grid=4, num_bins=8, height=H, width=W)
+    fstore = MaskStore.create_memory(masks, meta, cfg)
+    pstore = MaskStore.create_memory(masks, meta.copy(), cfg, packed=True)
+    return fstore, pstore, rois
+
+
+def test_packed_plans_equivalent_across_backends_and_to_float(packed_db):
+    fstore, pstore, rois = packed_db
+    rng = np.random.default_rng(14)
+    plans = [LogicalPlan(predicate=_random_pred(rng)) for _ in range(4)]
+    plans += [LogicalPlan(order_by=_random_expr(rng),
+                          k=int(rng.integers(1, B + 2)),
+                          desc=bool(rng.integers(2))) for _ in range(4)]
+    plans += [
+        # binary-meaningful ranges: (0.5, 1.5) selects the set bits
+        LogicalPlan(predicate=Cmp(CP((4, 4, 28, 28), 0.5, 1.5), ">", 40.0),
+                    order_by=BinOp("/", CP("provided", 0.5, 1.5),
+                                   RoiArea("provided")), k=4),
+        LogicalPlan(agg="SUM", agg_expr=CP(None, 0.5, 1.5)),
+        LogicalPlan(agg="MAX", agg_expr=CP("provided", 0.5, 1.5)),
+        LogicalPlan(select="image_id", order_by=AggCP("intersect", 0.5, None),
+                    k=6),
+        LogicalPlan(select="image_id",
+                    order_by=BinOp("/", AggCP("intersect", 0.5, None),
+                                   AggCP("union", 0.5, None)),
+                    k=6, desc=False),
+    ]
+    for i, plan in enumerate(plans):
+        fouts = _run_all(fstore, plan, rois)
+        pouts = _run_all(pstore, plan, rois)
+        # packed host ≡ device ≡ mesh
+        _assert_equivalent(pouts, f"packed{i}")
+        # and the packed pair ≡ the float store (transitively: all six runs)
+        _assert_equivalent({"host": fouts["host"], "device": pouts["host"],
+                            "mesh": pouts["mesh"]}, f"packed-vs-float{i}")
+
+
+def test_packed_mesh_uses_fused_verify_step(packed_db):
+    """The mesh backend's packed verification goes through the fused
+    bounds+verify distributed step — one sharded launch per batch."""
+    _, pstore, rois = packed_db
+    be = get_backend(pstore, "mesh")
+    assert be._packed and be._fused_verify_step is not None
+    calls = []
+    original = be._fused_verify_step
+
+    def spying(*a, **kw):
+        calls.append(1)
+        return original(*a, **kw)
+
+    be._fused_verify_step = spying
+    try:
+        plan = LogicalPlan(order_by=CP((3, 5, 29, 31), 0.5, 1.5), k=5)
+        _, stats = run_plan(pstore, plan, provided_rois=rois, verify_batch=4,
+                            backend="mesh")
+    finally:
+        be._fused_verify_step = original
+    assert stats.n_verified > 0
+    assert len(calls) == stats.n_rounds

@@ -23,6 +23,7 @@ _EXPECTED_RULE = {
     "epoch": "epoch-snapshot",
     "bounds_edge": "bounds-edge",
     "bounds": "bounds-soundness",
+    "kernel_popcount": "popcount-no-float",
     "kernel": "kernel-constraints",
     "stats": "stats-drift",
 }
@@ -92,7 +93,8 @@ def test_cli_explain_and_list():
     names = {line.split()[0] for line in listing.stdout.splitlines()}
     assert {"lock-discipline", "lock-order", "epoch-discipline",
             "epoch-snapshot", "bounds-soundness", "bounds-edge",
-            "kernel-constraints", "stats-drift"} <= names
+            "kernel-constraints", "popcount-no-float",
+            "stats-drift"} <= names
     for rule in sorted(names):
         doc = subprocess.run(
             [sys.executable, "-m", "repro.analysis", "--explain", rule],

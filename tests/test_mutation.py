@@ -481,6 +481,94 @@ def test_lru_cache_concurrent_access():
     assert cache.info.size == len(cache)
 
 
+# ---------------------------------------------------------------------------
+# bitpacked binary-mask tier: mutation + persistence (DESIGN.md §12)
+# ---------------------------------------------------------------------------
+
+
+def _binary_data(n, seed=0, id_base=0):
+    masks, meta = _data(n, seed=seed, id_base=id_base)
+    return (masks > 0.5).astype(np.float32), meta
+
+
+def test_packed_mutation_sequence_matches_float_rebuild():
+    """append/update/delete on a packed store: the chunked CHI always equals
+    a from-scratch float build, the packed words always unpack to the
+    current masks, and queries match a fresh float store bit-for-bit."""
+    from repro.core.packing import unpack_masks
+
+    masks, meta = _binary_data(B)
+    store = MaskStore.create_memory(masks, meta, CFG, packed=True)
+    assert store.packed and store.row_nbytes == H * ((W + 31) // 32) * 4
+    current = masks.copy()
+    ids = list(range(B))
+    next_id = 1000
+    rng = np.random.default_rng(7)
+    for step in range(6):
+        op = rng.integers(3)
+        if op == 0:                                        # append
+            add, ameta = _binary_data(2, seed=50 + step, id_base=next_id)
+            next_id += 2
+            store.append(add, ameta)
+            current = np.concatenate([current, add])
+            ids.extend(ameta["mask_id"])
+        elif op == 1:                                      # update
+            sel = rng.choice(len(ids), size=2, replace=False)
+            new = (rng.random((2, H, W)) < 0.5).astype(np.float32)
+            store.update([ids[i] for i in sel], new)
+            current[sel] = new
+        elif len(ids) > 4:                                 # delete
+            sel = np.sort(rng.choice(len(ids), size=2, replace=False))[::-1]
+            store.delete([ids[i] for i in sel])
+            keep = np.ones(len(ids), bool)
+            keep[sel] = False
+            current = current[keep]
+            ids = [m for i, m in enumerate(ids) if keep[i]]
+        np.testing.assert_array_equal(store.chi_host(),
+                                      build_chi_np(current, CFG))
+        np.testing.assert_array_equal(
+            unpack_masks(store.resident_masks(), W), current)
+        fmeta = np.zeros(len(ids), MASK_META_DTYPE)
+        fmeta["mask_id"] = ids
+        fresh = MaskStore.create_memory(current, fmeta, CFG)
+        plan = LogicalPlan(order_by=CP(None, 0.5, 1.5),
+                           k=min(5, max(len(ids), 1)))
+        (got_ids, got_scores), _ = run_plan(store, plan)
+        (ref_ids, ref_scores), _ = run_plan(fresh, plan)
+        np.testing.assert_array_equal(got_ids, ref_ids)
+        np.testing.assert_array_equal(got_scores, ref_scores)
+    # the binary contract survives mutation: grayscale bytes refuse
+    with pytest.raises(ValueError, match="binary"):
+        store.update([ids[0]], np.full((1, H, W), 0.5, np.float32))
+    with pytest.raises(ValueError, match="binary"):
+        store.append(np.full((1, H, W), 0.25, np.float32),
+                     _binary_data(1, id_base=9000)[1])
+
+
+def test_packed_disk_roundtrip_preserves_flag_and_words(tmp_path):
+    from repro.core.packing import unpack_masks
+
+    masks, meta = _binary_data(10, seed=3)
+    root = str(tmp_path / "pdb")
+    store = MaskStore.create_disk(root, masks, meta, CFG, packed=True)
+    add_masks, add_meta = _binary_data(4, seed=9, id_base=500)
+    store.append(add_masks, add_meta)
+    new = (np.arange(H * W).reshape(H, W) % 3 == 0)[None].astype(np.float32)
+    store.update([1], new)
+    current = np.concatenate([masks, add_masks])
+    current[1] = new[0]
+
+    re = MaskStore.open_disk(root)
+    assert re.packed and re.epoch == 2 and re.cfg == CFG
+    assert re.row_nbytes == store.row_nbytes
+    np.testing.assert_array_equal(unpack_masks(re.load_all(), W), current)
+    np.testing.assert_array_equal(re.chi_host(), build_chi_np(current, CFG))
+    # metered IO is packed bytes: one row load costs row_nbytes, not H*W*4
+    io0 = re.io.bytes_read
+    re.load(np.array([0]))
+    assert re.io.bytes_read - io0 == re.row_nbytes < H * W * 4
+
+
 def test_stale_run_error_surfaces_as_conflict():
     """A filter predicate whose residue needs rewritten disk bytes reports
     StaleRunError (never silently mixes epochs) through run_plan too."""
