@@ -75,6 +75,30 @@ def main():
                   f"bounds cache hits={svc.planner.bounds_cache.info.hits}")
         print("  (one CHI pass served the whole sweep)\n")
 
+        # -- 1b. cost-based conjunction: pyramid ladder + reorder -------------
+        if args.explain:
+            from repro.core import queries
+            from repro.obs.explain import explain_analyze
+            area = 128 * 128
+            conj = ("SELECT mask_id FROM MasksDatabaseView WHERE "
+                    f"CP(mask, full_img, (0.25, 1.0)) > {0.01 * area} AND "
+                    f"CP(mask, full_img, (0.75, 1.0)) > {0.3 * area};")
+            rep = explain_analyze(store, queries.parse(conj).plan)
+            filt = next(c for c in rep["tree"]["children"]
+                        if c["op"] == "Filter")
+            print("== EXPLAIN ANALYZE: conjunctive WHERE through the "
+                  "cost-based optimizer ==")
+            print(f"  conjunct order: {filt['order']} "
+                  f"({'reordered' if filt['reordered'] else 'plan order'}) | "
+                  f"tier ladder: {' -> '.join(map(str, filt['tier_grids']))}")
+            for leaf in filt["leaves"]:
+                print(f"    start_tier={leaf['start_tier']} "
+                      f"est_reject={leaf.get('est_reject', 'n/a')} "
+                      f"actual={leaf.get('actual_reject', 'n/a')} "
+                      f"ladder={leaf.get('ladder', '(skipped)')}")
+            print(f"  index bytes touched: "
+                  f"{rep['stats']['chi_bytes'] * mb:.2f} MB\n")
+
         # -- 2. repeated query: warm result cache -----------------------------
         out = svc.query(sql)
         print(f"== repeat last query: cache_hit={out['cache_hit']}, "

@@ -16,6 +16,10 @@ _KEYED_CALLS = {
     "store_result": 4,     # (plan_or_query, roi_sig, payload, backend, epoch)
 }
 
+# calls whose keys also carry the CHI pyramid tier (keyword-only in the
+# signature, so only the kwarg form exists)
+_TIERED_CALLS = {"bounds_key"}
+
 
 @register
 class EpochDisciplineRule(Rule):
@@ -28,6 +32,11 @@ result_key / bounds_key / cached_result / store_result — passes an epoch
 argument whose expression actually derives from an epoch (store.epoch,
 self._epoch, run.epoch, ...).  Omitting it silently binds the signature
 default (epoch=0); hardcoding a literal pins one epoch forever.
+Since the CHI-pyramid PR, bounds_key additionally carries the tier the
+bounds were computed at: callers must pass ``tier=<variable>``.  Omitting
+it binds tier=0, and hardcoding a literal pins one tier — either way a
+coarse-tier interval (which soundly *contains* the fine one) can be
+served for a refined request, silently widening bounds.
 
 Why it holds: since the mutable-store PR, cache keys end in an `e<epoch>`
 component and Planner.evict_dead_epochs sweeps keys from superseded
@@ -77,6 +86,20 @@ suppress with `# masklint: ignore[epoch-discipline] -- <why>`.
                     f"{fname}(...) epoch argument "
                     f"{ast.unparse(epoch_arg)!r} does not derive from an "
                     f"epoch — thread store.epoch or the pinned run epoch"))
+            if fname in _TIERED_CALLS:
+                tier_arg = next((kw.value for kw in node.keywords
+                                 if kw.arg == "tier"), None)
+                if tier_arg is None:
+                    findings.append(ctx.finding(
+                        self.name, node,
+                        f"{fname}(...) without a tier argument — the "
+                        f"tier=0 default binds and a coarse CHI-pyramid "
+                        f"interval is served for a refined request"))
+                elif isinstance(tier_arg, ast.Constant):
+                    findings.append(ctx.finding(
+                        self.name, node,
+                        f"{fname}(...) hardcodes tier={tier_arg.value!r} — "
+                        f"thread the tier the bounds pass actually ran at"))
         return findings
 
 

@@ -64,10 +64,12 @@ from .distributed import (_bounds_from_corners, device_resolve,
                           make_chi_bounds_step, make_cp_multi_packed_step,
                           make_cp_multi_step, make_fused_verify_step,
                           make_mask_agg_packed_step, make_mask_agg_step,
-                          make_mesh, make_pair_counts_packed_step,
+                          make_mesh, make_pair_cells_step,
+                          make_pair_counts_packed_step,
                           make_pair_counts_step, make_topk_select_step,
                           make_verify_packed_step, make_verify_step,
                           value_ks)
+from .exprs import _threshold_ks, cell_counts_jnp, pair_cell_bounds_jnp
 
 F32_MAX = 3.4e38  # finite stand-in for +inf in float32 kernel compares
 _F32_MAX = F32_MAX
@@ -334,10 +336,27 @@ class HostBackend(ExecBackend):
 @jax.jit
 def _device_cp_bounds(tables, pos, rois, rb, cb, ks):
     """CP-leaf bounds with the candidate gather, corner resolution and
-    8-corner lookup all on device (the filter phase leaving the host)."""
+    8-corner lookup all on device (the filter phase leaving the host).
+    The tier is implicit in the operands — ``device_resolve`` derives the
+    grid from ``rb``'s length — so one compilation serves each tier shape."""
     corners, area = device_resolve(rois, rb, cb)
     return _bounds_from_corners(tables[pos], corners, area,
                                 ks[0], ks[1], ks[2], ks[3])
+
+
+@functools.partial(jax.jit, static_argnames=("stat",))
+def _device_pair_cells(tables, pos_a, pos_b, ks, rois, rb, cb, stat):
+    """Pair-term cell-combine with both role gathers, the per-cell
+    thresholded counts and the cell algebra all on device — the pair
+    filter phase leaving the host like the CP leaf (DESIGN.md §13).
+    ``ks`` holds [ka_in, ka_out, kb_in, kb_out] value-edge indices."""
+    tab_a = tables[pos_a]
+    tab_b = tables[pos_b]
+    lo_a = cell_counts_jnp(tab_a, ks[0])
+    hi_a = cell_counts_jnp(tab_a, ks[1])
+    lo_b = cell_counts_jnp(tab_b, ks[2])
+    hi_b = cell_counts_jnp(tab_b, ks[3])
+    return pair_cell_bounds_jnp(stat, lo_a, hi_a, lo_b, hi_b, rois, rb, cb)
 
 
 @jax.jit
@@ -435,6 +454,7 @@ class DeviceBackend(_KthValueMixin, ExecBackend):
         self._epoch = getattr(store, "epoch", 0)
         self._rb = jnp.asarray(self.cfg.row_bounds, jnp.int32)
         self._cb = jnp.asarray(self.cfg.col_bounds, jnp.int32)
+        self._tier_bnds: dict = {}   # tier grid → (row_bounds, col_bounds)
 
     def sync(self):
         """Re-pin the resident mask/CHI arrays after a store mutation.  The
@@ -449,15 +469,46 @@ class DeviceBackend(_KthValueMixin, ExecBackend):
         _BACKEND_SYNCS.labels(backend=self.name).inc()
 
     def bounds(self, ctx, expr):
+        if hasattr(ctx, "pair_rois"):
+            return ctx.bounds(expr, pair_leaf=self._pair_cells)
         return ctx.bounds(expr, cp_leaf=self._cp_bounds)
+
+    def _tier_bounds(self, g: int):
+        pair = self._tier_bnds.get(g)
+        if pair is None:
+            tcfg = self.cfg.for_grid(g)
+            pair = (jnp.asarray(tcfg.row_bounds, jnp.int32),
+                    jnp.asarray(tcfg.col_bounds, jnp.int32))
+            self._tier_bnds[g] = pair
+        return pair
 
     def _cp_bounds(self, mctx, node):
         rois = mctx.resolve_rois(node.roi, mctx.positions)
-        ks = value_ks(self.cfg, node.lv, node.uv)
+        g = getattr(mctx, "tier", None)
+        if g is None or g == self.cfg.grid:
+            cfg, tables, rb, cb = self.cfg, self._tables, self._rb, self._cb
+        else:
+            # coarse ladder rung: the store's device-resident tier table
+            # (maintained incrementally across mutations) + tier boundaries
+            cfg = self.cfg.for_grid(g)
+            tables = self.store.chi_tier_table(g)
+            rb, cb = self._tier_bounds(g)
+        ks = value_ks(cfg, node.lv, node.uv)
         lb, ub = _device_cp_bounds(
-            self._tables, jnp.asarray(mctx.positions),
-            jnp.asarray(rois, jnp.int32), self._rb, self._cb,
+            tables, jnp.asarray(mctx.positions),
+            jnp.asarray(rois, jnp.int32), rb, cb,
             jnp.asarray(ks))
+        return np.asarray(lb, np.float64), np.asarray(ub, np.float64)
+
+    def _pair_cells(self, pctx, node):
+        rois = pctx.pair_rois(node.roi)
+        ka = _threshold_ks(self.cfg, node.ta)
+        kb = _threshold_ks(self.cfg, node.tb)
+        lb, ub = _device_pair_cells(
+            self._tables, jnp.asarray(pctx.pos_a), jnp.asarray(pctx.pos_b),
+            jnp.asarray(np.array([ka[0], ka[1], kb[0], kb[1]], np.int32)),
+            jnp.asarray(rois, jnp.int32), self._rb, self._cb,
+            stat=node.stat)
         return np.asarray(lb, np.float64), np.asarray(ub, np.float64)
 
     def verify_counts(self, ctx, batch, terms):
@@ -575,6 +626,8 @@ class MeshBackend(_KthValueMixin, ExecBackend):
             self._pair_step = make_pair_counts_step(mesh)
             self._fused_verify_step = None
         self._select_steps: dict = {}
+        self._pair_cells_steps: dict = {}   # pair stat → sharded cells step
+        self._tier_bnds: dict = {}          # tier grid → (row_b, col_b)
 
     def sync(self):
         """Re-pin the host-resident mask/CHI arrays after a store mutation.
@@ -598,16 +651,54 @@ class MeshBackend(_KthValueMixin, ExecBackend):
         return np.concatenate([arr, pad]), n
 
     def bounds(self, ctx, expr):
+        if hasattr(ctx, "pair_rois"):
+            return ctx.bounds(expr, pair_leaf=self._pair_cells)
         return ctx.bounds(expr, cp_leaf=self._cp_bounds)
+
+    def _tier_bounds(self, g: int):
+        pair = self._tier_bnds.get(g)
+        if pair is None:
+            tcfg = self.cfg.for_grid(g)
+            pair = (jnp.asarray(tcfg.row_bounds, jnp.int32),
+                    jnp.asarray(tcfg.col_bounds, jnp.int32))
+            self._tier_bnds[g] = pair
+        return pair
 
     def _cp_bounds(self, mctx, node):
         pos = np.asarray(mctx.positions)
         rois = mctx.resolve_rois(node.roi, pos).astype(np.int32)
-        tab_p, n = self._pad(self._tables_np[pos])
+        g = getattr(mctx, "tier", None)
+        if g is None or g == self.cfg.grid:
+            cfg, tables, rb, cb = self.cfg, self._tables_np, self._rb, self._cb
+        else:
+            # coarse ladder rung: the store's host tier cache (maintained
+            # incrementally across mutations) + the tier's grid boundaries
+            cfg = self.cfg.for_grid(g)
+            tables = self.store.chi_tier_host(g)
+            rb, cb = self._tier_bounds(g)
+        tab_p, n = self._pad(tables[pos])
         rois_p, _ = self._pad(rois)
-        ks = value_ks(self.cfg, node.lv, node.uv)
-        lb, ub = self._bounds_step(tab_p, rois_p, self._rb, self._cb,
+        ks = value_ks(cfg, node.lv, node.uv)
+        lb, ub = self._bounds_step(tab_p, rois_p, rb, cb,
                                    jnp.asarray(ks))
+        return (np.asarray(lb)[:n].astype(np.float64),
+                np.asarray(ub)[:n].astype(np.float64))
+
+    def _pair_cells(self, pctx, node):
+        step = self._pair_cells_steps.get(node.stat)
+        if step is None:
+            step = make_pair_cells_step(self.mesh, node.stat)
+            self._pair_cells_steps[node.stat] = step
+        pos_a = np.asarray(pctx.pos_a)
+        pos_b = np.asarray(pctx.pos_b)
+        rois = np.asarray(pctx.pair_rois(node.roi), np.int32)
+        tab_a_p, n = self._pad(self._tables_np[pos_a])
+        tab_b_p, _ = self._pad(self._tables_np[pos_b])
+        rois_p, _ = self._pad(rois)
+        ka = _threshold_ks(self.cfg, node.ta)
+        kb = _threshold_ks(self.cfg, node.tb)
+        ks = jnp.asarray(np.array([ka[0], ka[1], kb[0], kb[1]], np.int32))
+        lb, ub = step(tab_a_p, tab_b_p, rois_p, ks, self._rb, self._cb)
         return (np.asarray(lb)[:n].astype(np.float64),
                 np.asarray(ub)[:n].astype(np.float64))
 

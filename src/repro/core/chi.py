@@ -89,6 +89,32 @@ class CHIConfig:
     def mask_bytes(self, batch: int) -> int:
         return batch * self.height * self.width * 4
 
+    @property
+    def tier_grids(self) -> tuple[int, ...]:
+        """Pyramid tiers, coarsest first, finest == ``grid`` (DESIGN.md §13).
+
+        Each coarser tier halves the grid while it stays even and >= 4, so
+        every coarse boundary is also a fine boundary (``(i*H)//g`` with
+        ``g | grid`` is a subset of the fine boundary set) and the coarse
+        table is an exact strided subsample of the fine one — no extra
+        persisted state, nesting sound by construction.  A grid that cannot
+        halve (odd, or already 4) is a single-tier pyramid, which disables
+        the refinement ladder entirely.
+        """
+        g, tiers = self.grid, [self.grid]
+        while g % 2 == 0 and g // 2 >= 4:
+            g //= 2
+            tiers.append(g)
+        return tuple(reversed(tiers))
+
+    def for_grid(self, g: int) -> "CHIConfig":
+        """The same index geometry at tier ``g`` (value bins unchanged)."""
+        if g == self.grid:
+            return self
+        if self.grid % g:
+            raise ValueError(f"tier grid {g} does not divide grid {self.grid}")
+        return dataclasses.replace(self, grid=g)
+
 
 # ---------------------------------------------------------------------------
 # Index construction
@@ -181,6 +207,77 @@ def build_chi_np(masks: np.ndarray, cfg: CHIConfig) -> np.ndarray:
     tab = out.cumsum(axis=1).cumsum(axis=2).cumsum(axis=3)
     tab = np.pad(tab, ((0, 0), (1, 0), (1, 0), (1, 0)))
     return tab.astype(np.int32)
+
+
+# ---------------------------------------------------------------------------
+# Hierarchical pyramid tiers (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+
+def tier_slice(table: np.ndarray, grid: int, g: int) -> np.ndarray:
+    """The exact tier-``g`` CHI table, sliced out of the tier-``grid`` one.
+
+    Because ``row_bounds[i] = (i*H)//g`` and ``g | grid``, every tier-``g``
+    boundary equals the fine boundary at index ``i * (grid // g)`` —
+    ``(i*(grid//g)*H)//grid == (i*H)//g`` exactly — so the coarse table is
+    a strided subsample of the fine prefix tensor, not an approximation.
+    Coarse-tier bounds therefore contain fine-tier bounds by construction.
+    """
+    if grid % g:
+        raise ValueError(f"tier grid {g} does not divide grid {grid}")
+    r = grid // g
+    out = table[:, ::r, ::r, :]
+    if isinstance(out, np.ndarray):
+        out = np.ascontiguousarray(out)
+    return out
+
+
+def value_ks4(cfg: CHIConfig, lv: float, uv: float) -> tuple[int, int, int, int]:
+    """The four clipped value-edge indices of :func:`resolve_query` —
+    ``(kl_in, ku_in, kl_out, ku_out)`` — shared with the cost model so the
+    searchsorted-on-edges logic stays in this module."""
+    edges = cfg.edges
+    nb = cfg.num_bins
+    kl_in = int(np.clip(np.searchsorted(edges, lv, side="left"), 0, nb))
+    ku_in = int(np.clip(np.searchsorted(edges, uv, side="right") - 1, 0, nb))
+    kl_out = int(np.clip(np.searchsorted(edges, lv, side="right") - 1, 0, nb))
+    ku_out = int(np.clip(np.searchsorted(edges, uv, side="left"), 0, nb))
+    return kl_in, ku_in, kl_out, ku_out
+
+
+def tier_alignment_fracs(cfg: CHIConfig, g: int, rois: np.ndarray):
+    """Per-ROI (inner, outer) aligned-area fractions at tier ``g``.
+
+    ``inner`` is the area of the largest tier-aligned box inscribed in the
+    ROI and ``outer`` the smallest covering one, both divided by the ROI
+    area — the spatial slack the cost model uses to predict how many
+    candidates a tier can decide (inner == outer == 1 means the tier
+    answers the ROI exactly).  Empty ROIs report (1, 1): they are always
+    decided.  Same boundary math as :func:`resolve_query`, kept here so
+    searchsorted over index geometry stays in this module.
+    """
+    tcfg = cfg.for_grid(g)
+    rb, cb = tcfg.row_bounds, tcfg.col_bounds
+    rois = np.asarray(rois, np.int64)
+    r0, c0, r1, c1 = rois[:, 0], rois[:, 1], rois[:, 2], rois[:, 3]
+    gi = tcfg.grid
+
+    def _spans(bounds, lo, hi):
+        il = np.clip(np.searchsorted(bounds, lo, side="left"), 0, gi)
+        ih = np.clip(np.searchsorted(bounds, hi, side="right") - 1, 0, gi)
+        ol = np.clip(np.searchsorted(bounds, lo, side="right") - 1, 0, gi)
+        oh = np.clip(np.searchsorted(bounds, hi, side="left"), 0, gi)
+        inner = np.maximum(bounds[ih] - bounds[il], 0)
+        outer = np.maximum(bounds[oh] - bounds[ol], 0)
+        return inner, outer
+
+    in_h, out_h = _spans(rb, r0, r1)
+    in_w, out_w = _spans(cb, c0, c1)
+    area = np.maximum(r1 - r0, 0) * np.maximum(c1 - c0, 0)
+    safe = np.maximum(area, 1).astype(np.float64)
+    inner = np.where(area > 0, (in_h * in_w) / safe, 1.0)
+    outer = np.where(area > 0, (out_h * out_w) / safe, 1.0)
+    return inner, outer
 
 
 # ---------------------------------------------------------------------------

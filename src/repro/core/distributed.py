@@ -44,6 +44,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from ..kernels import ops as kops
 from . import chi as chi_lib
 from . import cp as cp_lib
+from .exprs import cell_counts_jnp, pair_cell_bounds_jnp
 
 # shard_map moved out of jax.experimental (and check_rep became check_vma)
 # across the jax versions this repo supports; resolve once here.
@@ -364,6 +365,41 @@ def make_pair_counts_step(mesh: Mesh):
                       NamedSharding(mesh, P(axes, None, None)),
                       NamedSharding(mesh, P(axes, None)), rep, rep),
         out_shardings=(row, row, row),
+    )
+
+
+def make_pair_cells_step(mesh: Mesh, stat: str):
+    """The pair-term *bounds* pass on the mesh (DESIGN.md §13): the
+    cell-decomposed sound combination of both roles' CHI rows
+    (:func:`repro.core.exprs.pair_cell_bounds_jnp`), pair rows sharded
+    over all devices.  Collective-free — each pair's cell math reads only
+    its own two CHI rows — so, like the CP-leaf bounds step, the pair
+    filter phase leaves the host entirely.  Padded rows (zero tables +
+    zero ROIs) yield lb = ub = 0 and are sliced off by the caller.
+
+    Signature: (tables_a (B,G+1,G+1,NB+1), tables_b (B,G+1,G+1,NB+1),
+                rois (B,4), ks (4,) int32 [ka_in, ka_out, kb_in, kb_out],
+                row_bounds (G+1,), col_bounds (G+1,))
+      → (lb (B,), ub (B,)) int32.
+    """
+    axes = db_axes(mesh)
+
+    def step(tables_a, tables_b, rois, ks, row_bounds, col_bounds):
+        lo_a = cell_counts_jnp(tables_a, ks[0])
+        hi_a = cell_counts_jnp(tables_a, ks[1])
+        lo_b = cell_counts_jnp(tables_b, ks[2])
+        hi_b = cell_counts_jnp(tables_b, ks[3])
+        return pair_cell_bounds_jnp(stat, lo_a, hi_a, lo_b, hi_b,
+                                    rois, row_bounds, col_bounds)
+
+    row = NamedSharding(mesh, P(axes))
+    rep = replicated(mesh)
+    return jax.jit(
+        step,
+        in_shardings=(NamedSharding(mesh, P(axes, None, None, None)),
+                      NamedSharding(mesh, P(axes, None, None, None)),
+                      NamedSharding(mesh, P(axes, None)), rep, rep, rep),
+        out_shardings=(row, row),
     )
 
 

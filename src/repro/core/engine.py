@@ -42,10 +42,11 @@ from typing import Optional
 import numpy as np
 
 from ..obs import trace as _trace
+from . import opt as opt_lib
 from .backend import get_backend
 from .exprs import (Cmp, CP, GroupEvalContext, MaskEvalContext, Node,
                     PairEvalContext, PairTerm, Pred, eval_with_counts,
-                    is_group_expr, pair_roles_of)
+                    is_group_expr, pair_roles_of, tier_context)
 from .store import StaleRunError
 
 
@@ -59,6 +60,7 @@ class ExecStats:
                                       # GROUP BY (see _make_context)
     bytes_loaded: int = 0             # store bytes metered for this run
     bytes_saved: int = 0              # served from the shared-load cache
+    chi_bytes: int = 0                # index bytes the bounds passes touched
     bound_time_s: float = 0.0
     verify_time_s: float = 0.0
 
@@ -76,15 +78,19 @@ class ExecStats:
             setattr(self, f.name, f.default)
 
 
-def _chi_row_nbytes(ctx) -> int:
+def _chi_row_nbytes(ctx, tier: Optional[int] = None) -> int:
     """Bytes of CHI table one candidate's bounds pass touches (pair
-    candidates touch both roles' rows).  Best-effort: 0 when the store
+    candidates touch both roles' rows); at pyramid tier ``tier`` the row is
+    the (g+1)²·(NB+1) strided subsample.  Best-effort: 0 when the store
     doesn't expose its chunked CHI layout."""
     chunks = getattr(ctx.store, "chi_chunks", None)
     if not chunks:
         return 0
     row = chunks[0]
-    per = int(np.prod(row.shape[1:])) * row.dtype.itemsize
+    if tier is None:
+        per = int(np.prod(row.shape[1:])) * row.dtype.itemsize
+    else:
+        per = (tier + 1) * (tier + 1) * row.shape[-1] * row.dtype.itemsize
     return per * (2 if isinstance(ctx, PairEvalContext) else 1)
 
 
@@ -237,6 +243,10 @@ class _VerifyRun:
                                n_dropped_masks=n_dropped)
         self._bounds_hook = bounds_hook
         self._bounds_memo: dict = {}
+        # Filled by _decide_pred when the cost-based optimizer ran: conjunct
+        # order, per-conjunct tier ladders, estimated vs. actual selectivity
+        # (surfaced by EXPLAIN ANALYZE).
+        self.opt_report: Optional[dict] = None
         self.pending = np.empty(0, dtype=np.int64)
         self.cursor = 0
 
@@ -251,8 +261,10 @@ class _VerifyRun:
         if expr in self._bounds_memo:
             return self._bounds_memo[expr]
         t0 = time.perf_counter()
+        finest = self.ctx.cfg.grid
         with _trace.span("bounds") as sp:
-            cached = self._bounds_hook.get(expr) if self._bounds_hook else None
+            cached = (self._bounds_hook.get(expr, tier=finest)
+                      if self._bounds_hook else None)
             if cached is not None:
                 lb, ub = cached
             else:
@@ -260,11 +272,12 @@ class _VerifyRun:
                 lb = np.asarray(lb, np.float64)
                 ub = np.asarray(ub, np.float64)
                 if self._bounds_hook is not None:
-                    self._bounds_hook.put(expr, lb, ub)
+                    self._bounds_hook.put(expr, lb, ub, tier=finest)
+            nbytes = (0 if cached is not None
+                      else self.n * _chi_row_nbytes(self.ctx))
             sp.set(expr=repr(expr), candidates=self.n,
-                   cached=cached is not None,
-                   chi_bytes=0 if cached is not None
-                   else self.n * _chi_row_nbytes(self.ctx))
+                   cached=cached is not None, chi_bytes=nbytes)
+        self.stats.chi_bytes += nbytes
         self.stats.bound_time_s += time.perf_counter() - t0
         self._bounds_memo[expr] = (lb, ub)
         return lb, ub
@@ -414,6 +427,108 @@ def _as_pred(expr_or_pred, op, threshold) -> Pred:
     return Cmp(expr_or_pred, op, threshold)
 
 
+def _ladder_bounds_of(run, sub, g: int, finest: int):
+    """The ``bounds_of`` callable for one ladder rung: the run's backend
+    over the tier subcontext, traced as ``bounds.tier`` spans (distinct
+    from the classic full-pass ``bounds`` spans, whose candidate/byte
+    attributes describe the whole candidate set)."""
+
+    def bounds_of(expr):
+        t0 = time.perf_counter()
+        with _trace.span("bounds.tier") as sp:
+            lb, ub = run.backend.bounds(sub, expr)
+            lb = np.asarray(lb, np.float64)
+            ub = np.asarray(ub, np.float64)
+            nbytes = len(sub.positions) * _chi_row_nbytes(sub, g)
+            sp.set(expr=repr(expr), tier=g, candidates=len(sub.positions),
+                   chi_bytes=nbytes)
+        run.stats.chi_bytes += nbytes
+        run.stats.bound_time_s += time.perf_counter() - t0
+        return lb, ub
+
+    return bounds_of
+
+
+def _decide_pred(run, pred: Pred, shared_exprs=()):
+    """Three-valued WHERE decision, through the cost-based optimizer when
+    it applies (``core/opt.py``, DESIGN.md §13): conjuncts are evaluated
+    cheapest-and-most-selective first, each starting at its chosen CHI
+    pyramid tier and refining only the still-undecided candidates downward.
+
+    The final (accept, reject) verdicts are bit-identical to the classic
+    plan-order decide at the finest grid: coarse bounds contain fine bounds
+    so coarse decisions are monotone, the finest rung re-evaluates every
+    still-undecided candidate with exactly the classic bounds, and a
+    candidate skipped because an earlier conjunct rejected it is rejected
+    under any conjunct order.  The service's bounds-cache path keeps the
+    classic decide so its finest-tier entries stay shared across refined
+    queries.  Sets ``run.opt_report`` when the optimizer ran.
+    """
+    ctx = run.ctx
+    plans = None
+    if run._bounds_hook is None:
+        plans = opt_lib.plan_filter(pred, ctx, shared_exprs=shared_exprs,
+                                    memo_exprs=run._bounds_memo)
+    if plans is None:
+        accept, reject = pred.decide(run.expr_bounds, ctx)
+        return np.asarray(accept), np.asarray(reject)
+    tiers = ctx.cfg.tier_grids
+    finest = tiers[-1]
+    n = run.n
+    accept = np.ones(n, dtype=bool)
+    reject = np.zeros(n, dtype=bool)
+    report = []
+    for plan in plans:
+        c = plan.pred
+        live = np.nonzero(~reject)[0]
+        a_c = np.zeros(n, dtype=bool)
+        r_c = np.zeros(n, dtype=bool)
+        tier_rows = []
+        if plan.classic:
+            a, r = c.decide(run.expr_bounds, ctx)
+            a_c |= np.asarray(a, bool)
+            r_c |= np.asarray(r, bool)
+            evaluated = n
+            rejected = int(r_c.sum())
+        else:
+            undecided = live
+            for g in tiers[tiers.index(plan.start_tier):]:
+                if not len(undecided):
+                    break
+                sub = tier_context(ctx, undecided,
+                                   None if g == finest else g)
+                a, r = c.decide(_ladder_bounds_of(run, sub, g, finest), sub)
+                a = np.asarray(a, bool)
+                r = np.asarray(r, bool)
+                a_c[undecided[a]] = True
+                r_c[undecided[r]] = True
+                tier_rows.append({"grid": int(g),
+                                  "candidates": int(len(undecided)),
+                                  "accepted": int(a.sum()),
+                                  "rejected": int(r.sum())})
+                undecided = undecided[~(a | r)]
+            evaluated = len(live)
+            rejected = int(r_c[live].sum())
+        actual_reject = rejected / evaluated if evaluated else None
+        if plan.est_reject is not None and evaluated:
+            opt_lib.observe_selectivity_error(
+                abs(plan.est_reject - actual_reject))
+        report.append({
+            "pred": repr(c), "plan_index": plan.index,
+            "start_tier": int(plan.start_tier), "classic": plan.classic,
+            "est_reject": plan.est_reject, "actual_reject": actual_reject,
+            "evaluated": evaluated, "tiers": tier_rows,
+        })
+        accept &= a_c
+        reject |= r_c
+    run.opt_report = {"order": [p.index for p in plans],
+                      "reordered": [p.index for p in plans] !=
+                      sorted(p.index for p in plans),
+                      "tier_grids": [int(g) for g in tiers],
+                      "conjuncts": report}
+    return accept, reject
+
+
 class FilterRun(_VerifyRun):
     """Resumable verification state for a filter query — a boolean predicate
     tree (or the legacy ``expr op threshold`` triple) whose bound-undecided
@@ -442,7 +557,7 @@ class FilterRun(_VerifyRun):
         if bounds is not None and self.expr is not None:
             self._bounds_memo[self.expr] = tuple(
                 np.asarray(b, np.float64) for b in bounds)
-        accept, reject = self.pred.decide(self.expr_bounds, self.ctx)
+        accept, reject = _decide_pred(self, self.pred)
         self.accept = np.asarray(accept).copy()
         self.pending = np.nonzero(~(accept | reject))[0]
         self.stats.n_decided_by_bounds = self.n - len(self.pending)
@@ -725,7 +840,11 @@ class FilteredTopKRun(TopKRun):
                          backend=backend, _pred_exprs=pred.value_exprs())
 
     def _init_qualification(self) -> None:
-        accept, reject = self.pred.decide(self.expr_bounds, self.ctx)
+        # The ranking expression is "shared": a conjunct over it decides
+        # from the run's full finest bounds so the pass stays memoized for
+        # the ranking frontier instead of re-running per ladder rung.
+        accept, reject = _decide_pred(self, self.pred,
+                                      shared_exprs=(self.expr,))
         self.p_true = np.asarray(accept).copy()
         self.p_false = np.asarray(reject).copy()
         self.p_known = self.p_true | self.p_false

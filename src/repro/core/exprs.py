@@ -268,6 +268,55 @@ def pair_cell_bounds(cfg, stat: str, lo_a, hi_a, lo_b, hi_b,
             ub.sum(axis=(1, 2)).astype(np.float64))
 
 
+def cell_counts_jnp(tables, k):
+    """Device mirror of :func:`_cell_counts` (same corner-difference math,
+    int32 — per-cell counts are ≤ H·W so int32 is exact).  ``k`` may be a
+    traced scalar, so the value-edge gather stays inside one jit."""
+    last = tables.shape[-1] - 1
+    p = jnp.take(tables, last, axis=-1) - jnp.take(tables, k, axis=-1)
+    return p[:, 1:, 1:] - p[:, :-1, 1:] - p[:, 1:, :-1] + p[:, :-1, :-1]
+
+
+def pair_cell_bounds_jnp(stat: str, lo_a, hi_a, lo_b, hi_b, rois,
+                         row_bounds, col_bounds):
+    """Device mirror of :func:`pair_cell_bounds` — identical per-cell
+    formulas in int32 (cell sums are bounded by the ROI area < 2³¹, so the
+    int32 device result converts to float64 bit-identically to the host
+    path).  ``stat`` is trace-static; boundary arrays come in as runtime
+    operands so one compilation serves every tier."""
+    rb = row_bounds.astype(jnp.int32)
+    cb = col_bounds.astype(jnp.int32)
+    rois = rois.astype(jnp.int32)
+    r0, c0 = rois[:, 0][:, None], rois[:, 1][:, None]
+    r1, c1 = rois[:, 2][:, None], rois[:, 3][:, None]
+    ov_r = jnp.clip(jnp.minimum(r1, rb[None, 1:]) -
+                    jnp.maximum(r0, rb[None, :-1]), 0, None)
+    ov_c = jnp.clip(jnp.minimum(c1, cb[None, 1:]) -
+                    jnp.maximum(c0, cb[None, :-1]), 0, None)
+    full_r = (rb[None, :-1] >= r0) & (rb[None, 1:] <= r1)
+    full_c = (cb[None, :-1] >= c0) & (cb[None, 1:] <= c1)
+    overlap = ov_r[:, :, None] * ov_c[:, None, :]
+    full = full_r[:, :, None] & full_c[:, None, :]
+    cell_area = ((rb[1:] - rb[:-1])[None, :, None] *
+                 (cb[1:] - cb[:-1])[None, None, :])
+    zero = jnp.zeros((), jnp.int32)
+    if stat == "inter":
+        lb = jnp.where(full, jnp.maximum(0, lo_a + lo_b - cell_area), zero)
+        ub = jnp.minimum(jnp.minimum(hi_a, hi_b), overlap)
+    elif stat == "union":
+        lb = jnp.where(full, jnp.maximum(lo_a, lo_b), zero)
+        ub = jnp.minimum(overlap, hi_a + hi_b)
+    elif stat == "diff":
+        lb = jnp.where(full, jnp.maximum(0, lo_a - hi_b), zero)
+        ub = jnp.where(full,
+                       jnp.minimum(jnp.minimum(hi_a, overlap),
+                                   cell_area - lo_b),
+                       jnp.minimum(hi_a, overlap))
+    else:
+        raise ValueError(f"unknown pair stat {stat!r}")
+    return lb.sum(axis=(1, 2)), ub.sum(axis=(1, 2))
+
+
 @dataclasses.dataclass(frozen=True)
 class BinOp(Node):
     op: str
@@ -545,6 +594,10 @@ class MaskEvalContext:
         # Optional ExecBackend (core/backend.py) routing physical leaves;
         # None → the host paths below (set by engine._make_context).
         self.backend = None
+        # Pyramid bound tier (DESIGN.md §13): None → the finest grid.  Set
+        # on ladder subcontexts by the optimizer so every backend's CP-leaf
+        # primitive reads the matching coarse CHI tier.
+        self.tier: Optional[int] = None
         self._loaded: Optional[np.ndarray] = None  # aligned with positions
         self._rows: list = []
         self._rows_used = 0
@@ -601,10 +654,17 @@ class MaskEvalContext:
         raise TypeError(f"node {node} not valid in a per-mask expression")
 
     def _chi_cp_bounds(self, node: CP):
-        """Host CP-leaf bounds: CHI gather over the store's index."""
+        """Host CP-leaf bounds: CHI gather over the store's index at this
+        context's bound tier (the finest grid unless a refinement-ladder
+        subcontext pinned a coarser one)."""
         rois = _as_rois(node.roi, self.positions, self.provided_rois, self.cfg)
-        table = self.store.chi_table[jnp.asarray(self.positions)]
-        lb, ub = chi_lib.chi_bounds(table, self.cfg, rois, node.lv, node.uv)
+        g = self.tier
+        if g is None or g == self.cfg.grid:
+            cfg, table = self.cfg, self.store.chi_table
+        else:
+            cfg, table = self.cfg.for_grid(g), self.store.chi_tier_table(g)
+        table = table[jnp.asarray(self.positions)]
+        lb, ub = chi_lib.chi_bounds(table, cfg, rois, node.lv, node.uv)
         return np.asarray(lb, np.float64), np.asarray(ub, np.float64)
 
     # exact ------------------------------------------------------------------
@@ -686,6 +746,20 @@ def eval_with_counts(ctx: "MaskEvalContext", node: Node, idx: np.ndarray,
     through the same walker as self-verification."""
     return ctx._eval_tree(node, idx,
                           lambda n, i: np.asarray(counts[n], np.float64))
+
+
+def tier_context(ctx: "MaskEvalContext", idx: np.ndarray,
+                 tier: Optional[int]) -> "MaskEvalContext":
+    """A shallow subcontext over candidate indices ``idx`` of ``ctx`` with
+    the bound tier pinned — what the refinement ladder hands each rung's
+    bounds pass.  ``provided_rois`` stays whole-store-indexed (ROIs resolve
+    by store position), the backend rides along, and ``tier=None`` means
+    the finest grid, so a final rung is bit-identical to the classic path."""
+    sub = MaskEvalContext(ctx.store, ctx.positions[np.asarray(idx)],
+                          ctx.provided_rois, partial_rows=ctx.partial_rows)
+    sub.backend = ctx.backend
+    sub.tier = tier
+    return sub
 
 
 # ---------------------------------------------------------------------------
@@ -786,11 +860,13 @@ class PairEvalContext:
     mask) and applies to both roles, so intersection/union/difference are
     counted over one region per image.
 
-    Pair bounds are computed host-side in float64 for **every** backend —
-    both roles' CHI rows are gathered once and combined cell-by-cell
-    (:func:`pair_cell_bounds`) — so the three backends share one pruning
-    semantics bit for bit; only verification (the dual-mask kernel pass)
-    is backend-physical.
+    Pair bounds combine both roles' CHI rows cell-by-cell.  The host path
+    gathers the rows and runs :func:`pair_cell_bounds` in numpy; the
+    device/mesh backends run the identical math jit'd over their resident
+    CHI (:func:`pair_cell_bounds_jnp` via ``pair_leaf``).  Cell counts and
+    sums are integral either way, so the three backends share one pruning
+    semantics bit for bit; verification (the dual-mask kernel pass) is
+    backend-physical as before.
     """
 
     def __init__(self, store, pos_a: np.ndarray, pos_b: np.ndarray,
@@ -840,12 +916,15 @@ class PairEvalContext:
                                      _cell_counts(tables, k_out))
         return self._cells_memo[key]
 
-    def bounds(self, node: Node, cp_leaf=None):
+    def bounds(self, node: Node, cp_leaf=None, pair_leaf=None):
         """(lb, ub) float64 over all candidate pairs.  ``cp_leaf`` is part
-        of the shared context signature but unused: pair bounds combine
-        the two roles' CHI rows host-side for every backend (cell
-        decomposition needs the per-cell counts, not one scalar bound per
-        mask), which also guarantees identical pruning everywhere."""
+        of the shared context signature but unused.  ``pair_leaf(pctx,
+        term) -> (lb, ub)`` optionally overrides the PairTerm cell-combine
+        primitive — the device/mesh backends run the same cell math jit'd
+        over their resident CHI (:func:`pair_cell_bounds_jnp`), so the pair
+        filter phase leaves the host while pruning stays bit-identical; the
+        host path below gathers both roles' CHI rows and combines them
+        cell-by-cell in numpy."""
         n = len(self.pos_a)
         if isinstance(node, Const):
             v = np.full(n, node.value)
@@ -854,13 +933,15 @@ class PairEvalContext:
             a = cp_lib.roi_area(self.pair_rois(node.roi)).astype(np.float64)
             return a.copy(), a.copy()
         if isinstance(node, PairTerm):
+            if pair_leaf is not None:
+                return pair_leaf(self, node)
             lo_a, hi_a = self._role_cells("a", node.ta)
             lo_b, hi_b = self._role_cells("b", node.tb)
             return pair_cell_bounds(self.cfg, node.stat, lo_a, hi_a,
                                     lo_b, hi_b, self.pair_rois(node.roi))
         if isinstance(node, BinOp):
-            llb, lub = self.bounds(node.left, cp_leaf)
-            rlb, rub = self.bounds(node.right, cp_leaf)
+            llb, lub = self.bounds(node.left, cp_leaf, pair_leaf)
+            rlb, rub = self.bounds(node.right, cp_leaf, pair_leaf)
             return _interval_binop(node.op, llb, lub, rlb, rub)
         raise TypeError(f"node {node} not valid in a pair expression")
 

@@ -47,7 +47,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from . import packing
-from .chi import CHIConfig, build_chi_delta, build_chi_np
+from .chi import CHIConfig, build_chi_delta, build_chi_np, tier_slice
 
 # Paper's EBS gp3 provisioning (§4): 125 MiB/s, 3000 IOPS.
 EBS_THROUGHPUT_BYTES_S = 125 * 1024 * 1024
@@ -265,6 +265,13 @@ class MaskStore:
             self._chi_chunks = None
         self._chi_cat: np.ndarray | None = None     # host full-table cache
         self._chi_dev = None                        # device full-table cache
+        # Pyramid tiers (DESIGN.md §13): coarse tables are exact strided
+        # subsamples of the finest chunks, materialized lazily per tier and
+        # then maintained incrementally across mutations — never persisted
+        # (disk round-trips re-derive them from the chunked layout).
+        self._chi_tier_host: dict[int, np.ndarray] = {}
+        self._chi_tier_dev: dict = {}
+        self._chi_stats: np.ndarray | None = None   # corner value CDF cache
         self._chunk_files: list[str] | None = None  # disk tier persistence
 
     # -- construction ------------------------------------------------------
@@ -406,6 +413,41 @@ class MaskStore:
     def chi_chunks(self) -> list | None:
         """The chunked CHI layout (read-only view for tests/benchmarks)."""
         return self._chi_chunks
+
+    # -- pyramid tiers (DESIGN.md §13) ---------------------------------------
+
+    def chi_tier_host(self, g: int) -> np.ndarray:
+        """The tier-``g`` CHI table as host numpy — the finest tier is
+        :meth:`chi_host` itself; coarser tiers are exact strided subsamples,
+        materialized once and maintained incrementally across mutations."""
+        if g == self.cfg.grid:
+            return self.chi_host()
+        tab = self._chi_tier_host.get(g)
+        if tab is None:
+            tab = tier_slice(self.chi_host(), self.cfg.grid, g)
+            self._chi_tier_host[g] = tab
+        return tab
+
+    def chi_tier_table(self, g: int):
+        """:meth:`chi_tier_host` pinned in device memory (cached per tier)."""
+        if g == self.cfg.grid:
+            return self.chi_table
+        tab = self._chi_tier_dev.get(g)
+        if tab is None:
+            tab = jnp.asarray(self.chi_tier_host(g))
+            self._chi_tier_dev[g] = tab
+        return tab
+
+    def chi_value_stats(self) -> np.ndarray:
+        """(B, NB+1) whole-image value CDF per mask — the CHI's own corner
+        plane ``table[:, -1, -1, :]`` (``stats[b, k]`` counts pixels with
+        value < ``edges[k]``; the last entry is H·W).  This is the build-time
+        index statistic the cost-based optimizer estimates selectivities
+        from — no extra state, kept fresh incrementally like the tiers."""
+        if self._chi_stats is None:
+            self._chi_stats = np.ascontiguousarray(
+                self.chi_host()[:, -1, -1, :])
+        return self._chi_stats
 
     @property
     def mask_ids(self) -> np.ndarray:
@@ -552,6 +594,17 @@ class MaskStore:
             self._chi_dev = jnp.concatenate(
                 [self._chi_dev, jnp.asarray(chunk)])
         self._chi_cat = None
+        # pyramid tiers / value stats: extend materialized caches with the
+        # delta's slice — same O(delta) contract as the chunk itself
+        for g, tab in list(self._chi_tier_host.items()):
+            self._chi_tier_host[g] = np.concatenate(
+                [tab, tier_slice(chunk, self.cfg.grid, g)])
+        for g, tab in list(self._chi_tier_dev.items()):
+            self._chi_tier_dev[g] = jnp.concatenate(
+                [tab, jnp.asarray(tier_slice(chunk, self.cfg.grid, g))])
+        if self._chi_stats is not None:
+            self._chi_stats = np.concatenate(
+                [self._chi_stats, np.ascontiguousarray(chunk[:, -1, -1, :])])
         # metadata + shared-load cache extension
         self.meta = np.concatenate([self.meta, meta])
         if self._cache_map is not None:
@@ -612,6 +665,19 @@ class MaskStore:
         if self._chi_dev is not None:
             self._chi_dev = self._chi_dev.at[jnp.asarray(positions)].set(
                 jnp.asarray(new_rows))
+        # pyramid tiers / value stats: patch materialized caches in place
+        # (copy-on-write, same as the owning chunks above)
+        for g, tab in list(self._chi_tier_host.items()):
+            patched_t = tab.copy()
+            patched_t[positions] = tier_slice(new_rows, self.cfg.grid, g)
+            self._chi_tier_host[g] = patched_t
+        for g, tab in list(self._chi_tier_dev.items()):
+            self._chi_tier_dev[g] = tab.at[jnp.asarray(positions)].set(
+                jnp.asarray(tier_slice(new_rows, self.cfg.grid, g)))
+        if self._chi_stats is not None:
+            stats = self._chi_stats.copy()
+            stats[positions] = new_rows[:, -1, -1, :]
+            self._chi_stats = stats
         # mask bytes (copy-on-write for memory so pinned views stay intact;
         # the replacement buffer keeps the old spare capacity so the next
         # append stays O(delta))
@@ -671,6 +737,13 @@ class MaskStore:
         self._chi_cat = None
         if self._chi_dev is not None:
             self._chi_dev = self._chi_dev[jnp.asarray(keep_idx)]
+        # pyramid tiers / value stats: gather survivors
+        for g, tab in list(self._chi_tier_host.items()):
+            self._chi_tier_host[g] = np.ascontiguousarray(tab[keep])
+        for g, tab in list(self._chi_tier_dev.items()):
+            self._chi_tier_dev[g] = tab[jnp.asarray(keep_idx)]
+        if self._chi_stats is not None:
+            self._chi_stats = np.ascontiguousarray(self._chi_stats[keep])
         # mask bytes
         if self.tier == "memory":
             self._masks_buf = self._cow_masks_buf(self._masks[keep])
@@ -1014,6 +1087,25 @@ class StoreSnapshot:
                 f"CHI bounds pinned at epoch {self.epoch} cannot be "
                 f"recomputed: store moved to epoch {self._store.epoch}")
         return self._store.chi_host(positions)
+
+    def _require_fresh_index(self) -> MaskStore:
+        if not self.fresh:
+            raise StaleRunError(
+                f"CHI bounds pinned at epoch {self.epoch} cannot be "
+                f"recomputed: store moved to epoch {self._store.epoch}")
+        return self._store
+
+    def chi_tier_host(self, g: int) -> np.ndarray:
+        """Pyramid tier at the pinned epoch — same freshness contract as
+        :attr:`chi_table` (the refinement ladder runs at pin time)."""
+        return self._require_fresh_index().chi_tier_host(g)
+
+    def chi_tier_table(self, g: int):
+        return self._require_fresh_index().chi_tier_table(g)
+
+    def chi_value_stats(self) -> np.ndarray:
+        """Build-time index statistics at the pinned epoch (cost model)."""
+        return self._require_fresh_index().chi_value_stats()
 
     def snapshot(self) -> "StoreSnapshot":
         return self

@@ -85,18 +85,26 @@ def explain_plan(plan: LogicalPlan) -> dict:
 
 
 def _bounds_rows(trace_root) -> list:
-    """Per-expression bounds spans (``bounds``) pulled out of the trace."""
+    """Per-expression bounds spans (classic ``bounds`` passes and pyramid
+    ``bounds.tier`` rungs) pulled out of the trace.  Tier rungs carry the
+    grid they ran at, so the rendered CHIBounds node shows the refinement
+    ladder actually used and the index bytes each rung touched."""
     rows = []
     if trace_root is None:
         return rows
     for sp in trace_root.walk():
         if sp.name == "bounds":
-            row = {"expr": sp.attrs.get("expr"),
-                   "candidates": sp.attrs.get("candidates"),
-                   "chi_bytes": sp.attrs.get("chi_bytes", 0),
-                   "cached": bool(sp.attrs.get("cached", False)),
-                   "time_s": sp.dur_s}
-            rows.append(row)
+            rows.append({"expr": sp.attrs.get("expr"),
+                         "candidates": sp.attrs.get("candidates"),
+                         "chi_bytes": sp.attrs.get("chi_bytes", 0),
+                         "cached": bool(sp.attrs.get("cached", False)),
+                         "time_s": sp.dur_s})
+        elif sp.name == "bounds.tier":
+            rows.append({"expr": sp.attrs.get("expr"),
+                         "tier": sp.attrs.get("tier"),
+                         "candidates": sp.attrs.get("candidates"),
+                         "chi_bytes": sp.attrs.get("chi_bytes", 0),
+                         "time_s": sp.dur_s})
     return rows
 
 
@@ -128,6 +136,7 @@ def analyzed_tree(plan: LogicalPlan, run, trace_root=None) -> dict:
         "rounds": int(s.n_rounds),
         "bytes_loaded": int(s.bytes_loaded),
         "bytes_saved": int(s.bytes_saved),
+        "chi_bytes": int(s.chi_bytes),
         "bound_time_s": float(s.bound_time_s),
         "verify_time_s": float(s.verify_time_s),
         "load_fraction": float(s.load_fraction),
@@ -141,21 +150,56 @@ def analyzed_tree(plan: LogicalPlan, run, trace_root=None) -> dict:
         "rounds": _verify_rounds(trace_root),
     }]
     if plan.predicate is not None:
-        leaves = []
-        for leaf in _pred_leaves(plan.predicate):
-            accept, reject = leaf.decide(run.expr_bounds, run.ctx)
-            accept = np.asarray(accept, bool)
-            reject = np.asarray(reject, bool)
-            leaves.append({
-                "pred": repr(leaf),
-                "accepted_by_bounds": int(accept.sum()),
-                "rejected_by_bounds": int(reject.sum()),
-                "undecided": int((~(accept | reject)).sum()),
-            })
-        children.append({"op": "Filter", "predicate": repr(plan.predicate),
-                         "leaves": leaves})
+        opt_report = getattr(run, "opt_report", None)
+        if opt_report is not None:
+            # the cost-based optimizer ran: report the conjunct order it
+            # chose, each conjunct's estimated vs. actual rejection rate,
+            # and the tier ladder it walked (re-deciding here would redo
+            # un-memoized ladder passes and distort the stats)
+            leaves = []
+            for row in opt_report["conjuncts"]:
+                entry = {"pred": row["pred"],
+                         "start_tier": row["start_tier"]}
+                if row.get("classic"):
+                    entry["classic"] = True
+                if row.get("est_reject") is not None:
+                    entry["est_reject"] = round(float(row["est_reject"]), 4)
+                if row.get("actual_reject") is not None:
+                    entry["actual_reject"] = round(
+                        float(row["actual_reject"]), 4)
+                entry["evaluated"] = int(row.get("evaluated", 0))
+                if row.get("tiers"):
+                    entry["ladder"] = " -> ".join(
+                        f"g{t['grid']}[{t['candidates']}cand "
+                        f"{t['accepted']}acc {t['rejected']}rej]"
+                        for t in row["tiers"])
+                leaves.append(entry)
+            children.append({"op": "Filter",
+                             "predicate": repr(plan.predicate),
+                             "order": list(opt_report["order"]),
+                             "reordered": bool(opt_report["reordered"]),
+                             "tier_grids": list(opt_report["tier_grids"]),
+                             "leaves": leaves})
+        else:
+            # classic decide: leaf bounds are memoized on the run, so
+            # re-deciding per leaf is free and exact
+            leaves = []
+            for leaf in _pred_leaves(plan.predicate):
+                accept, reject = leaf.decide(run.expr_bounds, run.ctx)
+                accept = np.asarray(accept, bool)
+                reject = np.asarray(reject, bool)
+                leaves.append({
+                    "pred": repr(leaf),
+                    "accepted_by_bounds": int(accept.sum()),
+                    "rejected_by_bounds": int(reject.sum()),
+                    "undecided": int((~(accept | reject)).sum()),
+                })
+            children.append({"op": "Filter",
+                             "predicate": repr(plan.predicate),
+                             "leaves": leaves})
     children.append({"op": "CHIBounds",
-                     "stats": {"time_s": float(s.bound_time_s)},
+                     "stats": {"time_s": float(s.bound_time_s),
+                               "chi_bytes": int(s.chi_bytes)},
                      "exprs": (_bounds_rows(trace_root) or
                                [{"expr": repr(e)} for e in plan.exprs()])})
     children.append({"op": "Source",

@@ -77,23 +77,28 @@ def result_key(plan_or_query, roi_sig: str, backend: str = "host",
 
 def bounds_key(expr: Node, plan_or_query, roi_sig: str,
                backend: str = "host", epoch: int = 0,
-               packed: bool = False) -> str:
+               packed: bool = False, *, tier: int = 0) -> str:
     """One *value expression*'s bounds-cache key: everything that pins the
     candidate set + its CHI pass — NOT op/threshold/k or the rest of the
     plan, so refined and restructured queries hit the same entries.
     Keys carry the execution backend's name: bounds are numerically
     identical across backends, but entries stay attributable (and a
     service switching backends never serves stale placement decisions).
-    They also carry the store epoch, so a mutation makes every pre-epoch
-    bounds pass unreachable, and the packed-representation tag, so a
-    float-era entry never answers for a packed store (or vice versa)."""
+    They also carry the CHI pyramid **tier** the bounds were computed at
+    (DESIGN.md §13) — a coarse-tier interval soundly *contains* the fine
+    one, so serving it for a refined request would silently widen bounds;
+    the tier component makes that impossible — and the store epoch, so a
+    mutation makes every pre-epoch bounds pass unreachable, plus the
+    packed-representation tag, so a float-era entry never answers for a
+    packed store (or vice versa).  The epoch stays the trailing component
+    (``evict_dead_epochs`` parses it off the end)."""
     plan = _as_plan(plan_or_query)
     return "|".join([
         expr_signature(expr),
         str(None if plan.mask_types is None
             else tuple(sorted(plan.mask_types))),
         str(plan.grouped), roi_sig, _backend_tag(backend, packed),
-        f"e{int(epoch)}",
+        f"t{int(tier)}", f"e{int(epoch)}",
     ])
 
 
@@ -166,8 +171,9 @@ class LRUCache:
 
 class _PlanBoundsHook:
     """Adapts the planner's LRU to the engine's per-run bounds hook
-    (``get(expr)`` / ``put(expr, lb, ub)``), closing over the plan context
-    that pins the candidate set."""
+    (``get(expr, tier)`` / ``put(expr, lb, ub, tier)``), closing over the
+    plan context that pins the candidate set; the engine passes the tier
+    the pass ran at (the finest grid on the classic path)."""
 
     def __init__(self, cache: LRUCache, plan: LogicalPlan, roi_sig: str,
                  backend: str = "host", epoch: int = 0,
@@ -179,15 +185,16 @@ class _PlanBoundsHook:
         self._epoch = epoch
         self._packed = packed
 
-    def get(self, expr: Node):
+    def get(self, expr: Node, tier: int = 0):
         return self._cache.get(
             bounds_key(expr, self._plan, self._roi_sig, self._backend,
-                       self._epoch, self._packed))
+                       self._epoch, self._packed, tier=tier))
 
-    def put(self, expr: Node, lb: np.ndarray, ub: np.ndarray) -> None:
+    def put(self, expr: Node, lb: np.ndarray, ub: np.ndarray,
+            tier: int = 0) -> None:
         self._cache.put(
             bounds_key(expr, self._plan, self._roi_sig, self._backend,
-                       self._epoch, self._packed),
+                       self._epoch, self._packed, tier=tier),
             (lb, ub))
 
 

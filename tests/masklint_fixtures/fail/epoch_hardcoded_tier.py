@@ -1,0 +1,8 @@
+"""MUST TRIGGER epoch-discipline: a hardcoded tier literal pins one
+pyramid rung — bounds from a different tier alias under the same key."""
+from repro.service.planner import bounds_key
+
+
+def key_for(expr, plan, roi_sig, store):
+    return bounds_key(expr, plan, roi_sig, "host",
+                      epoch=store.epoch, tier=8)  # literal tier

@@ -1,0 +1,8 @@
+"""MUST TRIGGER epoch-discipline: bounds_key without a tier — the tier=0
+default binds and a coarse CHI-pyramid interval answers refined requests."""
+from repro.service.planner import bounds_key
+
+
+def key_for(expr, plan, roi_sig, store):
+    return bounds_key(expr, plan, roi_sig, "host",
+                      epoch=store.epoch)  # no tier

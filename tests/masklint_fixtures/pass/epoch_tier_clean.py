@@ -1,0 +1,8 @@
+"""MUST STAY CLEAN: bounds_key threads both the live epoch and the tier
+the bounds pass actually ran at."""
+from repro.service.planner import bounds_key
+
+
+def key_for(expr, plan, roi_sig, store, tier):
+    return bounds_key(expr, plan, roi_sig, "host",
+                      epoch=store.epoch, tier=tier)

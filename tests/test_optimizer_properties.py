@@ -1,0 +1,155 @@
+"""Property-based tests (hypothesis) for the CHI pyramid + cost-based
+filter optimizer (DESIGN.md §13):
+
+  1. Tier nesting: every coarse-tier [lb, ub] contains the finer tier's
+     interval and the exact CP value, for arbitrary masks/ROIs/ranges
+     (including float32 bin-edge values the nextafter32 mapping handles).
+  2. Optimizer-ordering equivalence: any conjunct order, with the ladder
+     on or off, yields bit-identical filter verdicts.
+  3. Pyramid round-trip: tier tables survive disk persistence and
+     append/update/delete as exact tier slices of the finest table.
+
+The deterministic seeded twins of these properties live in
+tests/test_optimizer.py and always run; this sweep needs the dev extra.
+"""
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis",
+                    reason="property tests need hypothesis (dev extra)")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core import chi, opt
+from repro.core.chi import CHIConfig, tier_slice
+from repro.core.exprs import CP, And, Cmp, MaskEvalContext
+from repro.core.plan import LogicalPlan, run_plan
+from repro.core.store import MASK_META_DTYPE, MaskStore
+
+
+def _meta(b):
+    meta = np.zeros(b, MASK_META_DTYPE)
+    meta["mask_id"] = np.arange(b)
+    meta["image_id"] = np.arange(b)
+    meta["mask_type"] = np.arange(b) % 3 + 1
+    return meta
+
+
+def _mask_batch(seed, b, h, w, style):
+    rng = np.random.default_rng(seed)
+    if style == 0:
+        m = rng.random((b, h, w), dtype=np.float32)
+    elif style == 1:
+        m = (rng.random((b, h, w)) > 0.5).astype(np.float32) * 0.999
+    else:               # constant bin-edge values, one ulp apart
+        base = np.float32(rng.choice([0.25, 0.5, 0.75]))
+        m = np.full((b, h, w), base, np.float32)
+        m[::2] = np.nextafter(base, np.float32(1.0))
+        m[1::4] = np.nextafter(base, np.float32(0.0))
+    return m
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    style=st.integers(0, 2),
+    hw=st.tuples(st.integers(16, 48), st.integers(16, 48)),
+    roi=st.tuples(st.floats(0, 1), st.floats(0, 1), st.floats(0, 1),
+                  st.floats(0, 1)),
+    vrange=st.tuples(st.floats(0, 1), st.floats(0, 1)),
+)
+def test_tier_intervals_nest_and_contain_exact(seed, style, hw, roi, vrange):
+    h, w = hw
+    b = 6
+    masks = _mask_batch(seed, b, h, w, style)
+    cfg = CHIConfig(grid=16, num_bins=4, height=h, width=w)
+    store = MaskStore.create_memory(masks, _meta(b), cfg)
+    r0 = int(roi[0] * h); r1 = int(roi[2] * h)
+    c0 = int(roi[1] * w); c1 = int(roi[3] * w)
+    r0, r1 = min(r0, r1), max(r0, r1)
+    c0, c1 = min(c0, c1), max(c0, c1)
+    lv, uv = sorted(vrange)
+    expr = CP((r0, c0, r1, c1), lv, uv)
+    sub = masks[:, r0:r1, c0:c1]
+    exact = ((sub >= lv) & (sub < uv)).sum(axis=(1, 2)).astype(np.float64)
+    tiers = cfg.tier_grids
+    prev = None
+    for g in tiers:
+        ctx = MaskEvalContext(store, np.arange(b))
+        ctx.tier = None if g == tiers[-1] else g
+        lb, ub = ctx.bounds(expr)
+        assert np.all(lb <= exact) and np.all(exact <= ub), (g, lv, uv)
+        if prev is not None:
+            assert np.all(prev[0] <= lb) and np.all(ub <= prev[1]), g
+        prev = (lb, ub)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    backend=st.sampled_from(["host", "device", "mesh"]),
+    packed=st.booleans(),
+    t_lo=st.floats(0.0, 0.4),
+    t_hi=st.floats(0.5, 1.0),
+    swap=st.booleans(),
+)
+def test_any_conjunct_order_bit_identical(seed, backend, packed,
+                                          t_lo, t_hi, swap):
+    b, h, w = 30, 32, 32
+    rng = np.random.default_rng(seed)
+    if packed:
+        masks = (rng.random((b, h, w)) < 0.4).astype(np.float32)
+        lo_rng, hi_rng = (0.5, 1.5), (0.5, 1.5)
+    else:
+        masks = rng.random((b, h, w), dtype=np.float32)
+        masks[: b // 2] *= 0.3
+        lo_rng, hi_rng = (0.2, float("inf")), (0.8, float("inf"))
+    cfg = CHIConfig(grid=8, num_bins=8, height=h, width=w)
+    store = MaskStore.create_memory(masks, _meta(b), cfg, packed=packed)
+    area = h * w
+    ca = Cmp(CP((0, 0, h, w), *lo_rng), ">", t_lo * area)
+    cb = Cmp(CP((0, 0, h, w), *hi_rng), ">", t_hi * area)
+    pred = And(cb, ca) if swap else And(ca, cb)
+    plan = LogicalPlan(predicate=pred)
+    with opt.configure(pyramid=False, reorder=False):
+        ids_classic, st_c = run_plan(store, plan, backend=backend)
+    with opt.configure(pyramid=True, reorder=True):
+        ids_ladder, st_o = run_plan(store, plan, backend=backend)
+    np.testing.assert_array_equal(ids_classic, ids_ladder)
+    assert st_c.n_decided_by_bounds == st_o.n_decided_by_bounds
+
+
+@settings(max_examples=10, deadline=None)
+@given(
+    seed=st.integers(0, 2**31 - 1),
+    grid=st.sampled_from([8, 16]),
+    n_append=st.integers(1, 4),
+    n_delete=st.integers(0, 3),
+)
+def test_pyramid_roundtrip_disk_and_mutation(tmp_path_factory, seed, grid,
+                                             n_append, n_delete):
+    b, h, w = 10, 32, 32
+    rng = np.random.default_rng(seed)
+    root = tmp_path_factory.mktemp("pyr")
+    cfg = CHIConfig(grid=grid, num_bins=4, height=h, width=w)
+    store = MaskStore.create_disk(
+        root / "db", rng.random((b, h, w)).astype(np.float32), _meta(b), cfg)
+    store = MaskStore.open_disk(root / "db")
+
+    def check(st_):
+        finest = st_.chi_host()
+        for g in st_.cfg.tier_grids[:-1]:
+            np.testing.assert_array_equal(
+                st_.chi_tier_host(g), tier_slice(finest, st_.cfg.grid, g))
+
+    check(store)
+    emeta = _meta(n_append)
+    emeta["mask_id"] += b
+    emeta["image_id"] += b
+    store.append(rng.random((n_append, h, w)).astype(np.float32), emeta)
+    check(store)
+    store.update([0], rng.random((1, h, w)).astype(np.float32))
+    check(store)
+    if n_delete:
+        store.delete(list(range(1, 1 + n_delete)))
+        check(store)
