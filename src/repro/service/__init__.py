@@ -8,7 +8,11 @@ Public surface:
   * :class:`MaskSearchService` — the stateful facade (:mod:`.api`).
   * :class:`ServiceClient`     — stdlib HTTP client (:mod:`.client`).
   * :func:`make_server` / ``python -m repro.service.server`` — HTTP front.
-  * :mod:`.planner` / :mod:`.session` / :mod:`.scheduler` — the pieces.
+  * :class:`AsyncTier` / :func:`serve_in_thread` /
+    ``python -m repro.service.asyncserver`` — the high-concurrency async
+    front (admission control + cross-tenant batch fusion).
+  * :mod:`.planner` / :mod:`.session` / :mod:`.scheduler` /
+    :mod:`.routes` / :mod:`.admission` — the pieces.
 """
 
 from .api import MaskSearchService  # noqa: F401
@@ -24,4 +28,7 @@ def __getattr__(name):
     if name == "make_server":
         from .server import make_server
         return make_server
+    if name in ("AsyncTier", "serve_in_thread"):
+        from . import asyncserver
+        return getattr(asyncserver, name)
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -35,11 +35,12 @@ from ..core.backend import get_backend, is_packed
 from ..core.engine import ExecStats
 from ..core.plan import LogicalPlan, compile_plan
 from ..core.queries import Query, parse
-from ..core.store import MASK_META_DTYPE
+from ..core.store import MASK_META_DTYPE, StaleRunError
 from ..obs import trace as trace_mod
 from ..obs.explain import explain_analyze, explain_plan
 from ..obs.metrics import REGISTRY as GLOBAL_REGISTRY
 from ..obs.metrics import MetricsRegistry, dataclass_sampler
+from .errors import NotFoundError
 from .planner import Planner, roi_signature
 from .scheduler import FusedScheduler
 from .session import SessionManager
@@ -392,6 +393,114 @@ class MaskSearchService:
                 results.append(payload)
             return results
 
+    def execute_many(self, items: Sequence) -> list:
+        """The async tier's admitted-batch entry point: run a heterogeneous
+        batch — one-shot queries, session opens, session pages — under one
+        lock acquisition and **one** fused scheduler drive, with every run
+        tagged by the tenant that submitted it.  Verification residues
+        from different tenants merge into the same fused kernel passes
+        (``SchedulerStats.cross_tenant_*``): the paper's multi-query
+        optimization applied *across users*, not just within one batch.
+
+        Each item is a dict::
+
+            {"op": "query", "sql": ..., "rois"?, "session"?: bool,
+             "page_size"?, "tenant"?}
+            {"op": "page", "session_id": ..., "k"?, "tenant"?}
+
+        Returns a list aligned with ``items`` of ``("ok", payload)`` /
+        ``("error", exc)`` — a bad item never poisons its batchmates.
+        """
+        with self._lock:
+            results: list = [None] * len(items)
+            pending: list = []            # (slot, tag, *state) to finish
+            runs: list = []
+            tenants: list = []
+
+            for slot, item in enumerate(items):
+                try:
+                    tenant = item.get("tenant", "default")
+                    if item.get("op", "query") == "page":
+                        sess = self.sessions.get(item["session_id"])
+                        k = item.get("k")
+                        if not sess.done:
+                            _, hi = sess.page_bounds(k)
+                            sess.run.target(hi)
+                            if not sess.run.resumable():
+                                raise StaleRunError(
+                                    f"session pinned at epoch "
+                                    f"{sess.run.epoch}; store moved to "
+                                    f"epoch {self.store.epoch}")
+                            runs.append(sess.run)
+                            tenants.append(tenant)
+                        pending.append((slot, "page", sess, k))
+                        continue
+
+                    sql = item["sql"]
+                    rois, roi_sig = self._rois(item.get("rois"))
+                    plan, explain = self._plan_explain(sql)
+                    if explain is not None:
+                        results[slot] = ("ok", self._explain_payload(
+                            plan, explain, rois, roi_sig, sql))
+                        continue
+                    self._counts["total"] += 1
+                    self._counts[plan.kind] = \
+                        self._counts.get(plan.kind, 0) + 1
+                    if item.get("session"):
+                        if plan.kind not in ("topk", "filtered_topk"):
+                            raise ValueError(
+                                "sessions require a ranking (ORDER BY … "
+                                f"LIMIT) query, got {plan.kind!r}")
+                        size = item.get("page_size") or plan.k or DEFAULT_PAGE
+                        run = self._build_run(plan, rois, roi_sig)
+                        sess = self.sessions.create(
+                            sql if isinstance(sql, str) else repr(plan),
+                            run, size, kind=plan.kind)
+                        _, hi = sess.page_bounds(size)
+                        run.target(hi)
+                        runs.append(run)
+                        tenants.append(tenant)
+                        pending.append((slot, "open", sess, size))
+                        continue
+                    cached = self.planner.cached_result(
+                        plan, roi_sig, self.backend.name, self.store.epoch,
+                        packed=self._packed)
+                    if cached is not None:
+                        results[slot] = ("ok",
+                                         self._cache_hit_payload(cached))
+                        continue
+                    run = self._build_run(plan, rois, roi_sig)
+                    if plan.k is not None:
+                        run.target(plan.k)
+                    runs.append(run)
+                    tenants.append(tenant)
+                    pending.append((slot, "oneshot", plan, run, roi_sig))
+                except Exception as e:      # noqa: BLE001 — per-item fault
+                    results[slot] = ("error", e)
+
+            if runs:
+                with self._traced(f"admit[{len(runs)}]", "admitted_batch"):
+                    self.scheduler.drive(runs, tenants=tenants)
+
+            for entry in pending:
+                slot, tag = entry[0], entry[1]
+                try:
+                    if tag == "oneshot":
+                        _, _, plan, run, roi_sig = entry
+                        payload = self._finish_payload(plan, run)
+                        self.planner.store_result(
+                            plan, roi_sig, copy.deepcopy(payload),
+                            self.backend.name, self.store.epoch,
+                            packed=self._packed)
+                    else:                   # "open" | "page"
+                        _, _, sess, k = entry
+                        payload = self._serve_page(sess, k,
+                                                   scheduler_driven=True)
+                    results[slot] = ("ok", payload)
+                except Exception as e:      # noqa: BLE001 — per-item fault
+                    results[slot] = ("error", e)
+            return results
+
     # -- sessions ---------------------------------------------------------
 
     def _serve_page(self, sess, k: Optional[int], *,
@@ -597,8 +706,8 @@ class MaskSearchService:
         root = (self.tracer.last_trace() if query_id in ("", "last")
                 else self.tracer.get_trace(query_id))
         if root is None:
-            raise KeyError(f"no retained trace for {query_id!r}; "
-                           f"retained: {self.tracer.trace_ids()}")
+            raise NotFoundError(f"no retained trace for {query_id!r}; "
+                                f"retained: {self.tracer.trace_ids()}")
         if fmt == "chrome":
             return trace_mod.chrome_trace(root)
         return root.to_dict()

@@ -55,6 +55,13 @@ class SchedulerStats:
     pair_descriptors: int = 0    # (rois, ta, tb) pair specs answered
     pair_pairs: int = 0          # union mask pairs per pair pass, summed
     fallback_batches: int = 0
+    # Cross-tenant fusion (the async tier's multi-user batching): passes
+    # whose participating jobs span more than one tenant, the jobs that
+    # rode them, and the distinct-tenant width summed over every fused
+    # pass (avg width = fused_tenant_width / (fused_passes + pair_passes)).
+    cross_tenant_passes: int = 0
+    cross_tenant_jobs: int = 0
+    fused_tenant_width: int = 0
 
     def as_dict(self) -> dict:
         return dataclasses.asdict(self)
@@ -125,9 +132,34 @@ class FusedScheduler:
         self.store = store
         self.backend = get_backend(store, backend)
         self.stats = SchedulerStats()
+        # id(job) -> tenant for the drive in flight (drives run under the
+        # service lock, so one map at a time is safe).
+        self._tenant_of: dict = {}
 
-    def drive(self, jobs) -> None:
-        """Run every job to its finality target, fusing verification."""
+    def _note_tenants(self, pairs, span) -> None:
+        """Account one fused pass's tenant mix: distinct-tenant width and,
+        when jobs from different tenants merged into the same kernel pass
+        (the async tier's cross-tenant batching), the cross-tenant
+        counters.  Untagged jobs all count as one anonymous tenant."""
+        tenants = {self._tenant_of.get(id(j), "") for j, _ in pairs}
+        self.stats.fused_tenant_width += len(tenants)
+        if len(tenants) > 1:
+            self.stats.cross_tenant_passes += 1
+            self.stats.cross_tenant_jobs += len(pairs)
+        span.set(tenants=len(tenants))
+
+    def drive(self, jobs, tenants=None) -> None:
+        """Run every job to its finality target, fusing verification.
+
+        ``tenants`` (optional, aligned with ``jobs``) tags each job with
+        the tenant that submitted it so the stats can attribute fusion
+        *across* tenants — the async tier's admission batches are the
+        caller that exercises this."""
+        if tenants is not None:
+            self._tenant_of = {id(j): t for j, t in zip(jobs, tenants)
+                               if j is not None}
+        else:
+            self._tenant_of = {}
         jobs = [j for j in jobs if j is not None]
         owns_cache = self.store.enable_cache()
         try:
@@ -154,6 +186,7 @@ class FusedScheduler:
                     self.stats.fallback_batches += 1
                     job.self_verify(batch)
         finally:
+            self._tenant_of = {}
             if owns_cache:
                 self.store.clear_cache()
 
@@ -184,6 +217,7 @@ class FusedScheduler:
             self.stats.fused_passes += 1
             self.stats.fused_descriptors += len(specs)
             self.stats.fused_masks += len(all_pos)
+            self._note_tenants(pairs, sp)
 
             for job, batch in pairs:
                 pos = job.ctx.positions[batch]
@@ -262,6 +296,7 @@ class FusedScheduler:
             self.stats.pair_passes += 1
             self.stats.pair_descriptors += len(specs)
             self.stats.pair_pairs += len(all_keys)
+            self._note_tenants(pairs, sp)
 
             stat_row = self.backend.PAIR_STAT_ROW
             for job, batch in pairs:

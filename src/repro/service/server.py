@@ -1,6 +1,19 @@
 """Thin stdlib HTTP/JSON front for :class:`MaskSearchService`.
 
-Endpoints (all JSON):
+Two route namespaces share one service:
+
+* ``/v1/...`` — the versioned API (DESIGN.md §14): structured error
+  envelopes ``{"error": {"code", "type", "message", "retry_after"?}}``,
+  ``{"epoch", "applied", ...}`` mutation responses, and opaque
+  continuation cursors for session paging (``POST /v1/page`` with
+  ``{"cursor": ...}`` → ``{"cursor"|null, "items", "exhausted", ...}``).
+  The route core lives in :mod:`.routes`, shared with the async tier
+  (:mod:`.asyncserver`), so the two fronts cannot drift.
+* unversioned legacy routes — thin compat shims over the same service
+  methods, serving the historical payloads byte-identically.  Deprecated
+  in favour of ``/v1`` (see README); they remain until a major rev.
+
+Legacy endpoints (all JSON):
 
 * ``POST /query``    — body ``{"sql": "...", "session": bool?,
   "page_size": int?, "rois": [[r0,c0,r1,c1], ...]?}`` → one result, or the
@@ -42,12 +55,13 @@ from urllib.parse import parse_qs, urlparse
 
 import numpy as np
 
-from ..core.store import StaleRunError
+from . import routes
 from .api import MaskSearchService
+from .errors import NotFoundError, error_envelope
 
 _SESSION_PAGE_RE = re.compile(r"^/session/([^/]+)/page$")
 _SESSION_RE = re.compile(r"^/session/([^/]+)$")
-_TRACE_RE = re.compile(r"^/trace/([^/]+)$")
+_TRACE_RE = re.compile(r"^(?:/v1)?/trace/([^/]+)$")
 
 
 class ServiceHandler(BaseHTTPRequestHandler):
@@ -59,11 +73,15 @@ class ServiceHandler(BaseHTTPRequestHandler):
         if self.verbose:
             super().log_message(fmt, *args)
 
-    def _send(self, obj, code: int = 200) -> None:
+    def _send(self, obj, code: int = 200, *,
+              retry_after: float | None = None) -> None:
         body = json.dumps(obj).encode()
         self.send_response(code)
         self.send_header("Content-Type", "application/json")
         self.send_header("Content-Length", str(len(body)))
+        if retry_after is not None:
+            self.send_header("Retry-After",
+                             str(max(1, int(-(-retry_after // 1)))))
         self.end_headers()
         self.wfile.write(body)
 
@@ -85,23 +103,78 @@ class ServiceHandler(BaseHTTPRequestHandler):
         raw = self.rfile.read(length) if length else b"{}"
         return json.loads(raw or b"{}")
 
-    def _guard(self, fn):
+    def _guard(self, fn, *, v1: bool = False):
+        """Run one handler, translating exceptions to HTTP errors.
+
+        ``NotFoundError`` — not bare ``KeyError`` — is what maps to 404:
+        a genuine ``KeyError`` escaping from engine internals is a server
+        fault and surfaces as the 500 it is, instead of masquerading as
+        "not found".  ``/v1`` routes serve the structured error envelope;
+        legacy routes keep their historical ``{"error": "<str>"}`` body.
+        """
         try:
             fn()
-        except (SyntaxError, ValueError) as e:
-            self._error(400, str(e))
-        except KeyError as e:
-            self._error(404, str(e))
-        except StaleRunError as e:
-            # the session's pinned epoch can no longer be served after a
-            # mutation — a conflict, not a server fault
-            self._error(409, str(e))
         except Exception as e:              # noqa: BLE001 — serving loop
-            self._error(500, f"{type(e).__name__}: {e}")
+            status, envelope, retry_after = error_envelope(e)
+            if v1:
+                self._send(envelope, status, retry_after=retry_after)
+            else:
+                self._error(status, envelope["error"]["message"])
+
+    # -- /v1 routes (shaping shared with the async tier via .routes) ------
+    def _post_v1(self, path: str) -> bool:
+        if path == "/v1/query":
+            def run():
+                body = self._body()
+                self._send(routes.shape_query(
+                    self.service.query(**routes.query_kwargs(body))))
+            self._guard(run, v1=True)
+            return True
+        if path == "/v1/workload":
+            def run():
+                body = self._body()
+                self._send(routes.shape_workload(self.service.submit_batch(
+                    routes.workload_sqls(body),
+                    rois=routes.parse_rois(body))))
+            self._guard(run, v1=True)
+            return True
+        if path == "/v1/page":
+            def run():
+                sid, k = routes.page_request(self._body())
+                self._send(routes.shape_page(self.service.next_page(sid, k)))
+            self._guard(run, v1=True)
+            return True
+        if path == "/v1/ingest":
+            def run():
+                self._send(routes.shape_ingest(self.service.ingest(
+                    **routes.ingest_kwargs(self._body()))))
+            self._guard(run, v1=True)
+            return True
+        if path == "/v1/delete":
+            def run():
+                self._send(routes.shape_delete(self.service.delete(
+                    routes.delete_ids(self._body()))))
+            self._guard(run, v1=True)
+            return True
+        if path == "/v1/session/drop":
+            def run():
+                body = self._body()
+                if "cursor" not in body:
+                    raise ValueError("body must contain 'cursor'")
+                sid = routes.decode_cursor(body["cursor"])
+                self._send({"dropped": self.service.drop_session(sid)})
+            self._guard(run, v1=True)
+            return True
+        return False
 
     # -- routes -----------------------------------------------------------
     def do_POST(self):  # noqa: N802
         path = urlparse(self.path).path
+        if path.startswith("/v1/"):
+            if not self._post_v1(path):
+                self._send(error_envelope(
+                    NotFoundError(f"no route {path}"))[1], 404)
+            return
         if path == "/query":
             def run():
                 body = self._body()
@@ -148,6 +221,7 @@ class ServiceHandler(BaseHTTPRequestHandler):
 
     def do_GET(self):  # noqa: N802
         parsed = urlparse(self.path)
+        v1 = parsed.path.startswith("/v1/")
         m = _SESSION_PAGE_RE.match(parsed.path)
         if m:
             sid = m.group(1)
@@ -171,14 +245,18 @@ class ServiceHandler(BaseHTTPRequestHandler):
                     raise ValueError(f"format must be json|chrome, "
                                      f"got {fmt!r}")
                 self._send(self.service.trace(qid, fmt=fmt))
-            return self._guard(run)
-        if parsed.path == "/stats":
-            return self._guard(lambda: self._send(self.service.stats()))
-        if parsed.path == "/metrics":
+            return self._guard(run, v1=v1)
+        if parsed.path in ("/stats", "/v1/stats"):
+            return self._guard(lambda: self._send(self.service.stats()),
+                               v1=v1)
+        if parsed.path in ("/metrics", "/v1/metrics"):
             return self._guard(
-                lambda: self._send_text(self.service.metrics_text()))
-        if parsed.path == "/healthz":
+                lambda: self._send_text(self.service.metrics_text()), v1=v1)
+        if parsed.path in ("/healthz", "/v1/healthz"):
             return self._send({"ok": True})
+        if v1:
+            return self._send(error_envelope(
+                NotFoundError(f"no route {parsed.path}"))[1], 404)
         self._error(404, f"no route {parsed.path}")
 
     def do_DELETE(self):  # noqa: N802

@@ -20,6 +20,8 @@ import time
 from collections import OrderedDict
 from typing import Optional
 
+from .errors import NotFoundError
+
 _session_counter = itertools.count(1)
 
 
@@ -88,7 +90,9 @@ class SessionManager:
     def get(self, sid: str) -> Session:
         sess = self._sessions.get(sid)
         if sess is None:
-            raise KeyError(f"unknown or expired session {sid!r}")
+            # NotFoundError (a KeyError subclass) so the HTTP guards can
+            # 404 this without treating every engine KeyError as 404.
+            raise NotFoundError(f"unknown or expired session {sid!r}")
         self._sessions.move_to_end(sid)
         sess.last_used_s = time.monotonic()
         return sess

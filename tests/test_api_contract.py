@@ -1,0 +1,380 @@
+"""/v1 API contract tests (DESIGN.md §14).
+
+Every ``/v1`` response is validated against a hand-rolled JSON schema
+(no external jsonschema dependency — a ~40-line structural validator
+covers the subset we need: type, required, properties, items, enum,
+nullable).  The legacy unversioned routes are checked for *byte-level*
+equivalence with their historical payloads: same service, same request,
+the shim must return exactly what the pre-/v1 server returned, since
+``/v1`` payloads are reshapings of those dicts.
+
+Also here: the ``_guard`` regression — a genuine ``KeyError`` escaping a
+handler must surface as 500 (a server fault), not masquerade as 404; only
+``NotFoundError`` maps to 404.
+"""
+
+import json
+import threading
+import urllib.error
+import urllib.request
+
+import pytest
+
+from repro.service import MaskSearchService, ServiceClient, ServiceError, \
+    make_server
+from repro.service.errors import NotFoundError, error_envelope
+from repro.service.routes import decode_cursor, encode_cursor
+from repro.service.server import _synthetic_store
+
+TOPK_SQL = ("SELECT mask_id FROM MasksDatabaseView ORDER BY "
+            "CP(mask, full_img, (0.2, 0.6)) DESC LIMIT 6;")
+FILTER_SQL = ("SELECT mask_id FROM MasksDatabaseView WHERE "
+              "CP(mask, full_img, (0.3, 0.7)) > 150;")
+AGG_SQL = ("SELECT SCALAR_AGG(AVG, CP(mask, full_img, (0.3, 0.7))) "
+           "FROM MasksDatabaseView;")
+
+
+# -- minimal structural JSON-schema validator -------------------------------
+
+_TYPES = {"object": dict, "array": list, "string": str, "boolean": bool,
+          "number": (int, float), "integer": int, "null": type(None)}
+
+
+def check_schema(value, schema, path="$"):
+    """Assert ``value`` matches ``schema`` (subset of JSON Schema)."""
+    if schema.get("nullable") and value is None:
+        return
+    t = schema.get("type")
+    if t is not None:
+        expected = _TYPES[t]
+        ok = isinstance(value, expected)
+        if t == "number" and isinstance(value, bool):
+            ok = False
+        if t == "integer" and isinstance(value, bool):
+            ok = False
+        assert ok, f"{path}: expected {t}, got {type(value).__name__} " \
+                   f"({value!r})"
+    if "enum" in schema:
+        assert value in schema["enum"], \
+            f"{path}: {value!r} not in {schema['enum']}"
+    if isinstance(value, dict):
+        for key in schema.get("required", ()):
+            assert key in value, f"{path}: missing required key {key!r} " \
+                                 f"(have {sorted(value)})"
+        for key, sub in schema.get("properties", {}).items():
+            if key in value:
+                check_schema(value[key], sub, f"{path}.{key}")
+    if isinstance(value, list) and "items" in schema:
+        for i, item in enumerate(value):
+            check_schema(item, schema["items"], f"{path}[{i}]")
+
+
+ERROR_SCHEMA = {
+    "type": "object", "required": ["error"],
+    "properties": {"error": {
+        "type": "object", "required": ["code", "type", "message"],
+        "properties": {
+            "code": {"type": "string",
+                     "enum": ["bad_request", "bad_cursor", "not_found",
+                              "stale_epoch", "rate_limited", "overloaded",
+                              "internal"]},
+            "type": {"type": "string"},
+            "message": {"type": "string"},
+            "retry_after": {"type": "number"},
+        }}}}
+
+PAGE_SCHEMA = {
+    "type": "object",
+    "required": ["kind", "items", "cursor", "exhausted", "offset",
+                 "served", "total_candidates", "stats", "cache_hit"],
+    "properties": {
+        "kind": {"type": "string", "enum": ["topk", "filtered_topk"]},
+        "items": {"type": "array",
+                  "items": {"type": "object", "required": ["id", "score"],
+                            "properties": {"id": {"type": "integer"},
+                                           "score": {"type": "number"}}}},
+        "cursor": {"type": "string", "nullable": True},
+        "exhausted": {"type": "boolean"},
+        "offset": {"type": "integer"},
+        "served": {"type": "integer"},
+        "total_candidates": {"type": "integer"},
+        "cache_hit": {"type": "boolean"},
+    }}
+
+ONESHOT_SCHEMA = {
+    "type": "object", "required": ["kind", "stats", "cache_hit"],
+    "properties": {"kind": {"type": "string"},
+                   "cache_hit": {"type": "boolean"}}}
+
+INGEST_SCHEMA = {
+    "type": "object",
+    "required": ["epoch", "applied", "n_masks", "mask_ids",
+                 "evicted_cache_entries"],
+    "properties": {
+        "epoch": {"type": "integer"},
+        "applied": {"type": "object", "required": ["appended", "updated"],
+                    "properties": {"appended": {"type": "integer"},
+                                   "updated": {"type": "integer"}}},
+        "n_masks": {"type": "integer"},
+        "mask_ids": {"type": "array", "items": {"type": "integer"}},
+        "evicted_cache_entries": {"type": "integer"},
+    }}
+
+DELETE_SCHEMA = {
+    "type": "object",
+    "required": ["epoch", "applied", "n_masks", "evicted_cache_entries"],
+    "properties": {
+        "epoch": {"type": "integer"},
+        "applied": {"type": "object", "required": ["deleted"],
+                    "properties": {"deleted": {"type": "integer"}}},
+    }}
+
+
+# -- fixtures ---------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def served():
+    store, rois = _synthetic_store(60, 32)
+    service = MaskSearchService(store, provided_rois=rois)
+    httpd = make_server(service, "127.0.0.1", 0)
+    threading.Thread(target=httpd.serve_forever, daemon=True).start()
+    host, port = httpd.server_address[:2]
+    yield service, f"http://{host}:{port}"
+    httpd.shutdown()
+    service.close()
+
+
+def _raw(base, method, path, body=None):
+    """→ (status, parsed json) with no client-side shaping."""
+    data = json.dumps(body).encode() if body is not None else None
+    req = urllib.request.Request(
+        base + path, data=data, method=method,
+        headers={"Content-Type": "application/json"} if data else {})
+    try:
+        with urllib.request.urlopen(req, timeout=30) as resp:
+            return resp.status, json.loads(resp.read())
+    except urllib.error.HTTPError as e:
+        return e.code, json.loads(e.read())
+
+
+# -- cursor round-trip ------------------------------------------------------
+
+def test_cursor_roundtrip():
+    cur = encode_cursor("s17-abcd", 25)
+    assert cur.startswith("c1.")
+    assert "=" not in cur                       # unpadded
+    assert decode_cursor(cur) == "s17-abcd"
+    assert decode_cursor("bare-legacy-sid") == "bare-legacy-sid"
+    from repro.service.errors import BadCursorError
+    with pytest.raises(BadCursorError):
+        decode_cursor("c1.!!!not-base64!!!")
+    with pytest.raises(BadCursorError):
+        decode_cursor("")
+
+
+# -- /v1 response schemas ---------------------------------------------------
+
+def test_v1_query_oneshot_schema(served):
+    _, base = served
+    code, out = _raw(base, "POST", "/v1/query", {"sql": TOPK_SQL})
+    assert code == 200
+    check_schema(out, ONESHOT_SCHEMA)
+    assert "ids" in out and "scores" in out
+
+
+def test_v1_session_paging_schema_and_cursor_chain(served):
+    _, base = served
+    code, out = _raw(base, "POST", "/v1/query",
+                     {"sql": TOPK_SQL, "session": True, "page_size": 2})
+    assert code == 200
+    check_schema(out, PAGE_SCHEMA)
+    assert out["cursor"] is not None and out["cursor"].startswith("c1.")
+    seen = [it["id"] for it in out["items"]]
+    cursor = out["cursor"]
+    for _ in range(40):                      # page to exhaustion via cursors
+        code, out = _raw(base, "POST", "/v1/page", {"cursor": cursor})
+        assert code == 200
+        check_schema(out, PAGE_SCHEMA)
+        seen += [it["id"] for it in out["items"]]
+        if out["exhausted"]:
+            assert out["cursor"] is None     # terminal page: no cursor
+            break
+        cursor = out["cursor"]
+    else:
+        pytest.fail("session never exhausted")
+    assert len(seen) == len(set(seen)), "pages overlapped"
+
+
+def test_v1_workload_schema(served):
+    _, base = served
+    code, out = _raw(base, "POST", "/v1/workload",
+                     {"sqls": [TOPK_SQL, FILTER_SQL, AGG_SQL]})
+    assert code == 200
+    check_schema(out, {"type": "object", "required": ["items"],
+                       "properties": {"items": {"type": "array"}}})
+    assert len(out["items"]) == 3
+    for item in out["items"]:
+        check_schema(item, ONESHOT_SCHEMA)
+
+
+def test_v1_mutation_envelopes(served):
+    service, base = served
+    size = service.store.cfg.height
+    masks = [[[0.5] * size] * size for _ in range(2)]
+    code, out = _raw(base, "POST", "/v1/ingest",
+                     {"masks": masks, "mask_ids": [7000, 7001],
+                      "image_ids": [7000, 7001]})
+    assert code == 200
+    check_schema(out, INGEST_SCHEMA)
+    assert out["applied"]["appended"] == 2
+    code, out = _raw(base, "POST", "/v1/delete", {"mask_ids": [7000, 7001]})
+    assert code == 200
+    check_schema(out, DELETE_SCHEMA)
+    assert out["applied"]["deleted"] == 2
+
+
+def test_v1_error_envelopes(served):
+    _, base = served
+    # bad_request: missing sql
+    code, out = _raw(base, "POST", "/v1/query", {})
+    assert code == 400
+    check_schema(out, ERROR_SCHEMA)
+    assert out["error"]["code"] == "bad_request"
+    # bad_request: SQL syntax error
+    code, out = _raw(base, "POST", "/v1/query", {"sql": "SELEC nope"})
+    assert code == 400
+    check_schema(out, ERROR_SCHEMA)
+    assert out["error"]["code"] == "bad_request"
+    # bad_cursor
+    code, out = _raw(base, "POST", "/v1/page", {"cursor": "c1.@@@"})
+    assert code == 400
+    check_schema(out, ERROR_SCHEMA)
+    assert out["error"]["code"] == "bad_cursor"
+    # not_found: unknown session (bare sid accepted, then 404)
+    code, out = _raw(base, "POST", "/v1/page", {"cursor": "never-created"})
+    assert code == 404
+    check_schema(out, ERROR_SCHEMA)
+    assert out["error"]["code"] == "not_found"
+    # not_found: unknown route
+    code, out = _raw(base, "POST", "/v1/nope", {})
+    assert code == 404
+    check_schema(out, ERROR_SCHEMA)
+
+
+def test_v1_session_drop(served):
+    _, base = served
+    _, out = _raw(base, "POST", "/v1/query",
+                  {"sql": TOPK_SQL, "session": True, "page_size": 2})
+    code, dropped = _raw(base, "POST", "/v1/session/drop",
+                         {"cursor": out["cursor"]})
+    assert code == 200 and dropped == {"dropped": True}
+    code, dropped = _raw(base, "POST", "/v1/session/drop",
+                         {"cursor": out["cursor"]})
+    assert dropped == {"dropped": False}     # idempotent, not an error
+
+
+def test_v1_observability_routes(served):
+    _, base = served
+    assert _raw(base, "GET", "/v1/healthz")[1] == {"ok": True}
+    code, stats = _raw(base, "GET", "/v1/stats")
+    assert code == 200 and "epoch" in stats
+    code, out = _raw(base, "POST", "/v1/query",
+                     {"sql": "EXPLAIN ANALYZE " + TOPK_SQL})
+    assert code == 200 and out.get("explain")
+    code, trace = _raw(base, "GET", "/v1/trace/last")
+    assert code == 200 and trace.get("name") == "query"
+
+
+# -- legacy shim equivalence ------------------------------------------------
+
+def test_legacy_routes_byte_identical_to_history(served):
+    """The unversioned routes keep serving the historical payload shapes:
+    every field the pre-/v1 server returned, with the same values (modulo
+    per-query stats/ids), and none of the /v1 envelope keys."""
+    _, base = served
+    code, legacy = _raw(base, "POST", "/query", {"sql": TOPK_SQL})
+    assert code == 200
+    for key in ("kind", "ids", "scores", "stats", "cache_hit"):
+        assert key in legacy
+    assert "items" not in legacy and "applied" not in legacy
+
+    code, legacy = _raw(base, "POST", "/query",
+                        {"sql": TOPK_SQL, "session": True, "page_size": 3})
+    assert code == 200
+    for key in ("session", "page", "served", "exhausted"):
+        assert key in legacy
+    assert "cursor" not in legacy
+    sid = legacy["session"]
+    assert not sid.startswith("c1.")         # legacy route: bare sid
+    code, page = _raw(base, "GET", f"/session/{sid}/page?k=3")
+    assert code == 200 and page["page"]["offset"] == 3
+
+    # /v1 serves the same content, reshaped
+    code, v1 = _raw(base, "POST", "/v1/query",
+                    {"sql": TOPK_SQL, "session": True, "page_size": 3})
+    assert [it["id"] for it in v1["items"]] == legacy["page"]["ids"]
+    assert [it["score"] for it in v1["items"]] == legacy["page"]["scores"]
+
+    size = 32
+    masks = [[[0.25] * size] * size]
+    code, legacy = _raw(base, "POST", "/ingest",
+                        {"masks": masks, "mask_ids": [7100],
+                         "image_ids": [7100]})
+    assert code == 200
+    for key in ("epoch", "appended", "updated", "n_masks"):
+        assert key in legacy
+    assert "applied" not in legacy           # flat historical counters
+    code, legacy = _raw(base, "POST", "/delete", {"mask_ids": [7100]})
+    assert code == 200 and "deleted" in legacy and "applied" not in legacy
+
+    # legacy errors keep the flat {"error": "<str>"} body
+    code, err = _raw(base, "POST", "/query", {})
+    assert code == 400 and isinstance(err["error"], str)
+
+
+def test_client_speaks_v1_but_returns_legacy_shapes(served):
+    _, base = served
+    c = ServiceClient(base)
+    r = c.query(TOPK_SQL, session=True, page_size=2)
+    assert r["session"].startswith("c1.")    # cursor rides the session field
+    r2 = c.next_page(r["session"])
+    assert r2["page"]["offset"] == 2
+    assert c.drop_session(r2["session"] or r["session"])["dropped"]
+    with pytest.raises(ServiceError) as err:
+        c.query("SELEC nope")
+    assert err.value.code == 400             # int HTTP status (historical)
+    assert err.value.error_code == "bad_request"
+    assert err.value.error_type
+
+
+# -- the _guard KeyError regression ----------------------------------------
+
+def test_genuine_keyerror_is_500_not_404(served):
+    """A bare KeyError escaping a handler is a server fault → 500 with an
+    ``internal`` envelope; only NotFoundError maps to 404."""
+    service, base = served
+    original = service.next_page
+
+    def boom(*a, **kw):
+        raise KeyError("some internal dict key")
+    service.next_page = boom
+    try:
+        code, out = _raw(base, "POST", "/v1/page",
+                         {"cursor": "whatever-sid"})
+        assert code == 500
+        check_schema(out, ERROR_SCHEMA)
+        assert out["error"]["code"] == "internal"
+        assert out["error"]["type"] == "KeyError"
+        # legacy route: same status, flat error body
+        code, out = _raw(base, "GET", "/session/whatever-sid/page")
+        assert code == 500 and isinstance(out["error"], str)
+    finally:
+        service.next_page = original
+
+
+def test_notfounderror_maps_to_404():
+    status, env, retry = error_envelope(NotFoundError("nope"))
+    assert (status, env["error"]["code"]) == (404, "not_found")
+    assert str(NotFoundError("bare message")) == "bare message"
+    status, env, _ = error_envelope(KeyError("k"))
+    assert (status, env["error"]["code"]) == (500, "internal")

@@ -136,6 +136,118 @@ def test_http_stress_under_lock_check(lock_checked):
     assert any("service" in k for k in edges), edges
 
 
+def test_async_tier_stress_under_lock_check(lock_checked):
+    """The async tier under concurrent multi-tenant load with the
+    instrumented locks on: mixed queries, sessions, mutations, pages,
+    scrapes.  Every response must be a handled status — 200, 404/409
+    (expected session faults), or a *clean* 429 shed carrying the /v1
+    envelope with retry_after.  A 500 is a race escaping a handler."""
+    from repro.service import MaskSearchService
+    from repro.service.asyncserver import serve_in_thread
+    from repro.service.server import _synthetic_store
+    store, rois = _synthetic_store(80, 32)
+    service = MaskSearchService(store, provided_rois=rois)
+    handle = serve_in_thread(service, tenant_rate=50.0, tenant_burst=20,
+                             queue_depth=64, batch_max=16)
+    base = handle.base_url
+    size = store.cfg.height
+    codes: list[tuple[str, int]] = []
+    codes_lock = threading.Lock()
+    shed_envelopes: list[dict] = []
+
+    def note(tag, code):
+        with codes_lock:
+            codes.append((tag, code))
+
+    def call(tag, method, path, body=None, tenant="default"):
+        data = json.dumps(body).encode() if body is not None else None
+        headers = {"Content-Type": "application/json"} if data else {}
+        headers["X-Tenant"] = tenant
+        req = urllib.request.Request(base + path, data=data, method=method,
+                                     headers=headers)
+        try:
+            with urllib.request.urlopen(req, timeout=30) as resp:
+                note(tag, resp.status)
+                return json.loads(resp.read())
+        except urllib.error.HTTPError as e:
+            note(tag, e.code)
+            if e.code == 429:
+                env = json.loads(e.read())
+                with codes_lock:
+                    shed_envelopes.append(env)
+            return None
+
+    def query_loop(tenant):
+        for i in range(8):
+            call("query", "POST", "/v1/query",
+                 {"sql": TOPK_SQL if i % 2 else FILTER_SQL}, tenant=tenant)
+
+    def session_loop(tenant):
+        for _ in range(3):
+            out = call("session", "POST", "/v1/query",
+                       {"sql": TOPK_SQL, "session": True, "page_size": 2},
+                       tenant=tenant)
+            if out and out.get("cursor"):
+                call("page", "POST", "/v1/page", {"cursor": out["cursor"]},
+                     tenant=tenant)
+
+    def ingest_loop():
+        rng = np.random.default_rng(11)
+        for i in range(5):
+            call("ingest", "POST", "/v1/ingest",
+                 {"masks": rng.random((2, size, size), np.float32).tolist(),
+                  "mask_ids": [20_000 + 2 * i, 20_001 + 2 * i]},
+                 tenant="writer")
+
+    def delete_loop():
+        for i in range(4):
+            call("delete", "POST", "/v1/delete", {"mask_ids": [i]},
+                 tenant="writer")
+
+    def greedy_loop():
+        # hammers one tenant far past its bucket to force clean sheds
+        for _ in range(60):
+            call("greedy", "POST", "/v1/query", {"sql": TOPK_SQL},
+                 tenant="greedy")
+
+    def metrics_loop():
+        for _ in range(10):
+            call("metrics", "GET", "/v1/healthz")
+
+    threads = ([threading.Thread(target=query_loop, args=(f"t{i}",))
+                for i in range(4)]
+               + [threading.Thread(target=session_loop, args=(f"t{i}",))
+                  for i in range(2)]
+               + [threading.Thread(target=ingest_loop),
+                  threading.Thread(target=delete_loop),
+                  threading.Thread(target=greedy_loop),
+                  threading.Thread(target=metrics_loop)])
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120)
+        assert not t.is_alive(), "async stress worker hung"
+    handle.stop()
+    service.close()
+
+    bad = [(tag, c) for tag, c in codes if c not in (200, 404, 409, 429)]
+    assert not bad, f"unhandled responses under async stress: {bad}"
+    assert sum(1 for tag, c in codes if tag == "query" and c == 200) > 0
+    assert sum(1 for tag, c in codes if tag == "ingest" and c == 200) > 0
+    # the greedy tenant was shed with well-formed /v1 envelopes...
+    assert shed_envelopes, "greedy tenant was never rate-limited"
+    for env in shed_envelopes:
+        err = env["error"]
+        assert err["code"] in ("rate_limited", "overloaded")
+        assert err["retry_after"] > 0
+    # ...while polite tenants kept a healthy success rate (fair isolation)
+    polite_ok = sum(1 for tag, c in codes if tag == "query" and c == 200)
+    assert polite_ok >= 16, f"polite tenants starved: {polite_ok}"
+    # the instrumented locks saw the executor pool's contention, acyclic
+    edges = lockcheck.order_edges()
+    assert any("service" in k for k in edges), edges
+
+
 def test_lock_check_detects_injected_unlocked_write(lock_checked):
     """ISSUE 7 acceptance: a deliberately-injected unlocked write to the
     service's shared counter dict raises LockCheckError."""
